@@ -1,0 +1,127 @@
+"""Shared benchmark harness: synthetic corpus + trained model variants
+(Auto = causal-trained, Mask = MedVerse-attention-trained), cached on
+disk so every table/figure benchmark reuses the same artifacts."""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import pickle
+import re
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.data import Corpus, Tokenizer, encode_example
+from repro.engine import EngineConfig, MedVerseEngine, SerialEngine
+from repro.models import init_params
+from repro.models.config import ATTN, ModelConfig
+from repro.train import TrainConfig, train_model
+
+CACHE = os.path.join(os.path.dirname(__file__), "..", "results", "cache")
+
+
+def bench_model_config(vocab_size: int, name: str = "bench") -> ModelConfig:
+    return ModelConfig(
+        name=name,
+        arch_type="dense",
+        vocab_size=vocab_size,
+        d_model=192,
+        n_layers=4,
+        n_heads=4,
+        n_kv_heads=2,
+        d_ff=512,
+        head_dim=48,
+        pattern_unit=(ATTN,),
+        rope_theta=10_000.0,
+        dtype="float32",
+        scan_layers=False,
+        remat=False,
+        max_seq_len=1024,
+    )
+
+
+@dataclasses.dataclass
+class Artifacts:
+    corpus: Corpus
+    cfg: ModelConfig
+    params_mask: dict
+    params_auto: dict
+    history_mask: list
+    history_auto: list
+
+
+def _cache_path(tag: str) -> str:
+    os.makedirs(CACHE, exist_ok=True)
+    return os.path.join(CACHE, tag + ".pkl")
+
+
+def get_artifacts(n_items: int = 400, epochs: int = 4,
+                  seed: int = 0, tag: str = "default",
+                  force: bool = False) -> Artifacts:
+    path = _cache_path(f"artifacts_{tag}")
+    if os.path.exists(path) and not force:
+        with open(path, "rb") as f:
+            return pickle.load(f)
+    corpus = Corpus.build(n_items=n_items, n_clusters=48, seed=seed)
+    cfg = bench_model_config(corpus.tokenizer.vocab_size + 64)
+    t0 = time.time()
+    params_mask, hist_m = train_model(
+        cfg, corpus, TrainConfig(epochs=epochs, batch_size=8, seq_len=256,
+                                 causal=False, seed=seed))
+    params_auto, hist_a = train_model(
+        cfg, corpus, TrainConfig(epochs=epochs, batch_size=8, seq_len=256,
+                                 causal=True, seed=seed))
+    print(f"# trained mask+auto variants in {time.time()-t0:.0f}s "
+          f"(final ce mask={hist_m[-1]['ce']:.3f} auto={hist_a[-1]['ce']:.3f})")
+    art = Artifacts(corpus=corpus, cfg=cfg, params_mask=params_mask,
+                    params_auto=params_auto, history_mask=hist_m,
+                    history_auto=hist_a)
+    with open(path, "wb") as f:
+        pickle.dump(art, f)
+    return art
+
+
+def eval_prompts(corpus: Corpus, n: Optional[int] = None):
+    """(prompt, gold_letter, plan_text, topology) per eval example."""
+    out = []
+    for ex in corpus.eval[: n or len(corpus.eval)]:
+        opts = " ".join(f"{l} ) {o}" for l, o in zip("abcd", ex.options))
+        prompt = f"{ex.question} Options : {opts}"
+        think_plan = ex.prefix_text[len(prompt):].strip()
+        out.append((prompt, ex.answer_letter, think_plan, ex.topology))
+    return out
+
+
+_ANSWER_RE = re.compile(r"Answer\s*:\s*([a-d])\s*\)")
+
+
+def extract_answer(text: str) -> Optional[str]:
+    m = _ANSWER_RE.search(text)
+    return m.group(1) if m else None
+
+
+def accuracy(results, golds) -> float:
+    ok = 0
+    for r, g in zip(results, golds):
+        a = extract_answer(r.text)
+        ok += int(a == g)
+    return ok / max(len(golds), 1)
+
+
+def default_engine_cfg(**kw) -> EngineConfig:
+    base = dict(max_slots=8, page_size=16, n_pages=8192,
+                max_chain_len=512, max_plan_tokens=200,
+                max_step_tokens=24, max_conclusion_tokens=32,
+                max_serial_tokens=256)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    """CSV line per the harness contract: name,us_per_call,derived."""
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,63 @@
+"""Figure 4b: iso-length throughput vs sequence length (batch 1).
+
+Paper: serial AR throughput stays flat (~10 tok/s on H200) while
+MedVerse's parallel decode converts idle compute into token throughput,
+widening with length (+69.3% at 2048). We reproduce the *shape* of the
+curve on CPU: tokens/sec for generating N tokens as (a) one serial
+stream vs (b) W parallel frontier streams of N/W tokens each (the
+engine's fork path), N swept over lengths.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from .common import default_engine_cfg, emit, get_artifacts
+from repro.core.plan import OutlineStep, ReasoningPlan
+from repro.engine import MedVerseEngine, SerialEngine
+
+
+def synth_plan(width: int) -> str:
+    steps = tuple(
+        OutlineStep(index=i + 1, label=f"q -> Outcome-{i:02d}",
+                    dependencies=())
+        for i in range(width)
+    )
+    return ("<Think> parallel probe </Think> "
+            + ReasoningPlan(steps=steps).serialize())
+
+
+def run(art=None, lengths=(64, 128, 256, 512), width: int = 8):
+    art = art or get_artifacts()
+    tok = art.corpus.tokenizer
+    prompt = "A patient has Thyrotoxicosis . Options : a ) Potassium-iodide"
+    rows = []
+    for n in lengths:
+        per_step = max(n // width, 4)
+        ecfg = default_engine_cfg(
+            plan_override=synth_plan(width), max_slots=width,
+            max_step_tokens=per_step, max_conclusion_tokens=4,
+            max_chain_len=2 * n + 256, n_pages=16384)
+        eng = MedVerseEngine(art.params_mask, art.cfg, tok, ecfg)
+        t0 = time.monotonic()
+        r = eng.generate([prompt])[0]
+        par_dt = time.monotonic() - t0
+        par_tput = r.n_tokens / par_dt
+        ser = SerialEngine(art.params_auto, art.cfg, tok,
+                           default_engine_cfg(max_chain_len=2 * n + 256))
+        t0 = time.monotonic()
+        s = ser.generate([prompt], max_tokens=r.n_tokens)[0]
+        ser_dt = time.monotonic() - t0
+        ser_tput = s.n_tokens / ser_dt
+        gain = (par_tput / ser_tput - 1) * 100
+        rows.append((n, ser_tput, par_tput, gain))
+        emit(f"fig4b_throughput_len{n}", par_dt / max(r.n_tokens, 1) * 1e6,
+             f"par_tok_s={par_tput:.1f};ser_tok_s={ser_tput:.1f};"
+             f"gain={gain:+.1f}%")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

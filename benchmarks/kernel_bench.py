@@ -1,0 +1,56 @@
+"""Microbenchmarks: Pallas kernels (interpret mode on CPU — structural
+check + relative cost only; real perf numbers require a TPU) and the
+pure-JAX reference paths that dominate the dry-run roofline."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import emit
+from repro.kernels.dag_attention.ref import dag_attention_ref
+from repro.core import ReasoningDAG, topology_from_dag
+
+
+def _time(f, *args, n=3):
+    f(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(f(*args))
+    return (time.perf_counter() - t0) / n
+
+
+def run():
+    b, s, nh, nkv, hd = 1, 256, 4, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, nh, s, hd))
+    k = jax.random.normal(ks[1], (b, nkv, s, hd))
+    v = jax.random.normal(ks[2], (b, nkv, s, hd))
+    dag = ReasoningDAG.from_deps({0: [], 1: [], 2: [0, 1]})
+    topo, _ = topology_from_dag(dag, 64, {0: 64, 1: 64, 2: 32}, 32)
+    topo = topo.pad_to(s)
+    seg = jnp.asarray(topo.seg_id)[None]
+    lay = jnp.asarray(topo.layer_id)[None]
+    pos = jnp.asarray(topo.pos_id)[None]
+
+    ref = jax.jit(lambda *a: dag_attention_ref(*a))
+    dt = _time(ref, q, k, v, seg, lay, pos)
+    flops = 4 * b * nh * s * s * hd
+    emit("kernel_dag_attention_ref_jit", dt * 1e6,
+         f"gflops_s={flops/dt/1e9:.1f};shape=b{b}s{s}h{nh}d{hd}")
+
+    from repro.models.rglru import rglru_scan_ref
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (2, 512, 256)))
+    bb = jax.random.normal(ks[1], (2, 512, 256))
+    scan = jax.jit(lambda a, b: rglru_scan_ref(a, b))
+    dt = _time(scan, a, bb)
+    emit("kernel_rglru_assoc_scan_jit", dt * 1e6,
+         f"elems_s={a.size/dt/1e6:.1f}M")
+    return True
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,101 @@
+"""Roofline aggregation: reads results/dryrun/*.json (written by
+repro.launch.dryrun) and renders the §Roofline table — three terms per
+(arch x shape), dominant bottleneck, MODEL_FLOPS / HLO_FLOPs ratio, and
+a one-line "what moves the dominant term" note."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+NOTES = {
+    ("compute", "train"): "more chips / lower precision matmuls",
+    ("compute", "decode"): "batch more streams per chip",
+    ("memory", "train"): "flash/chunked attention + fewer remat passes",
+    ("memory", "prefill"): "flash/chunked attention (O(S) not O(S^2) traffic)",
+    ("memory", "decode"): "KV-cache dtype (bf16->int8) or MQA/MLA compression",
+    ("collective", "train"): "shard FSDP gather over pod-local links; overlap",
+    ("collective", "decode"): "replicate small params instead of TP gathers",
+}
+
+
+def load(mesh: str = "16_16", unrolled: bool = True) -> List[Dict]:
+    rows = []
+    suffix = "__unrolled" if unrolled else ""
+    for fn in sorted(glob.glob(os.path.join(RESULTS, f"*__{mesh}{suffix}.json"))):
+        if not unrolled and "__unrolled" in fn:
+            continue
+        with open(fn) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def load_merged(mesh: str = "16_16") -> List[Dict]:
+    """Unrolled (honest-FLOPs) records where available; scanned records
+    otherwise, marked measured='scanned' (cost_analysis counts scan
+    bodies once — the scan-count caveat, EXPERIMENTS.md §Dry-run)."""
+    unrolled = {(r["arch"], r["shape"]): r for r in load(mesh, True)}
+    merged = []
+    for r in load(mesh, False):
+        key = (r["arch"], r["shape"])
+        if key in unrolled:
+            u = unrolled[key]
+            u["measured"] = "unrolled"
+            merged.append(u)
+        else:
+            r["measured"] = "scanned*"
+            merged.append(r)
+    return merged
+
+
+def shape_kind(shape: str) -> str:
+    return {"train_4k": "train", "prefill_32k": "prefill"}.get(shape, "decode")
+
+
+def render(rows: List[Dict]) -> str:
+    hdr = (f"{'arch':<20} {'shape':<12} {'compute_s':>10} {'memory_s':>10} "
+           f"{'coll_s':>10} {'dominant':>10} {'useful':>7} {'meas':>8}  next-step")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        if r.get("status") == "skipped":
+            lines.append(f"{r['arch']:<20} {r['shape']:<12} "
+                         f"{'skipped (DESIGN.md §4)':^40}")
+            continue
+        if r.get("status") != "ok":
+            lines.append(f"{r['arch']:<20} {r['shape']:<12} ERROR")
+            continue
+        rf = r["roofline"]
+        ratio = r.get("useful_flops_ratio")
+        note = NOTES.get((rf["dominant"], shape_kind(r["shape"])), "")
+        lines.append(
+            f"{r['arch']:<20} {r['shape']:<12} {rf['compute_s']:>10.3e} "
+            f"{rf['memory_s']:>10.3e} {rf['collective_s']:>10.3e} "
+            f"{rf['dominant']:>10} "
+            f"{ratio if ratio is None else round(ratio, 3)!s:>7} "
+            f"{r.get('measured', ''):>8}  {note}"
+        )
+    return "\n".join(lines)
+
+
+def run():
+    rows = load_merged()
+    print(render(rows))
+    # CSV emission for the harness contract
+    for r in rows:
+        if r.get("status") != "ok":
+            continue
+        rf = r["roofline"]
+        tot = rf["compute_s"] + rf["memory_s"] + rf["collective_s"]
+        print(f"roofline_{r['arch']}_{r['shape']},{tot*1e6:.1f},"
+              f"dominant={rf['dominant']};compute_s={rf['compute_s']:.3e};"
+              f"memory_s={rf['memory_s']:.3e};"
+              f"collective_s={rf['collective_s']:.3e}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,77 @@
+"""Benchmark runner — one harness per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines. Run as:
+    PYTHONPATH=src python -m benchmarks.run [--only NAME] [--fast]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="run a single benchmark by module name")
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller eval subsets")
+    args = ap.parse_args()
+
+    from . import (
+        fig4a_latency,
+        table1_accuracy,
+        fig4b_throughput,
+        kernel_bench,
+        roofline,
+        table2_cost_decomp,
+        table3_topology,
+        table4_reliability,
+        table5_ablation,
+        table6_data_scale,
+        table8_train_infer,
+    )
+    from .common import get_artifacts
+
+    benches = {
+        "roofline": lambda a: roofline.run(),
+        "kernel_bench": lambda a: kernel_bench.run(),
+        "fig4a_latency": lambda a: fig4a_latency.run(a, n_per_class=2 if args.fast else 4),
+        "fig4b_throughput": lambda a: fig4b_throughput.run(
+            a, lengths=(64, 128) if args.fast else (64, 128, 256, 512)),
+        "table1_accuracy": lambda a: table1_accuracy.run(a, n=12 if args.fast else 24),
+        "table2_cost_decomp": lambda a: table2_cost_decomp.run(a, n=4 if args.fast else 8),
+        "table3_topology": lambda a: table3_topology.run(a, n_per_class=2 if args.fast else 4),
+        "table4_reliability": lambda a: table4_reliability.run(a, n=8 if args.fast else 16),
+        "table5_ablation": lambda a: table5_ablation.run(a, n=6 if args.fast else 12),
+        "table6_data_scale": lambda a: table6_data_scale.run(
+            a, fractions=(0.5, 1.0) if args.fast else (0.25, 0.5, 1.0)),
+        "table8_train_infer": lambda a: table8_train_infer.run(a, n=12 if args.fast else 24),
+    }
+    if args.only:
+        benches = {args.only: benches[args.only]}
+
+    art = None
+    needs_model = set(benches) - {"roofline", "kernel_bench"}
+    if needs_model:
+        art = get_artifacts()
+
+    failures = 0
+    for name, fn in benches.items():
+        print(f"# === {name} ===", flush=True)
+        t0 = time.time()
+        try:
+            fn(art)
+        except Exception as e:
+            failures += 1
+            print(f"{name},0.0,ERROR={type(e).__name__}:{e}")
+            traceback.print_exc()
+        print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""Table 4: clinical reliability — KG-grounded judge (the paper uses a
+GPT-5.2 physician-judge; ours is the knowledge graph itself, which is
+stricter and deterministic).
+
+Metrics per generated reasoning trace:
+  edge_accuracy   % of generated step edges present in the KG
+  logical_jumps   avg count of steps whose claimed edge is NOT in the KG
+  high_risk       % of cases whose final answer is not a valid treatment
+                  for the queried disease (guideline contradiction proxy)
+
+Paper deltas (MedVerse vs serial): edge accuracy +15.4%, jumps -25.5%,
+high-risk errors -50%.
+"""
+
+from __future__ import annotations
+
+import re
+
+from .common import default_engine_cfg, emit, eval_prompts, get_artifacts
+
+_DISEASE_RE = re.compile(r"(?:A patient has|The diagnosis is)\s+([\w\-]+)")
+
+
+def _disease_of(ex):
+    ents = getattr(ex, "question_entities", None)
+    if ents:
+        return ents[0]
+    m = _DISEASE_RE.search(ex.question)
+    return m.group(1) if m else ""
+from repro.data.knowledge_graph import build_kg
+from repro.engine import MedVerseEngine, SerialEngine
+
+_EDGE_RE = re.compile(r"Transient Step \d+\s*:\s*([\w\-, ]+?)->\s*([\w\-]+)")
+
+
+def judge(text: str, kg, disease_hint: str = ""):
+    edges = []
+    for m in _EDGE_RE.finditer(text):
+        tgt = m.group(2).strip()
+        for src in m.group(1).split(","):
+            src = src.strip()
+            if src:
+                edges.append((src, tgt))
+    if not edges:
+        return 0.0, 0.0
+    ok = sum(kg.has_edge(a, b) for a, b in edges)
+    return ok / len(edges), len(edges) - ok
+
+
+def run(art=None, n: int = 16):
+    art = art or get_artifacts()
+    kg = build_kg(48, seed=0)  # same seed as Corpus.build default
+    tok = art.corpus.tokenizer
+    prompts = eval_prompts(art.corpus, n)
+    exs = art.corpus.eval[:n]
+    rows = {}
+    for tag, make in (
+        ("serial", lambda: SerialEngine(art.params_auto, art.cfg, tok,
+                                        default_engine_cfg())),
+        ("medverse", lambda: MedVerseEngine(art.params_mask, art.cfg, tok,
+                                            default_engine_cfg(max_slots=8))),
+    ):
+        eng = make()
+        if tag == "serial":
+            rs = eng.generate([p for p, _, _, _ in prompts], max_tokens=220)
+        else:
+            rs = eng.generate([p for p, _, _, _ in prompts])
+        edge_accs, jumps, risky = [], [], 0
+        for r, ex in zip(rs, exs):
+            ea, j = judge(r.text, kg)
+            edge_accs.append(ea)
+            jumps.append(j)
+            m = re.search(r"Answer\s*:\s*[a-d]\s*\)\s*([\w\-]+)", r.text)
+            ans_entity = m.group(1) if m else None
+            disease = _disease_of(ex)
+            valid = {e.dst for e in kg.out.get(disease, [])
+                     if e.rel == "treated_by"}
+            risky += int(ans_entity is None or ans_entity not in valid)
+        rows[tag] = (sum(edge_accs) / n, sum(jumps) / n, 100 * risky / n)
+        emit(f"table4_{tag}", 0.0,
+             f"edge_acc={rows[tag][0]:.3f};logical_jumps={rows[tag][1]:.2f};"
+             f"high_risk_pct={rows[tag][2]:.1f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

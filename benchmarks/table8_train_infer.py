@@ -1,0 +1,52 @@
+"""Table 8 (and the accuracy core of Table 1): the 2x2 ablation of
+training strategy x inference mode.
+
+  Auto-Ser  causal-trained,   serial decode          (baseline)
+  Auto-Par  causal-trained,   DAG-parallel engine
+  Mask-Ser  MedVerse-trained, serial decode
+  Mask-Par  MedVerse-trained, DAG-parallel engine    (MedVerse)
+
+Paper: 36.9 / 37.9 / 38.6 / 39.3 — Mask-Par best, monotone. We report
+answer accuracy on the held-out synthetic eval set plus plan validity
+for the Par modes (absolute values differ from the paper — synthetic
+teacher; the *ordering* is the claim under validation, DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+from .common import (
+    accuracy,
+    default_engine_cfg,
+    emit,
+    eval_prompts,
+    extract_answer,
+    get_artifacts,
+)
+from repro.engine import MedVerseEngine, SerialEngine
+
+
+def run(art=None, n: int = 24):
+    art = art or get_artifacts()
+    tok = art.corpus.tokenizer
+    prompts = eval_prompts(art.corpus, n)
+    texts = [p for p, _, _, _ in prompts]
+    golds = [g for _, g, _, _ in prompts]
+    results = {}
+    for train_tag, params in (("Auto", art.params_auto),
+                              ("Mask", art.params_mask)):
+        ser = SerialEngine(params, art.cfg, tok, default_engine_cfg())
+        rs = ser.generate(texts, max_tokens=220)
+        results[f"{train_tag}-Ser"] = (accuracy(rs, golds), None)
+        eng = MedVerseEngine(params, art.cfg, tok,
+                             default_engine_cfg(max_slots=8))
+        rp = eng.generate(texts)
+        plan_rate = sum(r.plan_ok for r in rp) / len(rp)
+        results[f"{train_tag}-Par"] = (accuracy(rp, golds), plan_rate)
+    for k, (acc, pr) in results.items():
+        extra = f";plan_ok={pr:.2f}" if pr is not None else ""
+        emit(f"table8_{k}", 0.0, f"acc={acc:.3f}{extra}")
+    return results
+
+
+if __name__ == "__main__":
+    run()

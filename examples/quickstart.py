@@ -1,0 +1,71 @@
+"""Quickstart: the whole MedVerse stack in one minute on CPU.
+
+  1. Build a synthetic medical KG and curate a small structured corpus
+     (MedVerse Curator, 4 phases).
+  2. Fine-tune a tiny decoder with MedVerse attention (DAG mask +
+     adaptive positions).
+  3. Serve a question through the MedVerse Engine: linear planning ->
+     Petri-net frontier execution with Fork/Join -> conclusion.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import time
+
+from repro.data import Corpus
+from repro.engine import EngineConfig, MedVerseEngine, SerialEngine
+from repro.models.config import ATTN, ModelConfig
+from repro.train import TrainConfig, train_model
+
+
+def main():
+    print("== 1. Curating synthetic MedVerse corpus ==")
+    corpus = Corpus.build(n_items=120, n_clusters=24, seed=0)
+    print(f"   {len(corpus.train)} train / {len(corpus.eval)} eval examples,"
+          f" vocab={corpus.tokenizer.vocab_size}")
+
+    print("== 2. Training a tiny MedVerse model (DAG attention) ==")
+    cfg = ModelConfig(
+        name="quickstart", arch_type="dense",
+        vocab_size=corpus.tokenizer.vocab_size + 32,
+        d_model=128, n_layers=2, n_heads=4, n_kv_heads=2, d_ff=256,
+        head_dim=32, pattern_unit=(ATTN,), dtype="float32",
+        scan_layers=False, remat=False, max_seq_len=512,
+    )
+    t0 = time.time()
+    params, hist = train_model(
+        cfg, corpus, TrainConfig(epochs=2, batch_size=8, seq_len=256))
+    print(f"   trained {len(hist)} logged steps in {time.time()-t0:.0f}s; "
+          f"ce {hist[0]['ce']:.2f} -> {hist[-1]['ce']:.2f}")
+
+    print("== 3. Serving through the MedVerse Engine ==")
+    ex = corpus.eval[0]
+    opts = " ".join(f"{l} ) {o}" for l, o in zip("abcd", ex.options))
+    prompt = f"{ex.question} Options : {opts}"
+    plan = ex.prefix_text[len(prompt):].strip()  # inject a curated plan
+    eng = MedVerseEngine(params, cfg, corpus.tokenizer,
+                         EngineConfig(max_slots=8, page_size=8,
+                                      n_pages=2048, max_chain_len=384,
+                                      max_step_tokens=16,
+                                      max_conclusion_tokens=16,
+                                      plan_override=plan))
+    eng.generate([prompt])  # warm the jit caches before timing
+    t0 = time.time()
+    res = eng.generate([prompt])[0]
+    print(f"   topology={res.topology}  steps={len(res.step_texts)}  "
+          f"tokens={res.n_tokens}  critical_path={res.critical_path_tokens}")
+    print(f"   parallel wall: {time.time()-t0:.2f}s "
+          f"(fork/join cost {res.timings['fork_join']*1e3:.1f}ms, "
+          f"scheduling {res.timings['schedule_parse']*1e3:.1f}ms)")
+    ser = SerialEngine(params, cfg, corpus.tokenizer,
+                       EngineConfig(max_slots=8, page_size=8, n_pages=2048,
+                                    max_chain_len=384))
+    ser.generate([prompt], max_tokens=4)  # warm
+    t0 = time.time()
+    ser.generate([prompt], max_tokens=res.n_tokens)
+    print(f"   serial wall (same token count): {time.time()-t0:.2f}s")
+    print("   generated (tail):", res.text[-200:])
+
+
+if __name__ == "__main__":
+    main()

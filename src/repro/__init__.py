@@ -1,0 +1,6 @@
+"""repro — MedVerse (ACL 2026) reproduced as a production-grade JAX
+framework: DAG-structured parallel medical reasoning with a Petri-net
+scheduler, topology-aware attention, and a fork/join serving engine.
+"""
+
+__version__ = "0.1.0"

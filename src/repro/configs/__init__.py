@@ -1,0 +1,13 @@
+from .registry import ARCH_IDS, ASSIGNED_ARCH_IDS, all_configs, get_config
+from .shapes import SHAPES, InputShape, decode_input_specs, train_input_specs
+
+__all__ = [
+    "ARCH_IDS",
+    "ASSIGNED_ARCH_IDS",
+    "all_configs",
+    "get_config",
+    "SHAPES",
+    "InputShape",
+    "decode_input_specs",
+    "train_input_specs",
+]

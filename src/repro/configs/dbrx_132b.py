@@ -1,0 +1,44 @@
+"""dbrx-132b [moe]: 40L d_model=6144 48H (GQA kv=8) d_ff=10752
+vocab=100352, MoE 16 experts top-4, fine-grained [hf:databricks/dbrx-base]."""
+
+import dataclasses
+
+from ..models.config import ATTN, ModelConfig, MoEConfig
+
+FULL = ModelConfig(
+    name="dbrx-132b",
+    arch_type="moe",
+    vocab_size=100352,
+    d_model=6144,
+    n_layers=40,
+    n_heads=48,
+    n_kv_heads=8,
+    d_ff=10752,
+    head_dim=128,
+    pattern_unit=(ATTN,),
+    norm_type="layernorm",       # dbrx uses LayerNorm
+    rope_theta=500_000.0,
+    moe=MoEConfig(
+        n_experts=16,
+        top_k=4,
+        d_ff_expert=10752,
+        router_scoring="softmax",
+    ),
+    dtype="bfloat16",
+)
+
+SMOKE = dataclasses.replace(
+    FULL,
+    name="dbrx-132b-smoke",
+    vocab_size=512,
+    d_model=256,
+    n_layers=2,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=64,
+    d_ff=512,
+    moe=MoEConfig(n_experts=4, top_k=2, d_ff_expert=256,
+                  router_scoring="softmax", capacity_factor=2.0),
+    dtype="float32",
+    remat=False,
+)

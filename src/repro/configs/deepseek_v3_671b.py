@@ -1,0 +1,67 @@
+"""deepseek-v3-671b [moe]: 61L d_model=7168 128H (MLA) d_ff=2048 (expert)
+vocab=129280, MoE 1 shared + 256 routed top-8, MTP [arXiv:2412.19437].
+
+MLA: q_lora 1536 / kv_lora 512 / nope 128 / rope 64 / v 128 per the
+paper. First 3 layers dense (d_ff 18432). Sigmoid router scoring with
+in-group renormalization; we use a standard aux loss in place of the
+paper's bias-based aux-free balancing (recorded deviation, DESIGN.md §6).
+long_500k skipped: full attention (albeit with compressed KV).
+"""
+
+import dataclasses
+
+from ..models.config import ATTN, MLAConfig, ModelConfig, MoEConfig
+
+FULL = ModelConfig(
+    name="deepseek-v3-671b",
+    arch_type="moe",
+    vocab_size=129280,
+    d_model=7168,
+    n_layers=61,
+    n_heads=128,
+    n_kv_heads=128,
+    d_ff=2048,
+    head_dim=128,
+    pattern_unit=(ATTN,),
+    rope_theta=10_000.0,
+    mla=MLAConfig(
+        q_lora_rank=1536,
+        kv_lora_rank=512,
+        qk_nope_head_dim=128,
+        qk_rope_head_dim=64,
+        v_head_dim=128,
+    ),
+    moe=MoEConfig(
+        n_experts=256,
+        top_k=8,
+        d_ff_expert=2048,
+        n_shared_experts=1,
+        d_ff_shared=2048,
+        first_dense_layers=3,
+        d_ff_dense=18432,
+        router_scoring="sigmoid",
+    ),
+    mtp_depth=1,
+    dtype="bfloat16",
+)
+
+SMOKE = dataclasses.replace(
+    FULL,
+    name="deepseek-v3-671b-smoke",
+    vocab_size=512,
+    d_model=256,
+    n_layers=2,
+    n_heads=4,
+    n_kv_heads=4,
+    head_dim=64,
+    d_ff=256,
+    mla=MLAConfig(q_lora_rank=64, kv_lora_rank=32, qk_nope_head_dim=32,
+                  qk_rope_head_dim=16, v_head_dim=32),
+    moe=MoEConfig(n_experts=4, top_k=2, d_ff_expert=128,
+                  n_shared_experts=1, d_ff_shared=128,
+                  first_dense_layers=1, d_ff_dense=512,
+                  router_scoring="sigmoid", capacity_factor=2.0),
+    mtp_depth=1,
+    dtype="float32",
+    remat=False,
+)

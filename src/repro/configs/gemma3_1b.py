@@ -1,0 +1,50 @@
+"""gemma3-1b [dense]: 26L d_model=1152 4H (GQA kv=1) d_ff=6912
+vocab=262144 — 5:1 local:global interleave, 128k context
+[hf:google/gemma-3-1b-pt].
+
+Pattern: (local x5, global) x 4 + (local x2) tail = 26 layers.
+long_500k eligible: 24/26 layers are window-512 sliding attention; the 4
+global layers decode linearly against the long cache.
+"""
+
+import dataclasses
+
+from ..models.config import ATTN, LOCAL_ATTN, ModelConfig
+
+FULL = ModelConfig(
+    name="gemma3-1b",
+    arch_type="dense",
+    vocab_size=262144,
+    d_model=1152,
+    n_layers=26,
+    n_heads=4,
+    n_kv_heads=1,
+    d_ff=6912,
+    head_dim=256,
+    pattern_unit=(LOCAL_ATTN,) * 5 + (ATTN,),
+    tail=(LOCAL_ATTN, LOCAL_ATTN),
+    sliding_window=512,          # gemma3-1b local window
+    qk_norm=True,                # gemma3 uses q/k norm
+    rope_theta=1_000_000.0,
+    tie_embeddings=True,
+    logit_softcap=30.0,
+    long_context_ok=True,
+    dtype="bfloat16",
+)
+
+SMOKE = dataclasses.replace(
+    FULL,
+    name="gemma3-1b-smoke",
+    vocab_size=512,
+    d_model=256,
+    n_layers=2,
+    n_heads=4,
+    n_kv_heads=1,
+    head_dim=64,
+    d_ff=512,
+    pattern_unit=(LOCAL_ATTN, ATTN),
+    tail=(),
+    sliding_window=8,
+    dtype="float32",
+    remat=False,
+)

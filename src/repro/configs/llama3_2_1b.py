@@ -1,0 +1,36 @@
+"""llama3.2-1b [dense]: 16L d_model=2048 32H (GQA kv=8) d_ff=8192
+vocab=128256 — small llama3 [hf:meta-llama/Llama-3.2-1B]."""
+
+import dataclasses
+
+from ..models.config import ATTN, ModelConfig
+
+FULL = ModelConfig(
+    name="llama3.2-1b",
+    arch_type="dense",
+    vocab_size=128256,
+    d_model=2048,
+    n_layers=16,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=8192,
+    head_dim=64,
+    pattern_unit=(ATTN,),
+    rope_theta=500_000.0,
+    tie_embeddings=True,
+    dtype="bfloat16",
+)
+
+SMOKE = dataclasses.replace(
+    FULL,
+    name="llama3.2-1b-smoke",
+    vocab_size=512,
+    d_model=256,
+    n_layers=2,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=64,
+    d_ff=512,
+    dtype="float32",
+    remat=False,
+)

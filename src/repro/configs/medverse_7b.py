@@ -1,0 +1,37 @@
+"""medverse-7b — the paper's own instantiation: Qwen2.5-7B-Instruct
+backbone shape (28L d_model=3584 28H kv=4 d_ff=18944 vocab=152064) with
+MedVerse attention [paper Sec. 5.1; hf:Qwen/Qwen2.5-7B-Instruct]."""
+
+import dataclasses
+
+from ..models.config import ATTN, ModelConfig
+
+FULL = ModelConfig(
+    name="medverse-7b",
+    arch_type="dense",
+    vocab_size=152064,
+    d_model=3584,
+    n_layers=28,
+    n_heads=28,
+    n_kv_heads=4,
+    d_ff=18944,
+    head_dim=128,
+    pattern_unit=(ATTN,),
+    rope_theta=1_000_000.0,
+    medverse_attention=True,
+    dtype="bfloat16",
+)
+
+SMOKE = dataclasses.replace(
+    FULL,
+    name="medverse-7b-smoke",
+    vocab_size=512,
+    d_model=256,
+    n_layers=2,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=64,
+    d_ff=512,
+    dtype="float32",
+    remat=False,
+)

@@ -1,0 +1,44 @@
+"""phi-3-vision-4.2b [vlm]: 32L d_model=3072 32H (kv=32) d_ff=8192
+vocab=32064 — phi3-mini backbone + CLIP frontend STUBBED
+[hf:microsoft/Phi-3-vision-128k-instruct].
+
+The ViT/projector is a stub: ``input_specs`` supplies patch embeddings
+(B, 576, 1024) which a learned projector maps to d_model and interleaves
+as the sequence prefix (image tokens are in-degree-0 source places in
+the Petri net). long_500k skipped: full attention.
+"""
+
+import dataclasses
+
+from ..models.config import ATTN, ModelConfig, VisionConfig
+
+FULL = ModelConfig(
+    name="phi-3-vision-4.2b",
+    arch_type="vlm",
+    vocab_size=32064,
+    d_model=3072,
+    n_layers=32,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=8192,
+    head_dim=96,
+    pattern_unit=(ATTN,),
+    rope_theta=10_000.0,
+    vision=VisionConfig(n_image_tokens=576, embed_dim=1024),
+    dtype="bfloat16",
+)
+
+SMOKE = dataclasses.replace(
+    FULL,
+    name="phi-3-vision-4.2b-smoke",
+    vocab_size=512,
+    d_model=256,
+    n_layers=2,
+    n_heads=4,
+    n_kv_heads=4,
+    head_dim=64,
+    d_ff=512,
+    vision=VisionConfig(n_image_tokens=8, embed_dim=64),
+    dtype="float32",
+    remat=False,
+)

@@ -1,0 +1,36 @@
+"""qwen3-32b [dense]: 64L d_model=5120 64H (GQA kv=8) d_ff=25600
+vocab=151936 — qk_norm, GQA [hf:Qwen/Qwen3-8B family]."""
+
+import dataclasses
+
+from ..models.config import ATTN, ModelConfig
+
+FULL = ModelConfig(
+    name="qwen3-32b",
+    arch_type="dense",
+    vocab_size=151936,
+    d_model=5120,
+    n_layers=64,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=25600,
+    head_dim=128,
+    pattern_unit=(ATTN,),
+    qk_norm=True,                # qwen3 per-head RMS q/k norm
+    rope_theta=1_000_000.0,
+    dtype="bfloat16",
+)
+
+SMOKE = dataclasses.replace(
+    FULL,
+    name="qwen3-32b-smoke",
+    vocab_size=512,
+    d_model=256,
+    n_layers=2,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=64,
+    d_ff=512,
+    dtype="float32",
+    remat=False,
+)

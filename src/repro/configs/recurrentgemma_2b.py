@@ -1,0 +1,48 @@
+"""recurrentgemma-2b [hybrid]: 26L d_model=2560 10H (GQA kv=1) d_ff=7680
+vocab=256000 — RG-LRU + local attention, 1 attn : 2 recurrent
+[arXiv:2402.19427].
+
+Pattern: (rglru, rglru, local_attn) x 8 + (rglru, rglru) tail = 26.
+long_500k eligible: recurrent state is O(1); attention is window-2048.
+"""
+
+import dataclasses
+
+from ..models.config import LOCAL_ATTN, RGLRU, ModelConfig, RGLRUConfig
+
+FULL = ModelConfig(
+    name="recurrentgemma-2b",
+    arch_type="hybrid",
+    vocab_size=256000,
+    d_model=2560,
+    n_layers=26,
+    n_heads=10,
+    n_kv_heads=1,
+    d_ff=7680,
+    head_dim=256,
+    pattern_unit=(RGLRU, RGLRU, LOCAL_ATTN),
+    tail=(RGLRU, RGLRU),
+    sliding_window=2048,         # griffin local attention window
+    rglru=RGLRUConfig(lru_width=2560, conv1d_width=4, n_heads=10),
+    tie_embeddings=True,
+    long_context_ok=True,
+    dtype="bfloat16",
+)
+
+SMOKE = dataclasses.replace(
+    FULL,
+    name="recurrentgemma-2b-smoke",
+    vocab_size=512,
+    d_model=256,
+    n_layers=3,
+    n_heads=4,
+    n_kv_heads=1,
+    head_dim=64,
+    d_ff=512,
+    pattern_unit=(RGLRU, RGLRU, LOCAL_ATTN),
+    tail=(),
+    sliding_window=8,
+    rglru=RGLRUConfig(lru_width=256, conv1d_width=4, n_heads=4),
+    dtype="float32",
+    remat=False,
+)

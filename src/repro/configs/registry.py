@@ -1,0 +1,53 @@
+"""Architecture registry: ``get_config(arch_id, smoke=False)``.
+
+Every assigned architecture (plus the paper's own medverse-7b backbone)
+is selectable by id — the ``--arch <id>`` surface of the launcher.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from ..models.config import ModelConfig, validate_config
+from . import (
+    dbrx_132b,
+    deepseek_v3_671b,
+    gemma3_1b,
+    llama3_2_1b,
+    medverse_7b,
+    phi3_vision_4_2b,
+    qwen3_32b,
+    recurrentgemma_2b,
+    rwkv6_3b,
+    starcoder2_3b,
+    whisper_large_v3,
+)
+
+_MODULES = {
+    "starcoder2-3b": starcoder2_3b,
+    "qwen3-32b": qwen3_32b,
+    "gemma3-1b": gemma3_1b,
+    "recurrentgemma-2b": recurrentgemma_2b,
+    "whisper-large-v3": whisper_large_v3,
+    "phi-3-vision-4.2b": phi3_vision_4_2b,
+    "rwkv6-3b": rwkv6_3b,
+    "llama3.2-1b": llama3_2_1b,
+    "dbrx-132b": dbrx_132b,
+    "deepseek-v3-671b": deepseek_v3_671b,
+    "medverse-7b": medverse_7b,
+}
+
+ARCH_IDS: List[str] = list(_MODULES.keys())
+ASSIGNED_ARCH_IDS: List[str] = [a for a in ARCH_IDS if a != "medverse-7b"]
+
+
+def get_config(arch_id: str, smoke: bool = False) -> ModelConfig:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch '{arch_id}'; known: {ARCH_IDS}")
+    cfg = _MODULES[arch_id].SMOKE if smoke else _MODULES[arch_id].FULL
+    validate_config(cfg)
+    return cfg
+
+
+def all_configs(smoke: bool = False) -> Dict[str, ModelConfig]:
+    return {a: get_config(a, smoke) for a in ARCH_IDS}

@@ -1,0 +1,44 @@
+"""rwkv6-3b [ssm]: 32L d_model=2560 (attention-free) d_ff=8960
+vocab=65536 — Finch, data-dependent decay [arXiv:2404.05892].
+
+Attention-free: the MedVerse attention mask is inapplicable (DESIGN.md
+§4); the engine-level fork/join (state copy / re-scan) still applies.
+long_500k eligible: O(1) recurrent state.
+"""
+
+import dataclasses
+
+from ..models.config import RWKV6, ModelConfig, RWKV6Config
+
+FULL = ModelConfig(
+    name="rwkv6-3b",
+    arch_type="ssm",
+    vocab_size=65536,
+    d_model=2560,
+    n_layers=32,
+    n_heads=40,                  # d_model / head_dim bookkeeping
+    n_kv_heads=40,
+    d_ff=8960,
+    head_dim=64,
+    pattern_unit=(RWKV6,),
+    pos_embedding="none",        # rwkv has no positional embedding
+    rwkv=RWKV6Config(head_dim=64, decay_lora=64, mix_lora=32),
+    medverse_attention=False,    # engine-level parallelism only
+    long_context_ok=True,
+    dtype="bfloat16",
+)
+
+SMOKE = dataclasses.replace(
+    FULL,
+    name="rwkv6-3b-smoke",
+    vocab_size=512,
+    d_model=256,
+    n_layers=2,
+    n_heads=4,
+    n_kv_heads=4,
+    head_dim=64,
+    d_ff=512,
+    rwkv=RWKV6Config(head_dim=64, decay_lora=16, mix_lora=8),
+    dtype="float32",
+    remat=False,
+)

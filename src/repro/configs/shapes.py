@@ -1,0 +1,86 @@
+"""Assigned input shapes and ShapeDtypeStruct stand-ins for the dry-run.
+
+Shapes (assigned):
+    train_4k     seq_len=4096    global_batch=256  (training)
+    prefill_32k  seq_len=32768   global_batch=32   (inference-prefill)
+    decode_32k   seq_len=32768   global_batch=128  (inference-decode)
+    long_500k    seq_len=524288  global_batch=1    (long-context-decode)
+
+Decode shapes lower ``serve_step`` (ONE token against a KV cache of
+seq_len), not ``train_step``. ``input_specs`` never allocates — pure
+ShapeDtypeStruct, weak-type-correct and shardable.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def topo_specs(b: int, s: int) -> Dict[str, jax.ShapeDtypeStruct]:
+    return {
+        "seg_id": sds((b, s), jnp.int32),
+        "layer_id": sds((b, s), jnp.int32),
+        "pos_id": sds((b, s), jnp.int32),
+    }
+
+
+def train_input_specs(cfg: ModelConfig, shape: InputShape) -> Dict:
+    b, s = shape.global_batch, shape.seq_len
+    specs = {
+        "tokens": sds((b, s), jnp.int32),
+        "targets": sds((b, s), jnp.int32),
+        "loss_mask": sds((b, s), jnp.float32),
+        **topo_specs(b, s),
+    }
+    if cfg.vision is not None:
+        d = cfg.vision.embed_dim or cfg.d_model
+        specs["image_embeds"] = sds((b, cfg.vision.n_image_tokens, d), cfg.dtype)
+    if cfg.encoder is not None:
+        specs["audio_embeds"] = sds((b, cfg.encoder.n_ctx, cfg.d_model), cfg.dtype)
+    return specs
+
+
+def decode_input_specs(cfg: ModelConfig, shape: InputShape) -> Dict:
+    """serve_step inputs: one new token per stream + stream metadata.
+    The KV cache itself is an explicit (donated) argument built by
+    ``models.init_cache`` as ShapeDtypeStructs in the dry-run."""
+    b = shape.global_batch
+    return {
+        "token_t": sds((b,), jnp.int32),
+        "q_pos": sds((b,), jnp.int32),
+    }
+
+
+def cache_specs(cfg: ModelConfig, shape: InputShape) -> Dict:
+    """ShapeDtypeStruct mirror of models.init_cache (no allocation)."""
+    from ..models.transformer import init_cache
+
+    return jax.eval_shape(
+        lambda: init_cache(cfg, shape.global_batch, shape.seq_len)
+    )

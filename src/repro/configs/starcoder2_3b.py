@@ -1,0 +1,37 @@
+"""starcoder2-3b [dense]: 30L d_model=3072 24H (GQA kv=2) d_ff=12288
+vocab=49152 — GQA, RoPE [arXiv:2402.19173]."""
+
+import dataclasses
+
+from ..models.config import ATTN, ModelConfig
+
+FULL = ModelConfig(
+    name="starcoder2-3b",
+    arch_type="dense",
+    vocab_size=49152,
+    d_model=3072,
+    n_layers=30,
+    n_heads=24,
+    n_kv_heads=2,
+    d_ff=12288,
+    head_dim=128,
+    pattern_unit=(ATTN,),
+    mlp_activation="gelu",       # starcoder2 uses gelu MLP
+    norm_type="layernorm",       # and LayerNorm
+    rope_theta=999_999.0,        # arXiv:2402.19173 rope base
+    dtype="bfloat16",
+)
+
+SMOKE = dataclasses.replace(
+    FULL,
+    name="starcoder2-3b-smoke",
+    vocab_size=512,
+    d_model=256,
+    n_layers=2,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=64,
+    d_ff=512,
+    dtype="float32",
+    remat=False,
+)

@@ -1,0 +1,79 @@
+"""MedVerse core: DAG + Petri-net execution model, plan format, topology
+metadata, and DAG attention mask construction (the paper's primary
+contribution, Secs. 3-4.2)."""
+
+from .dag import CycleError, ReasoningDAG, merge_paths_to_dag
+from .masks import (
+    NEG_INF,
+    ancestor_attention_allowed,
+    dag_attention_allowed,
+    decode_visibility,
+    mask_bias,
+    sliding_window_allowed,
+)
+from .petri import (
+    ColoredToken,
+    FiredTransition,
+    Marking,
+    PetriNet,
+    PetriScheduler,
+    Transition,
+)
+from .plan import (
+    OutlineStep,
+    PlanParseError,
+    ReasoningPlan,
+    parse_answer,
+    parse_conclusion,
+    parse_plan,
+    parse_steps,
+    plan_is_complete,
+    render_conclusion,
+    render_step,
+    render_think,
+)
+from .topology import (
+    PAD_SEG,
+    SegmentSpec,
+    SequenceTopology,
+    build_topology,
+    dag_depth_tokens,
+    linear_topology,
+    topology_from_dag,
+)
+
+__all__ = [
+    "CycleError",
+    "ReasoningDAG",
+    "merge_paths_to_dag",
+    "NEG_INF",
+    "ancestor_attention_allowed",
+    "dag_attention_allowed",
+    "decode_visibility",
+    "mask_bias",
+    "sliding_window_allowed",
+    "ColoredToken",
+    "FiredTransition",
+    "Marking",
+    "PetriNet",
+    "PetriScheduler",
+    "Transition",
+    "OutlineStep",
+    "PlanParseError",
+    "ReasoningPlan",
+    "parse_answer",
+    "parse_conclusion",
+    "parse_plan",
+    "parse_steps",
+    "plan_is_complete",
+    "render_conclusion",
+    "render_step",
+    "render_think",
+    "PAD_SEG",
+    "SegmentSpec",
+    "SequenceTopology",
+    "build_topology",
+    "dag_depth_tokens",
+    "linear_topology",
+    "topology_from_dag",
+]

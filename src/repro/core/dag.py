@@ -1,0 +1,163 @@
+"""DAG representation for medical reasoning topologies.
+
+The paper (Sec. 3.1) models reasoning as a DAG ``G = (V, E)`` with three
+node roles: *source* (in-degree 0, clinical entities grounded in the
+question), *hypothesis* (internal), and *conclusion* (out-degree 0).
+Edges are forward-only reasoning steps.
+
+This module is pure Python (host-side): validity checking, topological
+layering (the "frontier layers" that drive the attention mask), and
+conversion helpers used by both the Curator and the Engine.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, FrozenSet, Iterable, List, Mapping, Sequence, Tuple
+
+
+class CycleError(ValueError):
+    """Raised when a supposed DAG contains a cycle (Curator validity check)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ReasoningDAG:
+    """An immutable reasoning DAG over integer node ids.
+
+    ``deps[v]`` lists the predecessors of node ``v`` (its in-edges). Node
+    ids are arbitrary hashable ints; the Curator uses step indices.
+    """
+
+    nodes: Tuple[int, ...]
+    deps: Mapping[int, Tuple[int, ...]]
+
+    @staticmethod
+    def from_deps(deps: Mapping[int, Sequence[int]]) -> "ReasoningDAG":
+        nodes = tuple(sorted(deps.keys()))
+        norm = {v: tuple(sorted(set(deps[v]))) for v in nodes}
+        for v, ps in norm.items():
+            for p in ps:
+                if p not in norm:
+                    raise ValueError(f"node {v} depends on unknown node {p}")
+                if p == v:
+                    raise CycleError(f"self-loop at node {v}")
+        dag = ReasoningDAG(nodes=nodes, deps=norm)
+        dag.topological_layers()  # raises CycleError if cyclic
+        return dag
+
+    # -- structure queries -------------------------------------------------
+    def predecessors(self, v: int) -> Tuple[int, ...]:
+        return self.deps[v]
+
+    def successors(self, v: int) -> Tuple[int, ...]:
+        return tuple(u for u in self.nodes if v in self.deps[u])
+
+    def sources(self) -> Tuple[int, ...]:
+        return tuple(v for v in self.nodes if not self.deps[v])
+
+    def sinks(self) -> Tuple[int, ...]:
+        succ_any = {p for v in self.nodes for p in self.deps[v]}
+        return tuple(v for v in self.nodes if v not in succ_any)
+
+    def edges(self) -> Tuple[Tuple[int, int], ...]:
+        return tuple((p, v) for v in self.nodes for p in self.deps[v])
+
+    # -- topology ----------------------------------------------------------
+    def topological_layers(self) -> List[List[int]]:
+        """Kahn layering: layer k = nodes whose longest path from a source
+        has length k. This is exactly the paper's "frontier layer"
+        assignment used for the mutual-exclusion mask (Eq. 3) under
+        maximally-parallel scheduling.
+        """
+        depth: Dict[int, int] = {}
+        remaining = set(self.nodes)
+        indeg = {v: len(self.deps[v]) for v in self.nodes}
+        frontier = [v for v in self.nodes if indeg[v] == 0]
+        for v in frontier:
+            depth[v] = 0
+        processed = 0
+        queue = list(frontier)
+        while queue:
+            v = queue.pop()
+            processed += 1
+            remaining.discard(v)
+            for u in self.successors(v):
+                depth[u] = max(depth.get(u, 0), depth[v] + 1)
+                indeg[u] -= 1
+                if indeg[u] == 0:
+                    queue.append(u)
+        if processed != len(self.nodes):
+            raise CycleError(f"cycle among nodes {sorted(remaining)}")
+        n_layers = max(depth.values(), default=-1) + 1
+        layers: List[List[int]] = [[] for _ in range(n_layers)]
+        for v, d in depth.items():
+            layers[d].append(v)
+        return [sorted(layer) for layer in layers]
+
+    def depth(self) -> int:
+        """Topological depth D — the paper's O(D) latency bound."""
+        return len(self.topological_layers())
+
+    def ancestors(self, v: int) -> FrozenSet[int]:
+        seen: set = set()
+        stack = list(self.deps[v])
+        while stack:
+            p = stack.pop()
+            if p in seen:
+                continue
+            seen.add(p)
+            stack.extend(self.deps[p])
+        return frozenset(seen)
+
+    def is_linear_chain(self) -> bool:
+        return all(len(layer) == 1 for layer in self.topological_layers())
+
+    def classify_topology(self) -> str:
+        """Paper Table 3 taxonomy: linear / independent-chains / intersecting."""
+        if self.is_linear_chain():
+            return "single_linear_chain"
+        # Intersecting: any transition that merges evidence (in-degree > 1)
+        # or feeds multiple downstream steps (out-degree > 1). Chains that
+        # only converge at the *conclusion stage* (outside the DAG) remain
+        # "independent" — paper Table 3 taxonomy.
+        has_join = any(len(self.deps[v]) > 1 for v in self.nodes)
+        has_fork = any(len(self.successors(v)) > 1 for v in self.nodes)
+        if has_join or has_fork:
+            return "complex_intersecting"
+        return "multiple_independent_chains"
+
+
+def merge_paths_to_dag(paths: Iterable[Sequence[str]]) -> Tuple[ReasoningDAG, Dict[int, Tuple[str, Tuple[str, ...]]]]:
+    """Consolidate linear entity paths into a transition-level DAG.
+
+    This is the Curator's *Think-then-Map* consolidation (Sec. 3.4 / B
+    Phase 3): each edge ``A -> B`` of each path becomes a candidate
+    transition; edges converging on the same target entity are aggregated
+    into one transition (the paper's many-to-one mapping); a transition
+    depends on every transition that *produces* one of its input entities.
+
+    Returns (dag, meta) where ``meta[node] = (target_entity, source_entities)``.
+    """
+    producers: Dict[str, int] = {}  # entity -> transition id producing it
+    inputs: Dict[int, set] = {}
+    order: List[str] = []  # target entities in first-seen order
+    for path in paths:
+        for a, b in zip(path[:-1], path[1:]):
+            if b not in producers:
+                tid = len(order)
+                producers[b] = tid
+                order.append(b)
+                inputs[tid] = set()
+            inputs[producers[b]].add(a)
+    deps: Dict[int, List[int]] = {}
+    meta: Dict[int, Tuple[str, Tuple[str, ...]]] = {}
+    for tgt, tid in producers.items():
+        srcs = sorted(inputs[tid])
+        deps[tid] = sorted(
+            {producers[s] for s in srcs if s in producers and producers[s] != tid}
+        )
+        meta[tid] = (tgt, tuple(srcs))
+    # Drop dependencies that would create cycles (entity revisits): the
+    # Curator's validity check rejects these paths upstream; here we guard.
+    dag = ReasoningDAG.from_deps(deps)
+    return dag, meta

@@ -1,0 +1,92 @@
+"""DAG attention mask construction (paper Eq. 3) — pure jnp.
+
+Two variants:
+
+* ``dag_attention_allowed`` — the paper-faithful mask: causal in packed
+  order, plus mutual exclusion between different steps in the same
+  frontier layer.
+* ``ancestor_attention_allowed`` — strict variant (beyond-paper
+  "consistency mode"): a token may only attend to segments that are DAG
+  ancestors of its own segment. This exactly matches what the engine's
+  fork/join KV chains expose at inference time; see EXPERIMENTS.md §Perf
+  for the train/inference-consistency ablation.
+
+These are the oracles for the Pallas ``dag_attention`` kernel and the
+mask path used by the pure-JAX model on CPU.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .topology import PAD_SEG
+
+NEG_INF = -1e30  # large-negative instead of -inf: keeps softmax NaN-free
+                 # for rows that are fully masked (padding)
+
+
+def dag_attention_allowed(seg_id: jnp.ndarray, layer_id: jnp.ndarray) -> jnp.ndarray:
+    """Boolean (..., S, S) 'may attend' matrix from per-token metadata.
+
+    allowed[i, j] = (j <= i in packed order)
+                  AND NOT (layer(i) == layer(j) AND seg(i) != seg(j))
+                  AND both i, j are real (non-pad) tokens.
+    """
+    s = seg_id.shape[-1]
+    idx = jnp.arange(s)
+    causal = idx[None, :] <= idx[:, None]                       # (S, S)
+    same_layer = layer_id[..., :, None] == layer_id[..., None, :]
+    same_seg = seg_id[..., :, None] == seg_id[..., None, :]
+    exclusion = same_layer & ~same_seg
+    valid = (seg_id != PAD_SEG)
+    pair_valid = valid[..., :, None] & valid[..., None, :]
+    return causal & ~exclusion & pair_valid
+
+
+def ancestor_attention_allowed(
+    seg_id: jnp.ndarray, seg_visible: jnp.ndarray
+) -> jnp.ndarray:
+    """Strict ancestor mask: allowed[i, j] = visible[seg(i), seg(j)] and
+    causal-within-segment ordering. ``seg_visible`` is (n_seg, n_seg) bool
+    with visible[s, s] True; cross-segment visibility already implies the
+    producing segment completed, so full access is causal by construction.
+    """
+    s = seg_id.shape[-1]
+    idx = jnp.arange(s)
+    causal = idx[None, :] <= idx[:, None]
+    valid = seg_id != PAD_SEG
+    safe_seg = jnp.where(valid, seg_id, 0)
+    vis = seg_visible[safe_seg[..., :, None], safe_seg[..., None, :]]
+    pair_valid = valid[..., :, None] & valid[..., None, :]
+    return causal & vis & pair_valid
+
+
+def mask_bias(allowed: jnp.ndarray, dtype=jnp.float32) -> jnp.ndarray:
+    """Convert a boolean allowed-matrix into an additive attention bias."""
+    return jnp.where(allowed, jnp.array(0.0, dtype), jnp.array(NEG_INF, dtype))
+
+
+def sliding_window_allowed(pos_id: jnp.ndarray, window: int) -> jnp.ndarray:
+    """Sliding-window constraint in *adaptive position* space: token i may
+    attend to j only if pos(i) - pos(j) < window. Composes (AND) with the
+    DAG mask for gemma3/recurrentgemma local layers."""
+    diff = pos_id[..., :, None] - pos_id[..., None, :]
+    return (diff >= 0) & (diff < window)
+
+
+def decode_visibility(
+    kv_seg_id: jnp.ndarray,
+    kv_pos_id: jnp.ndarray,
+    q_seg: jnp.ndarray,
+    q_pos: jnp.ndarray,
+    seg_visible: jnp.ndarray,
+) -> jnp.ndarray:
+    """Per-stream decode mask: a decoding stream (one query token) sees
+    exactly the KV entries of its ancestor segments — the engine's branch
+    chain. Shapes: kv_* (..., S); q_seg/q_pos (...,) scalars per stream.
+    Used by the serve-step reference path and the decode kernel oracle."""
+    valid = kv_seg_id != PAD_SEG
+    safe = jnp.where(valid, kv_seg_id, 0)
+    vis = seg_visible[q_seg[..., None], safe]
+    in_past = kv_pos_id <= q_pos[..., None]
+    return vis & in_past & valid

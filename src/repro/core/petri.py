@@ -1,0 +1,192 @@
+"""Colored Petri Net execution model (paper Sec. 3.2-3.3).
+
+``N = (P, T, F, M0)``: places hold colored tokens ``tau = (h, k)`` where
+``h`` is the textual history of the path and ``k`` the KV-cache reference
+(engine-level handle — page ids / radix node). Transitions are reasoning
+steps; a transition is *enabled* when every input place holds a token and
+every output place is empty (each step fires exactly once).
+
+This module is host-side scheduling logic: it never touches jax. The
+engine binds ``k`` to real KV pages; tests bind it to strings.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, FrozenSet, List, Mapping, Optional, Sequence, Tuple
+
+from .dag import ReasoningDAG
+
+
+@dataclasses.dataclass
+class ColoredToken:
+    """Semantic token tau = (h, k). ``h``: textual history; ``k``: KV ref."""
+
+    history: str
+    kv_ref: object = None
+
+
+@dataclasses.dataclass(frozen=True)
+class Transition:
+    """A reasoning step t with pre-set (input places) and post-set."""
+
+    tid: int
+    label: str
+    pre: Tuple[int, ...]   # input place ids
+    post: Tuple[int, ...]  # output place ids
+
+
+@dataclasses.dataclass
+class PetriNet:
+    """N = (P, T, F, M0) built from a transition-level reasoning DAG.
+
+    Construction maps the DAG as the paper does: each transition t_i gets
+    one *output place* p_i; an edge (t_j -> t_i) in the DAG wires p_j into
+    pre(t_i). DAG source transitions read from a distinguished *context
+    place* p_ctx (id 0) holding the prompt+plan token in M0.
+    """
+
+    places: Tuple[int, ...]
+    transitions: Tuple[Transition, ...]
+    ctx_place: int = 0
+
+    @staticmethod
+    def from_dag(dag: ReasoningDAG, labels: Optional[Mapping[int, str]] = None) -> "PetriNet":
+        labels = labels or {}
+        ctx = 0
+        place_of = {t: t + 1 for t in dag.nodes}  # output place per transition
+        transitions = []
+        for t in dag.nodes:
+            preds = dag.predecessors(t)
+            pre = tuple(place_of[p] for p in preds) if preds else (ctx,)
+            transitions.append(
+                Transition(
+                    tid=t,
+                    label=labels.get(t, f"step_{t}"),
+                    pre=pre,
+                    post=(place_of[t],),
+                )
+            )
+        places = (ctx,) + tuple(place_of[t] for t in dag.nodes)
+        return PetriNet(places=places, transitions=tuple(transitions))
+
+    def transition(self, tid: int) -> Transition:
+        for t in self.transitions:
+            if t.tid == tid:
+                return t
+        raise KeyError(tid)
+
+
+@dataclasses.dataclass
+class Marking:
+    """Current token assignment M_k: place id -> ColoredToken or None."""
+
+    tokens: Dict[int, Optional[ColoredToken]]
+
+    @staticmethod
+    def initial(net: PetriNet, ctx_token: ColoredToken) -> "Marking":
+        toks: Dict[int, Optional[ColoredToken]] = {p: None for p in net.places}
+        toks[net.ctx_place] = ctx_token
+        return Marking(tokens=toks)
+
+    def has(self, place: int) -> bool:
+        return self.tokens.get(place) is not None
+
+    def get(self, place: int) -> ColoredToken:
+        tok = self.tokens[place]
+        assert tok is not None, f"place {place} is empty"
+        return tok
+
+
+@dataclasses.dataclass
+class FiredTransition:
+    """Record of one firing: which transition, its input tokens, mode."""
+
+    transition: Transition
+    inputs: Tuple[ColoredToken, ...]
+    mode: str  # "fork" | "join" | "seq"
+
+
+class PetriScheduler:
+    """Frontier-based scheduler implementing Eq. 1 and the execution loop.
+
+    The scheduler is deliberately deterministic (sorted tids) so that runs
+    are reproducible; the *engine* decides how many of the frontier's
+    transitions actually decode concurrently (continuous batching).
+    """
+
+    def __init__(self, net: PetriNet, ctx_token: ColoredToken):
+        self.net = net
+        self.marking = Marking.initial(net, ctx_token)
+        self._fired: set = set()
+        self.history: List[List[int]] = []  # frontier tids per step k
+
+    # -- Eq. 1: enabled-transition frontier ---------------------------------
+    def frontier(self) -> List[Transition]:
+        out = []
+        for t in sorted(self.net.transitions, key=lambda t: t.tid):
+            if t.tid in self._fired:
+                continue
+            if all(self.marking.has(p) for p in t.pre) and all(
+                not self.marking.has(q) for q in t.post
+            ):
+                out.append(t)
+        return out
+
+    def classify_mode(self, t: Transition, frontier: Optional[Sequence[Transition]] = None) -> str:
+        """Fork if it shares a predecessor place with another transition in
+        the same frontier (common prefix context), Join if it has multiple
+        predecessors, else sequential. ``frontier`` defaults to the current
+        frontier snapshot."""
+        if len(t.pre) > 1:
+            return "join"
+        if frontier is None:
+            frontier = self.frontier()
+        siblings = [
+            u for u in frontier if u.tid != t.tid and set(u.pre) & set(t.pre)
+        ]
+        return "fork" if siblings else "seq"
+
+    def fire(self, t: Transition, output_token: ColoredToken,
+             mode: Optional[str] = None) -> FiredTransition:
+        inputs = tuple(self.marking.get(p) for p in t.pre)
+        if mode is None:
+            mode = self.classify_mode(t)
+        for q in t.post:
+            assert not self.marking.has(q), f"output place {q} occupied"
+            self.marking.tokens[q] = output_token
+        self._fired.add(t.tid)
+        return FiredTransition(transition=t, inputs=inputs, mode=mode)
+
+    def step(self, execute) -> List[FiredTransition]:
+        """One scheduling-execution cycle: fire the whole frontier via
+        ``execute(transition, input_tokens) -> ColoredToken``. Returns the
+        fired records; empty list means the net is exhausted."""
+        front = self.frontier()
+        if not front:
+            return []
+        self.history.append([t.tid for t in front])
+        modes = {t.tid: self.classify_mode(t, front) for t in front}
+        fired = []
+        for t in front:  # engine executes these concurrently; semantics here
+            inputs = tuple(self.marking.get(p) for p in t.pre)
+            out = execute(t, inputs)
+            fired.append(self.fire(t, out, mode=modes[t.tid]))
+        return fired
+
+    def run(self, execute, max_steps: int = 10_000) -> List[List[FiredTransition]]:
+        rounds = []
+        for _ in range(max_steps):
+            fired = self.step(execute)
+            if not fired:
+                break
+            rounds.append(fired)
+        return rounds
+
+    def is_complete(self) -> bool:
+        return len(self._fired) == len(self.net.transitions)
+
+    def frontier_layers(self) -> List[List[int]]:
+        """The realized layering M_0 -> M_1 -> ... (matches
+        ReasoningDAG.topological_layers under max-parallel firing)."""
+        return [list(l) for l in self.history]

@@ -1,0 +1,185 @@
+"""Parser/serializer for the MedVerse structured generation format.
+
+The paper's three-stage flow (Sec. 3.4, Fig. 3):
+
+    <Think> ...linear reasoning paths... </Think>
+    <Plan>
+      <Outline> Transient Step 1: A -> B; Dependency: [] </Outline>
+      <Outline> Transient Step 4: B, C -> D; Dependency: [1, 2] </Outline>
+    </Plan>
+    <Execution>
+      <Step> Transient Step 1: A -> B ...reasoning text... </Step>
+      ...
+    </Execution>
+    <Conclusion> Explanation: ... Answer: x) ... </Conclusion>
+
+The engine pauses at ``</Plan>`` (Phase I -> Phase II trigger), parses the
+outlines into a ReasoningDAG, and instantiates the Petri net. The Curator
+uses the serializer to render training data in exactly this format.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .dag import ReasoningDAG
+
+PLAN_OPEN = "<Plan>"
+PLAN_CLOSE = "</Plan>"
+OUTLINE_RE = re.compile(
+    r"<Outline>\s*Transient Step\s+(\d+)\s*:\s*(.*?)\s*;?\s*"
+    r"Dependency\s*:\s*\[([^\]]*)\]\s*</Outline>",
+    re.DOTALL,
+)
+STEP_OPEN_RE = re.compile(r"<Step>\s*Transient Step\s+(\d+)\s*:", re.DOTALL)
+STEP_RE = re.compile(
+    r"<Step>\s*Transient Step\s+(\d+)\s*:\s*(.*?)</Step>", re.DOTALL
+)
+CONCLUSION_RE = re.compile(r"<Conclusion>(.*?)(?:</Conclusion>|$)", re.DOTALL)
+
+
+class PlanParseError(ValueError):
+    pass
+
+
+@dataclasses.dataclass(frozen=True)
+class OutlineStep:
+    index: int                 # 1-based step index as written
+    label: str                 # "A, B -> C" step description
+    dependencies: Tuple[int, ...]  # 1-based indices of prerequisite steps
+
+
+@dataclasses.dataclass(frozen=True)
+class ReasoningPlan:
+    steps: Tuple[OutlineStep, ...]
+
+    def to_dag(self) -> ReasoningDAG:
+        """0-based transition DAG; raises on unknown deps or cycles —
+        this is the engine's (and Curator's) DAG validity check."""
+        ids = {s.index for s in self.steps}
+        deps = {}
+        for s in self.steps:
+            for d in s.dependencies:
+                if d not in ids:
+                    raise PlanParseError(
+                        f"step {s.index} depends on missing step {d}"
+                    )
+            deps[s.index - 1] = tuple(d - 1 for d in s.dependencies)
+        return ReasoningDAG.from_deps(deps)
+
+    def labels(self) -> Dict[int, str]:
+        return {s.index - 1: s.label for s in self.steps}
+
+    def serialize(self) -> str:
+        # Spaced punctuation keeps the word-level tokenizer's entity
+        # vocabulary clean ("A" vs "A;" would be distinct tokens).
+        parts = [PLAN_OPEN]
+        for s in self.steps:
+            dep = " , ".join(str(d) for d in s.dependencies)
+            dep = f"[ {dep} ]" if dep else "[ ]"
+            parts.append(
+                f"<Outline> Transient Step {s.index}: {s.label} ;"
+                f" Dependency: {dep} </Outline>"
+            )
+        parts.append(PLAN_CLOSE)
+        return " ".join(parts)
+
+
+def parse_plan(text: str, lenient: bool = False) -> ReasoningPlan:
+    """Parse the first <Plan>...</Plan> block out of generated text.
+
+    ``lenient=True`` (engine-side): outlines whose dependency lists
+    reference non-existent steps get those references dropped instead of
+    failing the whole plan — graceful degradation for model-generated
+    plans (cycles are still rejected downstream by ``to_dag``)."""
+    start = text.find(PLAN_OPEN)
+    end = text.find(PLAN_CLOSE)
+    if start < 0 or end < 0 or end < start:
+        raise PlanParseError("no complete <Plan> block found")
+    block = text[start : end + len(PLAN_CLOSE)]
+    steps: List[OutlineStep] = []
+    for m in OUTLINE_RE.finditer(block):
+        idx = int(m.group(1))
+        label = " ".join(m.group(2).split())
+        deps_raw = m.group(3).strip()
+        deps: Tuple[int, ...] = ()
+        if deps_raw:
+            parsed = []
+            for x in deps_raw.split(","):
+                x = x.strip()
+                if not x:
+                    continue
+                try:
+                    parsed.append(int(x))
+                except ValueError:
+                    # model emitted garbage inside the bracket
+                    if lenient:
+                        continue
+                    raise PlanParseError(
+                        f"non-integer dependency {x!r} in step {idx}")
+            deps = tuple(parsed)
+        steps.append(OutlineStep(index=idx, label=label, dependencies=deps))
+    if not steps:
+        raise PlanParseError("plan block contains no <Outline> entries")
+    seen = set()
+    uniq = []
+    for s in steps:
+        if s.index in seen:
+            if lenient:
+                continue
+            raise PlanParseError(f"duplicate step index {s.index}")
+        seen.add(s.index)
+        uniq.append(s)
+    steps = uniq
+    if lenient:
+        ids = {s.index for s in steps}
+        steps = [
+            OutlineStep(
+                index=s.index, label=s.label,
+                dependencies=tuple(d for d in s.dependencies
+                                   if d in ids and d != s.index),
+            )
+            for s in steps
+        ]
+    return ReasoningPlan(steps=tuple(sorted(steps, key=lambda s: s.index)))
+
+
+def plan_is_complete(text: str) -> bool:
+    return PLAN_CLOSE in text
+
+
+def parse_steps(text: str) -> Dict[int, str]:
+    """Extract executed <Step> bodies keyed by 1-based step index."""
+    return {
+        int(m.group(1)): " ".join(m.group(2).split())
+        for m in STEP_RE.finditer(text)
+    }
+
+
+def parse_conclusion(text: str) -> Optional[str]:
+    m = CONCLUSION_RE.search(text)
+    return " ".join(m.group(1).split()) if m else None
+
+
+def parse_answer(text: str) -> Optional[str]:
+    """Pull 'Answer: <option>' from a conclusion block."""
+    conc = parse_conclusion(text)
+    if conc is None:
+        conc = text
+    m = re.search(r"Answer\s*:\s*([^<\n]+)", conc)
+    return m.group(1).strip() if m else None
+
+
+def render_step(index: int, label: str, body: str) -> str:
+    return f"<Step> Transient Step {index}: {label} {body} </Step>"
+
+
+def render_conclusion(explanation: str, answer: str) -> str:
+    return f"<Conclusion> Explanation: {explanation} Answer: {answer} </Conclusion>"
+
+
+def render_think(paths: Sequence[str]) -> str:
+    lines = " ".join(f"{i+1}. {p}" for i, p in enumerate(paths))
+    return f"<Think> Finding Reasoning Path: {lines} </Think>"

@@ -1,0 +1,167 @@
+"""Per-token topology metadata for MedVerse attention.
+
+A structured training example is *packed* linearly as
+
+    [prefix (prompt+think+plan)] [steps, frontier layer by layer] [conclusion]
+
+and annotated with three O(S) int arrays that fully determine the DAG
+attention mask (Eq. 3) and the adaptive position indices (Sec. 4.2):
+
+    seg_id[i]   : which segment token i belongs to
+                  (0 = linear prefix, 1..T = transient steps,
+                   T+1 = conclusion; -1 = padding)
+    layer_id[i] : frontier layer of that segment
+                  (0 = prefix, 1.. = DAG layers, depth+1 = conclusion)
+    pos_id[i]   : adaptive position index. Segments in the same frontier
+                  layer share a start index (*fork alignment*); each layer
+                  starts at the max end-position of all earlier layers
+                  (*join = max over predecessor branches*, synchronized at
+                  the frontier as in Sec. 3.3's execution loop).
+
+Keeping the metadata O(S) instead of materializing the (S,S) mask is what
+lets the Pallas kernel stream it through VMEM (see DESIGN.md §3).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .dag import ReasoningDAG
+
+PAD_SEG = -1
+
+
+@dataclasses.dataclass(frozen=True)
+class SegmentSpec:
+    """One contiguous packed segment."""
+
+    seg_id: int
+    layer_id: int
+    length: int
+
+
+@dataclasses.dataclass
+class SequenceTopology:
+    """Packed per-token metadata for one example."""
+
+    seg_id: np.ndarray    # (S,) int32
+    layer_id: np.ndarray  # (S,) int32
+    pos_id: np.ndarray    # (S,) int32
+    # ancestor matrix over segment ids (incl. prefix=0 and conclusion),
+    # anc[s, t] == True iff tokens of segment s may attend to segment t
+    # under the *strict* ancestor mask (beyond-paper consistency variant).
+    seg_visible: np.ndarray  # (n_seg, n_seg) bool
+
+    @property
+    def length(self) -> int:
+        return int(self.seg_id.shape[0])
+
+    def pad_to(self, seq_len: int) -> "SequenceTopology":
+        s = self.length
+        if s > seq_len:
+            raise ValueError(f"sequence {s} longer than pad target {seq_len}")
+        pad = seq_len - s
+
+        def _pad(a: np.ndarray, fill: int) -> np.ndarray:
+            return np.concatenate([a, np.full((pad,), fill, a.dtype)])
+
+        return SequenceTopology(
+            seg_id=_pad(self.seg_id, PAD_SEG),
+            layer_id=_pad(self.layer_id, -1),
+            pos_id=_pad(self.pos_id, 0),
+            seg_visible=self.seg_visible,
+        )
+
+
+def build_topology(segments: Sequence[SegmentSpec],
+                   visible: Optional[np.ndarray] = None) -> SequenceTopology:
+    """Pack segments (already in linear order) into per-token arrays.
+
+    Adaptive positions: all segments within a frontier layer start at the
+    same index = max end-position over all preceding layers.
+    """
+    seg_ids: List[int] = []
+    layer_ids: List[int] = []
+    pos_ids: List[int] = []
+    layer_start: Dict[int, int] = {}
+    layer_max_end: Dict[int, int] = {}
+    ordered_layers = []
+    for seg in segments:
+        if seg.layer_id not in layer_start:
+            prev_end = 0
+            for l in ordered_layers:
+                prev_end = max(prev_end, layer_max_end[l])
+            layer_start[seg.layer_id] = prev_end
+            layer_max_end[seg.layer_id] = prev_end
+            ordered_layers.append(seg.layer_id)
+        start = layer_start[seg.layer_id]
+        end = start + seg.length
+        layer_max_end[seg.layer_id] = max(layer_max_end[seg.layer_id], end)
+        seg_ids.extend([seg.seg_id] * seg.length)
+        layer_ids.extend([seg.layer_id] * seg.length)
+        pos_ids.extend(range(start, end))
+    n_seg = max((s.seg_id for s in segments), default=0) + 1
+    if visible is None:
+        visible = np.ones((n_seg, n_seg), dtype=bool)
+    return SequenceTopology(
+        seg_id=np.asarray(seg_ids, np.int32),
+        layer_id=np.asarray(layer_ids, np.int32),
+        pos_id=np.asarray(pos_ids, np.int32),
+        seg_visible=visible,
+    )
+
+
+def topology_from_dag(
+    dag: ReasoningDAG,
+    prefix_len: int,
+    step_lens: Dict[int, int],
+    conclusion_len: int,
+) -> Tuple[SequenceTopology, List[int]]:
+    """Build packed topology for a full structured example.
+
+    Packed order: prefix, then steps grouped by frontier layer (tid order
+    inside a layer), then conclusion. Returns the topology plus the packed
+    step order (list of dag node ids) so callers can lay out token spans.
+
+    seg id mapping: prefix=0, dag node t -> seg t+1, conclusion = T+1.
+    """
+    layers = dag.topological_layers()
+    segments: List[SegmentSpec] = [SegmentSpec(0, 0, prefix_len)]
+    packed_order: List[int] = []
+    for li, layer in enumerate(layers):
+        for tid in layer:
+            segments.append(SegmentSpec(tid + 1, li + 1, step_lens[tid]))
+            packed_order.append(tid)
+    n_steps = len(dag.nodes)
+    conc_seg = n_steps + 1
+    segments.append(SegmentSpec(conc_seg, len(layers) + 1, conclusion_len))
+
+    # strict ancestor visibility (prefix visible to all; conclusion sees all)
+    n_seg = n_steps + 2
+    vis = np.zeros((n_seg, n_seg), dtype=bool)
+    vis[:, 0] = True  # everyone sees the prefix
+    for t in dag.nodes:
+        s = t + 1
+        vis[s, s] = True
+        for a in dag.ancestors(t):
+            vis[s, a + 1] = True
+    vis[conc_seg, :] = True
+    vis[0, 0] = True
+    return build_topology(segments, visible=vis), packed_order
+
+
+def linear_topology(length: int) -> SequenceTopology:
+    """Plain causal sequence (baseline AR models / planning phase)."""
+    return build_topology([SegmentSpec(0, 0, length)])
+
+
+def dag_depth_tokens(topo: SequenceTopology) -> int:
+    """Critical-path token count = max adaptive position + 1 (the O(D)
+    latency bound the paper claims; used by benchmarks)."""
+    valid = topo.seg_id != PAD_SEG
+    if not valid.any():
+        return 0
+    return int(topo.pos_id[valid].max()) + 1

@@ -1,0 +1,11 @@
+from .curator import CuratedExample, Curator, CuratorStats
+from .dataset import Corpus, EncodedExample, encode_example, make_batches, pad_example
+from .knowledge_graph import KnowledgeGraph, QAItem, build_kg, generate_qa
+from .tokenizer import EOS, PAD, SPECIALS, Tokenizer
+
+__all__ = [
+    "CuratedExample", "Curator", "CuratorStats",
+    "Corpus", "EncodedExample", "encode_example", "make_batches", "pad_example",
+    "KnowledgeGraph", "QAItem", "build_kg", "generate_qa",
+    "EOS", "PAD", "SPECIALS", "Tokenizer",
+]

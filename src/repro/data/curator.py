@@ -1,0 +1,263 @@
+"""MedVerse Curator: the 4-phase pipeline that turns (question, answer)
+pairs + the knowledge graph into Petri-Net-structured training examples
+(paper Sec. 4.1 + Appendix B/C).
+
+Phase 1 — Knowledge-grounded retrieval: entity mapping + KG path search
+          from question entities to the answer entity.
+Phase 2 — Topological planning: filtering rules (relevance, consistency,
+          dedup, cap 10, text integrity — Appendix C), path editing
+          (bridge insertion), DAG consolidation + validity check
+          (cycles -> reject/re-route).
+Phase 3 — Structural synthesis: <Think>/<Plan> rendering, per-transition
+          step synthesis via the rule-based teacher (relation
+          verbalization), cross-branch refinement (dedup of repeated
+          facts), conclusion synthesis.
+Phase 4 — Dual-layer verification: (a) syntax — the rendered text must
+          reparse into the same DAG with matching step indices;
+          (b) logic — every reasoning edge must exist in the KG and the
+          conclusion must name the gold answer. Failures regenerate.
+
+The "teacher LLM" of the paper is a deterministic rule-based renderer
+here (DESIGN.md §6): structure faithful, prose synthetic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from ..core.dag import CycleError, ReasoningDAG, merge_paths_to_dag
+from ..core.plan import (
+    OutlineStep,
+    ReasoningPlan,
+    parse_answer,
+    parse_plan,
+    parse_steps,
+    render_conclusion,
+    render_step,
+    render_think,
+)
+from .knowledge_graph import VERBALIZE, KnowledgeGraph, QAItem
+
+
+@dataclasses.dataclass
+class CuratedExample:
+    qid: int
+    question: str
+    options: List[str]
+    answer_letter: str
+    answer_text: str
+    prefix_text: str                  # question + options + think + plan
+    step_texts: Dict[int, str]        # 0-based tid -> "<Step> ... </Step>"
+    conclusion_text: str
+    plan: ReasoningPlan
+    dag: ReasoningDAG
+    topology: str
+    question_entities: List[str] = dataclasses.field(default_factory=list)
+
+    def linear_text(self) -> str:
+        """Serialized in packed (frontier-layer) order — what a purely
+        autoregressive baseline trains on."""
+        order = [t for layer in self.dag.topological_layers() for t in layer]
+        return " ".join([self.prefix_text]
+                        + [self.step_texts[t] for t in order]
+                        + [self.conclusion_text])
+
+
+@dataclasses.dataclass
+class CuratorStats:
+    n_items: int = 0
+    n_no_paths: int = 0
+    n_cycle_rejected: int = 0
+    n_syntax_fail: int = 0
+    n_logic_fail: int = 0
+    n_regenerated: int = 0
+    n_ok: int = 0
+
+
+class Curator:
+    def __init__(self, kg: KnowledgeGraph, seed: int = 0,
+                 max_paths: int = 10, max_hops: int = 4):
+        self.kg = kg
+        self.rng = random.Random(seed)
+        self.max_paths = max_paths
+        self.max_hops = max_hops
+        self.stats = CuratorStats()
+
+    # ---------------------------------------------------------- phase 1 ---
+    def retrieve_paths(self, item: QAItem) -> List[List[str]]:
+        paths: List[List[str]] = []
+        for src in item.question_entities:
+            paths.extend(self.kg.paths(src, item.answer_entity,
+                                       self.max_hops))
+        # Some questions reason disease -> treatment -> outcome; also
+        # admit paths THROUGH the answer to outcomes mentioned in text.
+        for e in self.kg.out.get(item.answer_entity, []):
+            for src in item.question_entities:
+                for p in self.kg.paths(src, e.dst, self.max_hops):
+                    if item.answer_entity in p:
+                        paths.append(p)
+        return paths
+
+    # ---------------------------------------------------------- phase 2 ---
+    def filter_paths(self, paths: List[List[str]],
+                     item: QAItem) -> List[List[str]]:
+        """Appendix C filtering rules: relevance (reaches answer entity or
+        its direct effect), dedup (first occurrence), cap at max_paths,
+        original order, no text edits."""
+        seen = set()
+        out: List[List[str]] = []
+        for p in paths:
+            key = tuple(p)
+            if key in seen:
+                continue
+            seen.add(key)
+            if item.answer_entity not in p:
+                continue                    # relevance
+            if len(p) < 2:
+                continue
+            out.append(p)
+            if len(out) == self.max_paths:
+                break
+        return out
+
+    def consolidate(self, paths: List[List[str]]
+                    ) -> Tuple[ReasoningDAG, Dict[int, Tuple[str, Tuple[str, ...]]]]:
+        """Merge paths into a transition DAG; DAG validity check rejects
+        cyclic merges by dropping the newest offending path (re-route)."""
+        work = list(paths)
+        while work:
+            try:
+                return merge_paths_to_dag(work)
+            except CycleError:
+                self.stats.n_cycle_rejected += 1
+                work = work[:-1]
+        raise ValueError("no valid paths")
+
+    # ---------------------------------------------------------- phase 3 ---
+    def _step_body(self, srcs: Sequence[str], tgt: str) -> str:
+        sents = []
+        for s in srcs:
+            rel = self.kg.relation(s, tgt)
+            if rel is None:
+                rel = "suggests"
+            sents.append(VERBALIZE[rel].format(
+                a=s.replace("-", " "), b=tgt.replace("-", " ")))
+        return " ".join(sents)
+
+    def synthesize(self, item: QAItem, dag: ReasoningDAG,
+                   meta: Dict[int, Tuple[str, Tuple[str, ...]]],
+                   paths: List[List[str]]) -> CuratedExample:
+        labels = {}
+        outlines = []
+        for t in sorted(dag.nodes):
+            tgt, srcs = meta[t]
+            label = f"{' , '.join(s for s in srcs)} -> {tgt}"
+            labels[t] = label
+            outlines.append(OutlineStep(
+                index=t + 1, label=label,
+                dependencies=tuple(d + 1 for d in dag.predecessors(t)),
+            ))
+        plan = ReasoningPlan(steps=tuple(outlines))
+        think = render_think([" -> ".join(p) for p in paths])
+        opts = " ".join(f"{l} ) {o}" for l, o in zip("abcd", item.options))
+        prefix = f"{item.question} Options : {opts} {think} {plan.serialize()}"
+
+        # step synthesis + refinement (dedup repeated facts across branches)
+        emitted = set()
+        step_texts: Dict[int, str] = {}
+        for t in sorted(dag.nodes):
+            tgt, srcs = meta[t]
+            body = self._step_body(srcs, tgt)
+            sents = [s for s in body.split(". ") if s]
+            fresh = [s for s in sents if s not in emitted]
+            emitted.update(fresh)
+            body = ". ".join(fresh) if fresh else sents[0]
+            if not body.endswith("."):
+                body += "."
+            step_texts[t] = render_step(t + 1, labels[t], body)
+
+        concl_steps = ", ".join(str(t + 1) for t in dag.sinks())
+        explanation = (
+            f"As established in Transient Steps {concl_steps} , the "
+            f"reasoning converges on {item.answer_entity.replace('-', ' ')} ."
+        )
+        conclusion = render_conclusion(
+            explanation, f"{item.answer_letter} ) {item.answer_text}")
+        return CuratedExample(
+            qid=item.qid, question=item.question, options=item.options,
+            answer_letter=item.answer_letter, answer_text=item.answer_text,
+            prefix_text=prefix, step_texts=step_texts,
+            conclusion_text=conclusion, plan=plan, dag=dag,
+            topology=dag.classify_topology(),
+            question_entities=list(item.question_entities),
+        )
+
+    # ---------------------------------------------------------- phase 4 ---
+    def verify(self, ex: CuratedExample, item: QAItem) -> Tuple[bool, str]:
+        # (a) syntax: reparse and compare structure
+        full = (ex.prefix_text + " "
+                + " ".join(ex.step_texts[t] for t in sorted(ex.step_texts))
+                + " " + ex.conclusion_text)
+        try:
+            plan2 = parse_plan(full)
+            dag2 = plan2.to_dag()
+        except Exception as e:
+            return False, f"syntax: {e}"
+        if dag2.deps != ex.dag.deps:
+            return False, "syntax: reparsed DAG mismatch"
+        steps2 = parse_steps(full)
+        if set(steps2) != {t + 1 for t in ex.dag.nodes}:
+            return False, "syntax: step indices do not match plan"
+        # (b) logic: every edge grounded in the KG; answer correct
+        for step in ex.plan.steps:
+            if "->" not in step.label:
+                return False, "logic: malformed step label"
+            lhs, tgt = step.label.rsplit("->", 1)
+            tgt = tgt.strip()
+            for src in (s.strip() for s in lhs.split(",")):
+                if src and not self.kg.has_edge(src, tgt):
+                    return False, f"logic: edge {src}->{tgt} not in KG"
+        ans = parse_answer(full)
+        if ans is None or item.answer_text not in ans:
+            return False, "logic: conclusion does not state the gold answer"
+        return True, "ok"
+
+    # ------------------------------------------------------------ drive ---
+    def curate(self, item: QAItem, max_retries: int = 2
+               ) -> Optional[CuratedExample]:
+        self.stats.n_items += 1
+        paths = self.filter_paths(self.retrieve_paths(item), item)
+        if not paths:
+            self.stats.n_no_paths += 1
+            return None
+        for attempt in range(max_retries + 1):
+            try:
+                dag, meta = self.consolidate(paths)
+            except ValueError:
+                self.stats.n_no_paths += 1
+                return None
+            ex = self.synthesize(item, dag, meta, paths)
+            ok, why = self.verify(ex, item)
+            if ok:
+                self.stats.n_ok += 1
+                return ex
+            self.stats.n_regenerated += 1
+            if why.startswith("syntax"):
+                self.stats.n_syntax_fail += 1
+            else:
+                self.stats.n_logic_fail += 1
+            # regenerate with fewer paths (re-route)
+            paths = paths[:-1]
+            if not paths:
+                return None
+        return None
+
+    def curate_all(self, items: Sequence[QAItem]) -> List[CuratedExample]:
+        out = []
+        for it in items:
+            ex = self.curate(it)
+            if ex is not None:
+                out.append(ex)
+        return out

@@ -1,0 +1,163 @@
+"""Dataset construction: curated examples -> packed, DAG-masked training
+batches (tokens / targets / loss_mask / seg_id / layer_id / pos_id).
+
+Next-token targets are *segment-local*: the prediction crossing a packed
+segment boundary is masked (the engine force-feeds step headers, and a
+branch's first token has no intra-segment predecessor). Question+options
+tokens are masked; <Think>/<Plan>/steps/conclusion are supervised.
+
+``causal=True`` re-encodes the same text linearly (seg 0 everywhere,
+monotonic positions) — the Auto-Ser / Auto-Par training arms of the
+paper's Table 8 ablation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.topology import PAD_SEG, SequenceTopology, topology_from_dag
+from .curator import CuratedExample
+from .tokenizer import PAD, Tokenizer
+
+
+@dataclasses.dataclass
+class EncodedExample:
+    qid: int
+    tokens: np.ndarray      # (S,)
+    targets: np.ndarray     # (S,)
+    loss_mask: np.ndarray   # (S,) float32
+    seg_id: np.ndarray
+    layer_id: np.ndarray
+    pos_id: np.ndarray
+    seg_visible: np.ndarray
+    answer_letter: str
+    topology: str
+
+    @property
+    def length(self) -> int:
+        return int(self.tokens.shape[0])
+
+
+def encode_example(ex: CuratedExample, tok: Tokenizer,
+                   causal: bool = False) -> EncodedExample:
+    q_opts_len = len(tok.encode(
+        ex.question + " Options : "
+        + " ".join(f"{l} ) {o}" for l, o in zip("abcd", ex.options)),
+        bos=True))
+    prefix_ids = tok.encode(ex.prefix_text, bos=True)
+    step_ids = {t: tok.encode(ex.step_texts[t]) for t in ex.dag.nodes}
+    conc_ids = tok.encode(ex.conclusion_text, eos=True)
+
+    topo, order = topology_from_dag(
+        ex.dag, len(prefix_ids), {t: len(step_ids[t]) for t in ex.dag.nodes},
+        len(conc_ids))
+    tokens = np.concatenate(
+        [np.asarray(prefix_ids, np.int32)]
+        + [np.asarray(step_ids[t], np.int32) for t in order]
+        + [np.asarray(conc_ids, np.int32)])
+    assert tokens.shape[0] == topo.length
+
+    seg = topo.seg_id.copy()
+    lay = topo.layer_id.copy()
+    pos = topo.pos_id.copy()
+    vis = topo.seg_visible
+    if causal:
+        seg = np.zeros_like(seg)
+        lay = np.zeros_like(lay)
+        pos = np.arange(tokens.shape[0], dtype=np.int32)
+        vis = np.ones((1, 1), dtype=bool)
+
+    s = tokens.shape[0]
+    targets = np.full((s,), PAD, np.int32)
+    targets[:-1] = tokens[1:]
+    same_seg = np.zeros((s,), bool)
+    same_seg[:-1] = seg[:-1] == seg[1:] if not causal else True
+    if causal:
+        same_seg[:-1] = True
+        same_seg[-1] = False
+    loss_mask = same_seg.astype(np.float32)
+    loss_mask[:q_opts_len] = 0.0  # don't supervise the question/options
+    return EncodedExample(
+        qid=ex.qid, tokens=tokens, targets=targets, loss_mask=loss_mask,
+        seg_id=seg, layer_id=lay, pos_id=pos, seg_visible=vis,
+        answer_letter=ex.answer_letter, topology=ex.topology,
+    )
+
+
+def pad_example(e: EncodedExample, seq_len: int) -> EncodedExample:
+    s = e.length
+    if s > seq_len:
+        raise ValueError(f"example length {s} > seq_len {seq_len}")
+    pad = seq_len - s
+
+    def p(a, fill):
+        return np.concatenate([a, np.full((pad,), fill, a.dtype)])
+
+    return EncodedExample(
+        qid=e.qid,
+        tokens=p(e.tokens, PAD),
+        targets=p(e.targets, PAD),
+        loss_mask=p(e.loss_mask, 0.0),
+        seg_id=p(e.seg_id, PAD_SEG),
+        layer_id=p(e.layer_id, -1),
+        pos_id=p(e.pos_id, 0),
+        seg_visible=e.seg_visible,
+        answer_letter=e.answer_letter,
+        topology=e.topology,
+    )
+
+
+def make_batches(examples: Sequence[EncodedExample], batch_size: int,
+                 seq_len: int, seed: int = 0,
+                 drop_too_long: bool = True) -> List[Dict[str, np.ndarray]]:
+    rng = np.random.default_rng(seed)
+    usable = [e for e in examples if e.length <= seq_len or not drop_too_long]
+    idx = rng.permutation(len(usable))
+    batches = []
+    for i in range(0, len(usable) - batch_size + 1, batch_size):
+        group = [pad_example(usable[j], seq_len) for j in idx[i:i + batch_size]]
+        n_seg = max(g.seg_visible.shape[0] for g in group)
+        vis = np.zeros((batch_size, n_seg, n_seg), bool)
+        for bi, g in enumerate(group):
+            k = g.seg_visible.shape[0]
+            vis[bi, :k, :k] = g.seg_visible
+        batches.append({
+            "tokens": np.stack([g.tokens for g in group]),
+            "targets": np.stack([g.targets for g in group]),
+            "loss_mask": np.stack([g.loss_mask for g in group]),
+            "seg_id": np.stack([g.seg_id for g in group]),
+            "layer_id": np.stack([g.layer_id for g in group]),
+            "pos_id": np.stack([g.pos_id for g in group]),
+            "seg_visible": vis,
+        })
+    return batches
+
+
+@dataclasses.dataclass
+class Corpus:
+    """End-to-end synthetic MedVerse corpus (the MedVerse-14K analogue)."""
+
+    tokenizer: Tokenizer
+    train: List[CuratedExample]
+    eval: List[CuratedExample]
+
+    @staticmethod
+    def build(n_items: int = 600, eval_frac: float = 0.15, seed: int = 0,
+              n_clusters: int = 60, max_vocab: int = 8192) -> "Corpus":
+        from .knowledge_graph import build_kg, generate_qa
+        from .curator import Curator
+
+        kg = build_kg(n_clusters, seed=seed)
+        items = generate_qa(kg, n_items, seed=seed + 1)
+        curator = Curator(kg, seed=seed + 2)
+        examples = curator.curate_all(items)
+        texts = [ex.prefix_text + " "
+                 + " ".join(ex.step_texts[t] for t in sorted(ex.step_texts))
+                 + " " + ex.conclusion_text for ex in examples]
+        tok = Tokenizer.train(texts, max_vocab=max_vocab)
+        n_eval = max(1, int(len(examples) * eval_frac))
+        return Corpus(tokenizer=tok, train=examples[:-n_eval],
+                      eval=examples[-n_eval:])

@@ -1,0 +1,227 @@
+"""Synthetic medical knowledge graph + QA item generation.
+
+Stands in for the UMLS-scale KG the paper's Curator retrieves from
+(DESIGN.md §6). A seed of genuine clinical relations (including the
+paper's own thyrotoxicosis example, Fig. 3) is expanded procedurally
+with synthetic disease clusters so the Curator has enough structure to
+mine thousands of multi-path reasoning topologies.
+
+Entities are typed (disease / symptom / finding / test / treatment /
+mechanism); edges are typed, directed clinical relations.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+RELATIONS = (
+    "presents_with",   # disease -> symptom
+    "causes",          # disease/mechanism -> finding
+    "indicated_by",    # disease -> test finding
+    "treated_by",      # disease -> treatment
+    "acts_via",        # treatment -> mechanism
+    "reduces",         # treatment/mechanism -> finding
+    "increases",       # mechanism -> finding
+    "suggests",        # symptom/finding -> disease
+)
+
+VERBALIZE = {
+    "presents_with": "{a} classically presents with {b}.",
+    "causes": "{a} causes {b} through its underlying pathophysiology.",
+    "indicated_by": "{a} is indicated by {b} on diagnostic workup.",
+    "treated_by": "{a} is managed with {b} as a standard intervention.",
+    "acts_via": "{a} acts via {b} at the tissue level.",
+    "reduces": "{a} reduces {b} by suppressing the driving process.",
+    "increases": "{a} increases {b} in the acute setting.",
+    "suggests": "{a} suggests {b} in the differential diagnosis.",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Edge:
+    src: str
+    rel: str
+    dst: str
+
+
+# A small, genuine clinical seed (incl. the paper's Fig. 3 example).
+SEED_EDGES: List[Tuple[str, str, str]] = [
+    ("Thyrotoxicosis", "presents_with", "Tachycardia"),
+    ("Thyrotoxicosis", "presents_with", "Weight-loss"),
+    ("Thyrotoxicosis", "presents_with", "Heat-intolerance"),
+    ("Thyrotoxicosis", "treated_by", "Potassium-iodide"),
+    ("Thyrotoxicosis", "treated_by", "Therapeutic-iodine"),
+    ("Thyrotoxicosis", "treated_by", "Methimazole"),
+    ("Potassium-iodide", "acts_via", "Wolff-Chaikoff-effect"),
+    ("Therapeutic-iodine", "acts_via", "Wolff-Chaikoff-effect"),
+    ("Potassium-iodide", "reduces", "Thyroid-vascularity"),
+    ("Therapeutic-iodine", "reduces", "Thyroid-vascularity"),
+    ("Wolff-Chaikoff-effect", "reduces", "Thyroid-hormone-release"),
+    ("Myocardial-infarction", "presents_with", "Chest-pain"),
+    ("Myocardial-infarction", "presents_with", "Diaphoresis"),
+    ("Myocardial-infarction", "indicated_by", "ST-elevation"),
+    ("Myocardial-infarction", "indicated_by", "Troponin-rise"),
+    ("Myocardial-infarction", "treated_by", "Aspirin"),
+    ("Myocardial-infarction", "treated_by", "PCI"),
+    ("Aspirin", "acts_via", "COX-inhibition"),
+    ("COX-inhibition", "reduces", "Platelet-aggregation"),
+    ("PCI", "reduces", "Coronary-occlusion"),
+    ("Pneumonia", "presents_with", "Productive-cough"),
+    ("Pneumonia", "presents_with", "Fever"),
+    ("Pneumonia", "indicated_by", "Lobar-consolidation"),
+    ("Pneumonia", "treated_by", "Amoxicillin"),
+    ("Amoxicillin", "acts_via", "Cell-wall-synthesis-inhibition"),
+    ("Cell-wall-synthesis-inhibition", "reduces", "Bacterial-load"),
+    ("Diabetic-ketoacidosis", "presents_with", "Polyuria"),
+    ("Diabetic-ketoacidosis", "presents_with", "Kussmaul-breathing"),
+    ("Diabetic-ketoacidosis", "indicated_by", "Anion-gap-acidosis"),
+    ("Diabetic-ketoacidosis", "treated_by", "Insulin-infusion"),
+    ("Insulin-infusion", "reduces", "Ketogenesis"),
+    ("Insulin-infusion", "reduces", "Serum-glucose"),
+    ("Iron-deficiency-anemia", "presents_with", "Fatigue"),
+    ("Iron-deficiency-anemia", "presents_with", "Pallor"),
+    ("Iron-deficiency-anemia", "indicated_by", "Low-ferritin"),
+    ("Iron-deficiency-anemia", "treated_by", "Ferrous-sulfate"),
+    ("Ferrous-sulfate", "increases", "Hemoglobin-synthesis"),
+]
+
+
+class KnowledgeGraph:
+    def __init__(self, edges: Sequence[Edge]):
+        self.edges = list(edges)
+        self.out: Dict[str, List[Edge]] = {}
+        self.entities: Set[str] = set()
+        self.edge_set: Set[Tuple[str, str]] = set()
+        for e in self.edges:
+            self.out.setdefault(e.src, []).append(e)
+            self.entities.add(e.src)
+            self.entities.add(e.dst)
+            self.edge_set.add((e.src, e.dst))
+
+    def has_edge(self, a: str, b: str) -> bool:
+        return (a, b) in self.edge_set
+
+    def relation(self, a: str, b: str) -> Optional[str]:
+        for e in self.out.get(a, []):
+            if e.dst == b:
+                return e.rel
+        return None
+
+    def successors(self, a: str) -> List[str]:
+        return [e.dst for e in self.out.get(a, [])]
+
+    def paths(self, src: str, dst: str, max_hops: int = 4,
+              max_paths: int = 24) -> List[List[str]]:
+        """DFS path retrieval (Curator Phase 1: knowledge retrieval)."""
+        out: List[List[str]] = []
+        stack: List[List[str]] = [[src]]
+        while stack and len(out) < max_paths:
+            path = stack.pop()
+            node = path[-1]
+            if node == dst and len(path) > 1:
+                out.append(path)
+                continue
+            if len(path) > max_hops:
+                continue
+            for nxt in self.successors(node):
+                if nxt not in path:  # simple paths only (acyclic)
+                    stack.append(path + [nxt])
+        return out
+
+
+def build_kg(n_synthetic_clusters: int = 60, seed: int = 0) -> KnowledgeGraph:
+    """Seed KG + procedural clusters. Each cluster mirrors a clinical
+    motif: disease -> {symptoms, findings} ; disease -> treatments ->
+    shared mechanism -> outcome finding (a diamond — the structure that
+    exercises Fork/Join)."""
+    rng = random.Random(seed)
+    edges = [Edge(*t) for t in SEED_EDGES]
+    for k in range(n_synthetic_clusters):
+        d = f"Syndrome-{k:02d}"
+        n_sym = rng.randint(2, 4)
+        for i in range(n_sym):
+            edges.append(Edge(d, "presents_with", f"Sign-{k:02d}-{i}"))
+        edges.append(Edge(d, "indicated_by", f"Marker-{k:02d}"))
+        n_treat = rng.randint(2, 3)
+        mech = f"Pathway-{k:02d}"
+        outcome = f"Outcome-{k:02d}"
+        for i in range(n_treat):
+            t = f"Agent-{k:02d}-{i}"
+            edges.append(Edge(d, "treated_by", t))
+            edges.append(Edge(t, "acts_via", mech))
+            edges.append(Edge(t, "reduces", outcome))
+        edges.append(Edge(mech, "reduces", f"Driver-{k:02d}"))
+        # cross-links to earlier clusters (intersecting topologies)
+        if k > 0 and rng.random() < 0.5:
+            other = f"Outcome-{rng.randrange(k):02d}"
+            edges.append(Edge(mech, "increases", other))
+        if rng.random() < 0.4:
+            edges.append(Edge(f"Sign-{k:02d}-0", "suggests", d))
+    return KnowledgeGraph(edges)
+
+
+@dataclasses.dataclass
+class QAItem:
+    qid: int
+    question: str
+    options: List[str]         # option texts
+    answer_idx: int            # index into options
+    question_entities: List[str]
+    answer_entity: str
+
+    @property
+    def answer_letter(self) -> str:
+        return "abcd"[self.answer_idx]
+
+    @property
+    def answer_text(self) -> str:
+        return self.options[self.answer_idx]
+
+
+_Q_TEMPLATES = [
+    ("A patient has {disease} . Which intervention reduces {outcome} ?",
+     "treatment_for_outcome"),
+    ("A patient presents with {signs} . The diagnosis is {disease} . "
+     "Which agent is appropriate ?", "treatment"),
+]
+
+
+def generate_qa(kg: KnowledgeGraph, n_items: int = 512,
+                seed: int = 1) -> List[QAItem]:
+    rng = random.Random(seed)
+    diseases = sorted({e.src for e in kg.edges if e.rel == "treated_by"})
+    all_treatments = sorted({e.dst for e in kg.edges if e.rel == "treated_by"})
+    items: List[QAItem] = []
+    qid = 0
+    while len(items) < n_items:
+        d = rng.choice(diseases)
+        treatments = [e.dst for e in kg.out[d] if e.rel == "treated_by"]
+        if not treatments:
+            continue
+        ans = rng.choice(treatments)
+        # outcome the answer reaches (for the question text)
+        outs = [e.dst for e in kg.out.get(ans, []) if e.rel == "reduces"]
+        signs = [e.dst for e in kg.out[d] if e.rel == "presents_with"]
+        distractors = [t for t in all_treatments
+                       if t not in treatments]
+        rng.shuffle(distractors)
+        options = [ans] + distractors[:3]
+        rng.shuffle(options)
+        if outs:
+            q = (f"A patient has {d} . Which intervention reduces "
+                 f"{outs[0]} ?")
+        elif signs:
+            q = (f"A patient presents with {' and '.join(signs[:2])} . "
+                 f"The diagnosis is {d} . Which agent is appropriate ?")
+        else:
+            continue
+        items.append(QAItem(
+            qid=qid, question=q, options=options,
+            answer_idx=options.index(ans),
+            question_entities=[d] + signs[:2],
+            answer_entity=ans,
+        ))
+        qid += 1
+    return items

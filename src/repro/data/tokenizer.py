@@ -1,0 +1,86 @@
+"""Whitespace word-level tokenizer with MedVerse structural specials.
+
+The structured tags (<Plan>, <Step>, ...) are single tokens so the
+engine detects phase boundaries (e.g. pausing at </Plan> — paper Sec 4.3
+Phase I) by token id, with zero text re-scanning per step.
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from typing import Dict, Iterable, List, Optional
+
+SPECIALS = [
+    "<pad>", "<unk>", "<bos>", "<eos>",
+    "<Think>", "</Think>",
+    "<Plan>", "</Plan>",
+    "<Outline>", "</Outline>",
+    "<Execution>", "</Execution>",
+    "<Step>", "</Step>",
+    "<Conclusion>", "</Conclusion>",
+]
+
+PAD, UNK, BOS, EOS = 0, 1, 2, 3
+
+_SPECIAL_RE = re.compile(
+    "(" + "|".join(re.escape(s) for s in SPECIALS[4:]) + ")"
+)
+
+
+class Tokenizer:
+    def __init__(self, vocab: Dict[str, int]):
+        self.vocab = vocab
+        self.inv = {i: t for t, i in vocab.items()}
+
+    # -- construction -------------------------------------------------------
+    @staticmethod
+    def train(corpus: Iterable[str], max_vocab: int = 8192) -> "Tokenizer":
+        from collections import Counter
+
+        counts: Counter = Counter()
+        for text in corpus:
+            for piece in _SPECIAL_RE.split(text):
+                if piece in SPECIALS:
+                    continue
+                counts.update(piece.split())
+        vocab = {s: i for i, s in enumerate(SPECIALS)}
+        for word, _ in counts.most_common(max_vocab - len(vocab)):
+            vocab[word] = len(vocab)
+        return Tokenizer(vocab)
+
+    @property
+    def vocab_size(self) -> int:
+        return len(self.vocab)
+
+    def token_id(self, tok: str) -> int:
+        return self.vocab.get(tok, UNK)
+
+    # -- encode/decode ------------------------------------------------------
+    def encode(self, text: str, bos: bool = False, eos: bool = False) -> List[int]:
+        ids: List[int] = [BOS] if bos else []
+        for piece in _SPECIAL_RE.split(text):
+            if not piece:
+                continue
+            if piece in self.vocab and piece in SPECIALS:
+                ids.append(self.vocab[piece])
+            else:
+                ids.extend(self.vocab.get(w, UNK) for w in piece.split())
+        if eos:
+            ids.append(EOS)
+        return ids
+
+    def decode(self, ids: Iterable[int]) -> str:
+        toks = [self.inv.get(int(i), "<unk>") for i in ids]
+        toks = [t for t in toks if t not in ("<pad>", "<bos>", "<eos>")]
+        return " ".join(toks)
+
+    # -- persistence ----------------------------------------------------
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.vocab, f)
+
+    @staticmethod
+    def load(path: str) -> "Tokenizer":
+        with open(path) as f:
+            return Tokenizer(json.load(f))

@@ -1,0 +1,19 @@
+from .engine import EngineConfig, GenResult, MedVerseEngine, SerialEngine
+from .kvcache import IndexChain, PageAllocator, PoolConfig, init_pool
+from .paged_model import paged_decode, prefill_forward, supports_paged
+from .radix import RadixTree
+
+__all__ = [
+    "EngineConfig",
+    "GenResult",
+    "MedVerseEngine",
+    "SerialEngine",
+    "IndexChain",
+    "PageAllocator",
+    "PoolConfig",
+    "init_pool",
+    "paged_decode",
+    "prefill_forward",
+    "supports_paged",
+    "RadixTree",
+]

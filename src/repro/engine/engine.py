@@ -1,0 +1,457 @@
+"""MedVerse Engine: two-phase hybrid execution with continuous batching
+(paper Sec. 4.3).
+
+Phase I  — *Linear planning*: standard AR decode per request until the
+``</Plan>`` token; the engine then parses the <Outline> dependencies and
+instantiates the Petri net (graph initialization).
+
+Phase II — *Frontier-based graph execution*: at each marking M_k the
+enabled-transition frontier F_k (Eq. 1) is spawned as parallel decode
+streams. **Fork** streams share the parent context via index-chain copy
+(zero device copies); **Join** streams merge predecessor chains with
+ordered dedup over pool slots (shared ancestors counted once — the
+"flexible radix cache layout, no padding or physical copy" claim).
+Adaptive positions: every stream in a frontier starts at the max end
+position of all completed work (fork alignment / join-max, Sec. 4.2).
+
+All active streams across all requests and phases decode together in one
+batched ``paged_decode`` call per iteration — continuous batching.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.dag import CycleError, ReasoningDAG
+from ..core.petri import ColoredToken, PetriNet, PetriScheduler
+from ..core.plan import PlanParseError, parse_plan
+from ..data.tokenizer import EOS, Tokenizer
+from ..models.config import ModelConfig
+from .kvcache import IndexChain, PageAllocator, PoolConfig, init_pool
+from .paged_model import paged_decode, prefill_forward, supports_paged
+from .radix import RadixTree
+from .sampling import sample_token
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    max_slots: int = 8
+    page_size: int = 16
+    n_pages: int = 4096
+    max_chain_len: int = 640
+    max_plan_tokens: int = 256
+    max_step_tokens: int = 64
+    max_conclusion_tokens: int = 96
+    max_serial_tokens: int = 512
+    temperature: float = 0.0
+    async_frontier: bool = False   # paper: frontier-synchronized
+    seed: int = 0
+    # Teacher-forced plan injection: skip LLM planning and force this
+    # plan text (deterministic execution; also the Table-5 "Direct Petri
+    # Net" ablation hook and the debugging surface).
+    plan_override: Optional[str] = None
+
+
+@dataclasses.dataclass
+class GenResult:
+    text: str
+    ok: bool
+    n_tokens: int                 # generated tokens (all streams)
+    critical_path_tokens: int     # O(D) depth the paper's latency tracks
+    wall_s: float
+    plan_ok: bool
+    topology: str
+    timings: Dict[str, float]
+    step_texts: Dict[int, str] = dataclasses.field(default_factory=dict)
+    conclusion: str = ""
+
+
+class _Stream:
+    __slots__ = ("chain", "q_pos", "forced", "next_input", "generated",
+                 "purpose", "stop_id", "max_new", "done", "finish_after",
+                 "n_generated", "rid", "tid")
+
+    def __init__(self, chain: IndexChain, q_pos: int, purpose: str,
+                 rid: int, tid: int = -1, stop_id: int = EOS,
+                 max_new: int = 64):
+        self.chain = chain
+        self.q_pos = q_pos
+        self.forced: deque = deque()
+        self.next_input: Optional[int] = None
+        self.generated: List[int] = []
+        self.purpose = purpose   # "plan" | "step" | "conclusion" | "serial"
+        self.rid = rid
+        self.tid = tid
+        self.stop_id = stop_id
+        self.max_new = max_new
+        self.done = False
+        self.finish_after = False
+        self.n_generated = 0
+
+
+class _Request:
+    def __init__(self, rid: int, prompt_ids: List[int]):
+        self.rid = rid
+        self.prompt_ids = prompt_ids
+        self.state = "planning"
+        self.plan = None
+        self.dag: Optional[ReasoningDAG] = None
+        self.sched: Optional[PetriScheduler] = None
+        self.labels: Dict[int, str] = {}
+        self.ctx_chain: Optional[IndexChain] = None
+        self.ctx_end = 0
+        self.max_end = 0
+        self.step_results: Dict[int, Tuple[str, IndexChain, int]] = {}
+        self.pending_frontier: List[int] = []
+        self.plan_text = ""
+        self.conclusion_text = ""
+        self.plan_ok = False
+        self.t_start = 0.0
+        self.timings = {"planning": 0.0, "execution": 0.0,
+                        "conclusion": 0.0, "fork_join": 0.0,
+                        "schedule_parse": 0.0}
+        self.n_tokens = 0
+        self.done = False
+
+
+class MedVerseEngine:
+    def __init__(self, params, cfg: ModelConfig, tok: Tokenizer,
+                 ecfg: Optional[EngineConfig] = None):
+        assert supports_paged(cfg), (
+            f"{cfg.name}: engine paged path requires attention layers "
+            "(SSM/MLA archs use models.decode_step; see DESIGN.md §4)")
+        self.params = params
+        self.cfg = cfg
+        self.tok = tok
+        self.ecfg = ecfg or EngineConfig()
+        pc = PoolConfig(
+            n_layers=cfg.n_layers, n_pages=self.ecfg.n_pages,
+            page_size=self.ecfg.page_size, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.resolved_head_dim, dtype=cfg.dtype,
+        )
+        self.pc = pc
+        self.pool = init_pool(pc)
+        self.alloc = PageAllocator(pc)
+        self.radix = RadixTree()
+        self.rng = np.random.default_rng(self.ecfg.seed)
+        self.id_plan_end = tok.token_id("</Plan>")
+        self.id_step_end = tok.token_id("</Step>")
+        self.id_conc_end = tok.token_id("</Conclusion>")
+        self.id_exec = tok.token_id("<Execution>")
+        self.id_conc = tok.token_id("<Conclusion>")
+
+    # ------------------------------------------------------------ prefill --
+    PREFILL_BUCKET = 64
+
+    def _prefill(self, req: _Request, plan_override=None) -> _Stream:
+        ids = req.prompt_ids
+        n = len(ids)
+        chain = IndexChain.fresh(self.alloc)
+        slots = chain.reserve(n)
+        pos = np.arange(n, dtype=np.int32)
+        # bucket the prompt length so one compilation serves many prompts
+        bucket = -(-n // self.PREFILL_BUCKET) * self.PREFILL_BUCKET
+        ids_p = np.zeros((bucket,), np.int32)
+        ids_p[:n] = ids
+        pos_p = np.arange(bucket, dtype=np.int32)
+        logits, ks, vs = prefill_forward(
+            self.params, jnp.asarray(ids_p)[None],
+            jnp.asarray(pos_p)[None], self.cfg, jnp.int32(n))
+        self.pool["k"] = self.pool["k"].at[:, slots].set(
+            ks[:, :n].astype(self.pool["k"].dtype))
+        self.pool["v"] = self.pool["v"].at[:, slots].set(
+            vs[:, :n].astype(self.pool["v"].dtype))
+        self.pool["pos"] = self.pool["pos"].at[slots].set(jnp.asarray(pos))
+        st = _Stream(chain, q_pos=n, purpose="plan", rid=req.rid,
+                     stop_id=self.id_plan_end,
+                     max_new=self.ecfg.max_plan_tokens)
+        plan = (plan_override if plan_override is not None
+                else self.ecfg.plan_override)
+        if plan is not None:
+            forced = self.tok.encode(plan)
+            st.forced.extend(forced)
+            st.max_new = len(forced) + 2
+        st.next_input = int(sample_token(
+            np.asarray(logits), self.ecfg.temperature, self.rng))
+        return st
+
+    # --------------------------------------------------------- fork/join ---
+    def _spawn_frontier(self, req: _Request) -> List[_Stream]:
+        t0 = time.monotonic()
+        front = req.sched.frontier()
+        if not front:
+            return []
+        req.sched.history.append([t.tid for t in front])
+        start_pos = req.max_end  # frontier-synchronized adaptive start
+        streams = []
+        fj_before = req.timings["fork_join"]
+        for t in front:
+            tf = time.monotonic()
+            if len(t.pre) == 1:
+                src = (req.ctx_chain if t.pre[0] == req.sched.net.ctx_place
+                       else req.step_results[self._tid_of_place(req, t.pre[0])][1])
+                chain = src.fork()
+            else:
+                chains = [req.step_results[self._tid_of_place(req, p)][1]
+                          for p in t.pre]
+                chain = self._dedup_join(chains)
+            req.timings["fork_join"] += time.monotonic() - tf
+            header = self.tok.encode(
+                f"<Step> Transient Step {t.tid + 1}: {req.labels.get(t.tid, '')}")
+            st = _Stream(chain, q_pos=start_pos, purpose="step",
+                         rid=req.rid, tid=t.tid, stop_id=self.id_step_end,
+                         max_new=self.ecfg.max_step_tokens + len(header))
+            st.forced.extend(header)
+            streams.append(st)
+        req.pending_frontier = [s.tid for s in streams]
+        fj_delta = req.timings["fork_join"] - fj_before
+        req.timings["schedule_parse"] += time.monotonic() - t0 - fj_delta
+        return streams
+
+    def _tid_of_place(self, req: _Request, place: int) -> int:
+        # PetriNet.from_dag: output place of transition t is t + 1
+        return place - 1
+
+    def _dedup_join(self, chains: List[IndexChain]) -> IndexChain:
+        """Ordered dedup over pool slots: shared ancestors once, branch
+        suffixes in order. Zero device copies."""
+        alloc = chains[0].alloc
+        out = IndexChain(alloc)
+        seen = dict()
+        parts = []
+        pages = set()
+        for ch in chains:
+            arr = ch.idx[:ch.length]
+            mask = np.fromiter((int(s) not in seen for s in arr), bool,
+                               count=len(arr))
+            for s in arr[mask]:
+                seen[int(s)] = True
+            parts.append(arr[mask])
+            pages |= ch.pages
+        out.idx = (np.concatenate(parts).astype(np.int32)
+                   if parts else np.zeros((0,), np.int32))
+        out.length = int(out.idx.shape[0])
+        out.pages = pages
+        for pg in pages:
+            alloc.incref(pg)
+        return out
+
+    def _spawn_conclusion(self, req: _Request) -> _Stream:
+        tf = time.monotonic()
+        chains = [req.ctx_chain] + [req.step_results[t][1]
+                                    for t in sorted(req.step_results)]
+        chain = self._dedup_join(chains)
+        req.timings["fork_join"] += time.monotonic() - tf
+        st = _Stream(chain, q_pos=req.max_end, purpose="conclusion",
+                     rid=req.rid, stop_id=self.id_conc_end,
+                     max_new=self.ecfg.max_conclusion_tokens)
+        st.forced.append(self.id_conc)
+        return st
+
+    # ------------------------------------------------------- stream done ---
+    def _on_stream_done(self, req: _Request, st: _Stream,
+                        new_streams: List[_Stream]) -> None:
+        text = self.tok.decode(st.generated)
+        if st.purpose == "plan":
+            req.plan_text = text
+            t0 = time.monotonic()
+            try:
+                plan = parse_plan(text, lenient=True)
+                dag = plan.to_dag()
+                req.plan = plan
+                req.dag = dag
+                req.labels = plan.labels()
+                net = PetriNet.from_dag(dag, req.labels)
+                req.sched = PetriScheduler(
+                    net, ColoredToken(history=text, kv_ref=st.chain))
+                req.plan_ok = True
+                req.state = "executing"
+                req.ctx_chain = st.chain
+                req.ctx_end = st.q_pos
+                req.max_end = st.q_pos
+            except (PlanParseError, CycleError):
+                # graceful fallback: no valid plan -> go straight to a
+                # conclusion over the linear context (serial behaviour)
+                req.plan_ok = False
+                req.state = "concluding"
+                req.ctx_chain = st.chain
+                req.ctx_end = st.q_pos
+                req.max_end = st.q_pos
+                req.step_results = {}
+            req.timings["schedule_parse"] += time.monotonic() - t0
+            if req.state == "executing":
+                new_streams.extend(self._spawn_frontier(req))
+            else:
+                new_streams.append(self._spawn_conclusion(req))
+        elif st.purpose == "step":
+            # fire the transition: output token carries (text, chain)
+            tr = req.sched.net.transition(st.tid)
+            req.sched.fire(tr, ColoredToken(history=text, kv_ref=st.chain))
+            req.step_results[st.tid] = (text, st.chain, st.q_pos)
+            req.max_end = max(req.max_end, st.q_pos)
+            req.pending_frontier.remove(st.tid)
+            if not req.pending_frontier:  # frontier complete -> advance M_k
+                nxt = self._spawn_frontier(req)
+                if nxt:
+                    new_streams.extend(nxt)
+                else:
+                    req.state = "concluding"
+                    new_streams.append(self._spawn_conclusion(req))
+        elif st.purpose in ("conclusion", "serial"):
+            req.conclusion_text = text
+            req.done = True
+
+    # ------------------------------------------------------------- main ----
+    def generate(self, prompts: List[str],
+                 plans: Optional[List[Optional[str]]] = None
+                 ) -> List[GenResult]:
+        """``plans[i]`` (optional) teacher-forces request i's plan —
+        per-request version of EngineConfig.plan_override."""
+        reqs = [_Request(rid, self.tok.encode(p, bos=True))
+                for rid, p in enumerate(prompts)]
+        plan_of = {r.rid: (plans[i] if plans else None)
+                   for i, r in enumerate(reqs)}
+        waiting = deque(reqs)
+        active: List[_Stream] = []
+        t_global = time.monotonic()
+        for r in reqs:
+            r.t_start = t_global
+        results: Dict[int, GenResult] = {}
+        n_iters = 0
+        while waiting or active:
+            # admit requests while slots free
+            while waiting and len(active) < self.ecfg.max_slots:
+                req = waiting.popleft()
+                active.append(self._prefill(req, plan_of.get(req.rid)))
+            batch = active[: self.ecfg.max_slots]
+            t_step0 = time.monotonic()
+            tokens, q_pos, slots, chains, lens = [], [], [], [], []
+            for st in batch:
+                tok_in = (st.forced.popleft() if st.forced
+                          else st.next_input)
+                slot = st.chain.next_slot()
+                tokens.append(tok_in)
+                q_pos.append(st.q_pos)
+                slots.append(slot)
+                chains.append(st.chain.padded(self.ecfg.max_chain_len))
+                lens.append(st.chain.length)
+                st.generated.append(tok_in)
+                st.q_pos += 1
+                st.n_generated += 1
+                if tok_in == st.stop_id or st.n_generated >= st.max_new:
+                    st.finish_after = True
+            n = len(batch)
+            pad = self.ecfg.max_slots - n
+            arr = lambda x, d=np.int32: jnp.asarray(
+                np.pad(np.asarray(x, d), [(0, pad)] + [(0, 0)] * (np.asarray(x).ndim - 1)))
+            logits, self.pool["k"], self.pool["v"], self.pool["pos"] = paged_decode(
+                self.params, self.pool["k"], self.pool["v"], self.pool["pos"],
+                arr(tokens), arr(q_pos), arr(slots),
+                jnp.asarray(np.pad(np.stack(chains), [(0, pad), (0, 0)])),
+                arr(lens), self.cfg)
+            logits_np = np.asarray(logits[:n])
+            step_dt = time.monotonic() - t_step0
+            new_streams: List[_Stream] = []
+            finished: List[_Stream] = []
+            for i, st in enumerate(batch):
+                req = reqs[st.rid]
+                phase = {"plan": "planning", "step": "execution",
+                         "conclusion": "conclusion",
+                         "serial": "planning"}[st.purpose]
+                req.timings[phase] += step_dt / n
+                req.n_tokens += 1
+                if not st.forced and not st.finish_after:
+                    st.next_input = int(sample_token(
+                        logits_np[i], self.ecfg.temperature, self.rng))
+                if st.finish_after:
+                    st.done = True
+                    finished.append(st)
+            for st in finished:
+                active.remove(st)
+                self._on_stream_done(reqs[st.rid], st, new_streams)
+            active.extend(new_streams)
+            n_iters += 1
+            for req in reqs:
+                if req.done and req.rid not in results:
+                    results[req.rid] = self._finish(req, t_global)
+        return [results[r.rid] for r in reqs]
+
+    def _finish(self, req: _Request, t_global: float) -> GenResult:
+        steps = {tid + 1: txt for tid, (txt, _, _) in
+                 sorted(req.step_results.items())}
+        parts = [req.plan_text]
+        parts += [steps[k] for k in sorted(steps)]
+        parts.append(req.conclusion_text)
+        topo = (req.dag.classify_topology() if req.dag is not None
+                else "single_linear_chain")
+        # critical-path depth of the GENERATED region (the paper's O(D)):
+        # max adaptive end position minus the prompt prefix length
+        crit = max(req.max_end - len(req.prompt_ids), 1)
+        return GenResult(
+            text=" ".join(parts), ok=True, n_tokens=req.n_tokens,
+            critical_path_tokens=crit,
+            wall_s=time.monotonic() - t_global,
+            plan_ok=req.plan_ok, topology=topo,
+            timings=dict(req.timings),
+            step_texts=steps, conclusion=req.conclusion_text,
+        )
+
+
+class SerialEngine:
+    """Autoregressive baseline: same model, same paged machinery, one
+    linear stream per request (no fork/join, no DAG)."""
+
+    def __init__(self, params, cfg: ModelConfig, tok: Tokenizer,
+                 ecfg: Optional[EngineConfig] = None):
+        self.inner = MedVerseEngine(params, cfg, tok, ecfg)
+
+    def generate(self, prompts: List[str], max_tokens: Optional[int] = None
+                 ) -> List[GenResult]:
+        eng = self.inner
+        results = []
+        t0 = time.monotonic()
+        for rid, p in enumerate(prompts):
+            req = _Request(rid, eng.tok.encode(p, bos=True))
+            st = eng._prefill(req)
+            st.purpose = "serial"
+            st.stop_id = EOS
+            st.max_new = max_tokens or eng.ecfg.max_serial_tokens
+            n = 0
+            t_req = time.monotonic()
+            while not st.done:
+                tok_in = st.forced.popleft() if st.forced else st.next_input
+                slot = st.chain.next_slot()
+                logits, eng.pool["k"], eng.pool["v"], eng.pool["pos"] = paged_decode(
+                    eng.params, eng.pool["k"], eng.pool["v"], eng.pool["pos"],
+                    jnp.asarray(np.pad([tok_in], (0, eng.ecfg.max_slots - 1))),
+                    jnp.asarray(np.pad([st.q_pos], (0, eng.ecfg.max_slots - 1))),
+                    jnp.asarray(np.pad([slot], (0, eng.ecfg.max_slots - 1))),
+                    jnp.asarray(np.pad(
+                        st.chain.padded(eng.ecfg.max_chain_len)[None],
+                        [(0, eng.ecfg.max_slots - 1), (0, 0)])),
+                    jnp.asarray(np.pad([st.chain.length],
+                                       (0, eng.ecfg.max_slots - 1))),
+                    eng.cfg)
+                st.generated.append(tok_in)
+                st.q_pos += 1
+                n += 1
+                nxt = int(sample_token(np.asarray(logits[0]),
+                                       eng.ecfg.temperature, eng.rng))
+                if tok_in == EOS or n >= st.max_new:
+                    st.done = True
+                else:
+                    st.next_input = nxt
+            results.append(GenResult(
+                text=eng.tok.decode(st.generated), ok=True, n_tokens=n,
+                critical_path_tokens=st.q_pos,
+                wall_s=time.monotonic() - t_req, plan_ok=False,
+                topology="single_linear_chain",
+                timings={"serial": time.monotonic() - t_req}))
+        return results

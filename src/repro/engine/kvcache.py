@@ -1,0 +1,198 @@
+"""Paged KV pool + host-side page allocator (the MedVerse Engine's
+memory system; paper Sec. 4.3, adapted for TPU per DESIGN.md §3).
+
+Device side: one append-only pool per layer, shape
+``(L, n_pages * page_size, n_kv, head_dim)``. Streams address tokens by
+*index chains* — host-built int32 arrays of flat pool slots. The pool is
+append-only: existing slots are never overwritten, so
+
+  * **Fork** = copy the parent's (host) index array and keep appending
+    into freshly allocated pages → zero device copies, O(1) device work.
+  * **Join** = concatenate predecessor chains (shared prefix counted
+    once) → zero device copies.
+
+This is the radix-attention "flexible cache layout" claim realized with
+static-shape gathers (TPU-friendly) instead of CUDA pointer chasing.
+
+Host side: a refcounted page allocator. Pages are freed when the last
+stream referencing them is released.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Set, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class OutOfPagesError(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class PoolConfig:
+    n_layers: int
+    n_pages: int
+    page_size: int
+    n_kv_heads: int
+    head_dim: int
+    dtype: str = "float32"
+
+    @property
+    def n_slots(self) -> int:
+        return self.n_pages * self.page_size
+
+
+def init_pool(pc: PoolConfig) -> Dict[str, jnp.ndarray]:
+    shape = (pc.n_layers, pc.n_slots, pc.n_kv_heads, pc.head_dim)
+    dt = jnp.dtype(pc.dtype)
+    return {
+        "k": jnp.zeros(shape, dt),
+        "v": jnp.zeros(shape, dt),
+        # adaptive position of each stored token (shared across layers)
+        "pos": jnp.zeros((pc.n_slots,), jnp.int32),
+    }
+
+
+class PageAllocator:
+    """Refcounted free-list allocator over pool pages (host-side)."""
+
+    def __init__(self, pc: PoolConfig):
+        self.pc = pc
+        self.free: List[int] = list(range(pc.n_pages))
+        self.refs: Dict[int, int] = {}
+
+    def alloc_page(self) -> int:
+        if not self.free:
+            raise OutOfPagesError(
+                f"pool exhausted ({self.pc.n_pages} pages)")
+        pg = self.free.pop()
+        self.refs[pg] = 1
+        return pg
+
+    def incref(self, page: int) -> None:
+        self.refs[page] += 1
+
+    def decref(self, page: int) -> None:
+        self.refs[page] -= 1
+        if self.refs[page] == 0:
+            del self.refs[page]
+            self.free.append(page)
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.pc.n_pages - len(self.free)
+
+
+class IndexChain:
+    """A stream's view of the pool: flat token slot indices, append-only.
+
+    ``pages``: the pages this chain references (for refcounting).
+    ``write_page``/``write_off``: current append cursor (owned page).
+    """
+
+    __slots__ = ("alloc", "idx", "length", "pages", "write_page",
+                 "write_off")
+
+    def __init__(self, alloc: PageAllocator):
+        self.alloc = alloc
+        self.idx = np.zeros((0,), np.int32)
+        self.length = 0
+        self.pages: Set[int] = set()
+        self.write_page: Optional[int] = None
+        self.write_off = 0
+
+    # -- construction -----------------------------------------------------
+    @staticmethod
+    def fresh(alloc: PageAllocator) -> "IndexChain":
+        return IndexChain(alloc)
+
+    def fork(self) -> "IndexChain":
+        """Zero-copy fork: child references the same tokens (read-only) and
+        appends into its own pages."""
+        child = IndexChain(self.alloc)
+        child.idx = self.idx[: self.length].copy()  # host ints only
+        child.length = self.length
+        child.pages = set(self.pages)
+        for pg in child.pages:
+            self.alloc.incref(pg)
+        # child gets its own write page lazily on first append
+        return child
+
+    @staticmethod
+    def join(chains: List["IndexChain"], prefix_len: int) -> "IndexChain":
+        """Merge predecessor chains that share a common prefix of
+        ``prefix_len`` tokens: prefix once, then each branch's suffix in
+        order. Zero device copies."""
+        assert chains
+        alloc = chains[0].alloc
+        out = IndexChain(alloc)
+        parts = [chains[0].idx[:prefix_len]]
+        pages: Set[int] = set()
+        for ch in chains:
+            parts.append(ch.idx[prefix_len:ch.length])
+            pages |= ch.pages
+        out.idx = np.concatenate(parts).astype(np.int32)
+        out.length = int(out.idx.shape[0])
+        out.pages = pages
+        for pg in pages:
+            alloc.incref(pg)
+        return out
+
+    def release(self) -> None:
+        for pg in self.pages:
+            self.alloc.decref(pg)
+        self.pages.clear()
+        self.length = 0
+        self.idx = np.zeros((0,), np.int32)
+        self.write_page = None
+
+    # -- appending ---------------------------------------------------------
+    def next_slot(self) -> int:
+        """Reserve the next pool slot for this stream's new token."""
+        pg_size = self.alloc.pc.page_size
+        if self.write_page is None or self.write_off == pg_size:
+            self.write_page = self.alloc.alloc_page()
+            self.pages.add(self.write_page)
+            self.write_off = 0
+        slot = self.write_page * pg_size + self.write_off
+        self.write_off += 1
+        self.idx = np.append(self.idx, np.int32(slot))
+        self.length += 1
+        return slot
+
+    def reserve(self, n: int) -> np.ndarray:
+        return np.asarray([self.next_slot() for _ in range(n)], np.int32)
+
+    def padded(self, max_len: int) -> np.ndarray:
+        out = np.zeros((max_len,), np.int32)
+        out[: self.length] = self.idx[: self.length]
+        return out
+
+
+# ----------------------------------------------------- device pool writes --
+@jax.jit
+def pool_write(pool_k, pool_v, pool_pos, layer_kv_k, layer_kv_v,
+               slots, positions):
+    """Write one token per stream into the pool.
+
+    layer_kv_k/v: (L, n_streams, n_kv, hd); slots: (n_streams,) flat slot
+    ids; positions: (n_streams,) adaptive positions.
+    """
+    pool_k = pool_k.at[:, slots].set(layer_kv_k)
+    pool_v = pool_v.at[:, slots].set(layer_kv_v)
+    pool_pos = pool_pos.at[slots].set(positions)
+    return pool_k, pool_v, pool_pos
+
+
+@jax.jit
+def pool_write_span(pool_k, pool_v, pool_pos, kv_k, kv_v, slots, positions):
+    """Write a span of tokens (prefill). kv_k/v: (L, S, n_kv, hd);
+    slots: (S,); positions: (S,)."""
+    pool_k = pool_k.at[:, slots].set(kv_k)
+    pool_v = pool_v.at[:, slots].set(kv_v)
+    pool_pos = pool_pos.at[slots].set(positions)
+    return pool_k, pool_v, pool_pos

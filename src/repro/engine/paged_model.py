@@ -1,0 +1,189 @@
+"""Model execution against the paged pool: chunked prefill (collecting
+post-RoPE K/V into pool pages) and the batched paged decode step that
+the continuous batcher calls once per engine iteration.
+
+Engine-supported layer kinds: ATTN and LOCAL_ATTN (the paper's engine
+targets decoder LLMs; MoE FFNs work; MLA/SSM decode goes through the
+dense ``models.decode_step`` path — see DESIGN.md §4).
+
+All functions are functional: the pool arrays flow in and out of jitted
+steps; index chains and positions are built host-side (scheduling is
+<0.01% of wall-clock — paper Table 2 — and ours is too, see
+benchmarks/table2_cost_decomp.py).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.masks import NEG_INF
+from ..models.attention import TopoBatch
+from ..models.config import ATTN, LOCAL_ATTN, ModelConfig
+from ..models.layers import apply_mlp, apply_norm, apply_rope, embed_tokens, unembed
+from ..models.moe import moe_ffn
+from ..models.transformer import compute_stages
+
+
+def _layer_list(cfg: ModelConfig):
+    """Flatten stage params into a per-layer list at engine init."""
+    stages = compute_stages(cfg)
+    out = []
+    for st in stages:
+        for n in range(st.n):
+            for i, kind in enumerate(st.unit):
+                out.append((st, n, i, kind))
+    return out
+
+
+def flatten_params(params: dict, cfg: ModelConfig) -> List[dict]:
+    layers = []
+    for si, st in enumerate(compute_stages(cfg)):
+        sp = params["stages"][si]
+        for n in range(st.n):
+            for i, kind in enumerate(st.unit):
+                lp = jax.tree_util.tree_map(lambda a, n=n: a[n], sp[f"u{i}"])
+                layers.append({"params": lp, "kind": kind, "moe": st.moe})
+    return layers
+
+
+def _proj_qkv(p, h, cfg, pos):
+    b, s, _ = h.shape
+    hd, nh, nkv = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads
+    q = (h @ p["wq"]).reshape(b, s, nh, hd)
+    k = (h @ p["wk"]).reshape(b, s, nkv, hd)
+    v = (h @ p["wv"]).reshape(b, s, nkv, hd)
+    if cfg.qk_norm:
+        q = apply_norm(p["q_norm"], q, "rmsnorm", cfg.norm_eps)
+        k = apply_norm(p["k_norm"], k, "rmsnorm", cfg.norm_eps)
+    if cfg.pos_embedding == "rope":
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa(q, k, v, bias, cfg):
+    """q:(B,Sq,nh,hd) k,v:(B,Sk,nkv,hd) bias broadcastable to
+    (B,1,1,Sq,Sk). Returns (B,Sq,nh*hd) f32->x dtype."""
+    b, sq, nh, hd = q.shape
+    nkv = k.shape[2]
+    g = nh // nkv
+    qg = q.reshape(b, sq, nkv, g, hd)
+    sc = jnp.einsum("bqkgh,bskh->bkgqs", qg.astype(jnp.float32),
+                    k.astype(jnp.float32)) / math.sqrt(hd)
+    if cfg.attn_logit_softcap > 0:
+        sc = jnp.tanh(sc / cfg.attn_logit_softcap) * cfg.attn_logit_softcap
+    sc = sc + bias
+    w = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", w, v.astype(jnp.float32))
+    return out.reshape(b, sq, nh * hd)
+
+
+# ------------------------------------------------------------- prefill -----
+@partial(jax.jit, static_argnames=("cfg",))
+def prefill_forward(params: dict, tokens: jnp.ndarray, pos: jnp.ndarray,
+                    cfg: ModelConfig, true_len: jnp.ndarray = None):
+    """Linear (causal) prefill of (1, S) tokens (S may be padded to a
+    bucket size — the engine buckets prompt lengths so one compilation
+    serves many prompts). Returns (logits at true_len-1 (V,),
+    kvs {k,v}: (L, S, nkv, hd) post-RoPE)."""
+    b, s = tokens.shape
+    if true_len is None:
+        true_len = jnp.int32(s)
+    x = embed_tokens(params["embed"], tokens)
+    if cfg.pos_embedding == "learned":
+        from ..models.layers import learned_pos
+        x = x + learned_pos(params["pos"], pos)
+    idx = jnp.arange(s)
+    causal = idx[None, :] <= idx[:, None]
+    bias = jnp.where(causal, 0.0, NEG_INF)[None, None, None]
+    ks, vs = [], []
+    for layer in flatten_params(params, cfg):
+        p, kind = layer["params"], layer["kind"]
+        h = apply_norm(p["norm1"], x, cfg.norm_type, cfg.norm_eps)
+        q, k, v = _proj_qkv(p["mixer"], h, cfg, pos)
+        lbias = bias
+        if kind == LOCAL_ATTN:
+            diff = pos[:, :, None] - pos[:, None, :]
+            win = (diff >= 0) & (diff < cfg.sliding_window)
+            lbias = bias + jnp.where(win, 0.0, NEG_INF)[:, None, None]
+        att = _sdpa(q, k, v, lbias, cfg).astype(x.dtype) @ p["mixer"]["wo"]
+        x = x + att
+        h2 = apply_norm(p["norm2"], x, cfg.norm_type, cfg.norm_eps)
+        if layer["moe"]:
+            y, _ = moe_ffn(p["ffn"], h2, cfg)
+        else:
+            y = apply_mlp(p["ffn"], h2, cfg.mlp_activation)
+        x = x + y
+        ks.append(k[0])
+        vs.append(v[0])
+    x = apply_norm(params["final_norm"], x, cfg.norm_type, cfg.norm_eps)
+    head = params["lm_head"] if "lm_head" in params else params["embed"]["table"].T
+    x_last = jax.lax.dynamic_slice_in_dim(x, true_len - 1, 1, axis=1)
+    logits = unembed(head, x_last[:, 0], cfg.logit_softcap)[0]
+    return logits, jnp.stack(ks), jnp.stack(vs)
+
+
+# -------------------------------------------------------------- decode -----
+@partial(jax.jit, static_argnames=("cfg",), donate_argnums=(1, 2, 3))
+def paged_decode(params: dict,
+                 pool_k: jnp.ndarray,     # (L, n_slots, nkv, hd)
+                 pool_v: jnp.ndarray,
+                 pool_pos: jnp.ndarray,   # (n_slots,)
+                 token_ids: jnp.ndarray,  # (N,)
+                 q_pos: jnp.ndarray,      # (N,)
+                 write_slots: jnp.ndarray,  # (N,) flat pool slot per stream
+                 chain_idx: jnp.ndarray,  # (N, S_max) flat slot chains
+                 chain_len: jnp.ndarray,  # (N,) incl. the new token
+                 cfg: ModelConfig):
+    """One decode step for all active streams against their index chains.
+
+    Visibility needs no DAG mask here: a chain *is* the stream's ancestor
+    history by construction (Petri-net token semantics) — only the length
+    mask (and sliding window, from stored positions) applies.
+    """
+    n, s_max = chain_idx.shape
+    x = embed_tokens(params["embed"], token_ids)[:, None, :]
+    if cfg.pos_embedding == "learned":
+        from ..models.layers import learned_pos
+        x = x + learned_pos(params["pos"], q_pos)[:, None, :]
+    pool_pos = pool_pos.at[write_slots].set(q_pos)
+    valid = jnp.arange(s_max)[None, :] < chain_len[:, None]   # (N, S_max)
+    kv_pos = pool_pos[chain_idx]                              # (N, S_max)
+    for li, layer in enumerate(flatten_params(params, cfg)):
+        p, kind = layer["params"], layer["kind"]
+        h = apply_norm(p["norm1"], x, cfg.norm_type, cfg.norm_eps)
+        q, k_t, v_t = _proj_qkv(p["mixer"], h, cfg, q_pos[:, None])
+        pool_k = pool_k.at[li, write_slots].set(
+            k_t[:, 0].astype(pool_k.dtype))
+        pool_v = pool_v.at[li, write_slots].set(
+            v_t[:, 0].astype(pool_v.dtype))
+        k = pool_k[li][chain_idx]                             # (N,S,nkv,hd)
+        v = pool_v[li][chain_idx]
+        vis = valid & (kv_pos <= q_pos[:, None])
+        if kind == LOCAL_ATTN:
+            diff = q_pos[:, None] - kv_pos
+            vis = vis & (diff >= 0) & (diff < cfg.sliding_window)
+        bias = jnp.where(vis, 0.0, NEG_INF)[:, None, None, None, :]
+        att = _sdpa(q, k, v, bias, cfg).astype(x.dtype) @ p["mixer"]["wo"]
+        x = x + att
+        h2 = apply_norm(p["norm2"], x, cfg.norm_type, cfg.norm_eps)
+        if layer["moe"]:
+            y, _ = moe_ffn(p["ffn"], h2, cfg)
+        else:
+            y = apply_mlp(p["ffn"], h2, cfg.mlp_activation)
+        x = x + y
+    x = apply_norm(params["final_norm"], x, cfg.norm_type, cfg.norm_eps)
+    head = params["lm_head"] if "lm_head" in params else params["embed"]["table"].T
+    logits = unembed(head, x[:, 0], cfg.logit_softcap)       # (N, V)
+    return logits, pool_k, pool_v, pool_pos
+
+
+def supports_paged(cfg: ModelConfig) -> bool:
+    return (cfg.mla is None and cfg.encoder is None
+            and all(k in (ATTN, LOCAL_ATTN) for k in cfg.layer_kinds))

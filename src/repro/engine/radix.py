@@ -1,0 +1,138 @@
+"""Radix (prefix) tree over token sequences for cross-request KV reuse.
+
+The paper's engine "leverag[es] Radix Attention [SGLang] for zero-copy
+forking". Within one request, forking needs no lookup (the child copies
+the parent's index chain — see kvcache.IndexChain.fork). The radix tree
+adds the *cross-request* reuse: two questions with the same prompt
+prefix, or a regenerated branch, share pool slots instead of recomputing
+prefill.
+
+Host-side structure; nodes own spans of pool slot indices. Matching is
+token-exact. Eviction = LRU leaves with refcount 0.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class RadixNode:
+    tokens: List[int]                       # edge label (token ids)
+    slots: np.ndarray                       # pool slot per token in edge
+    children: Dict[int, "RadixNode"]        # first-token -> child
+    parent: Optional["RadixNode"]
+    refcount: int = 0
+    last_used: float = 0.0
+
+    def is_leaf(self) -> bool:
+        return not self.children
+
+
+class RadixTree:
+    def __init__(self):
+        self.root = RadixNode(tokens=[], slots=np.zeros((0,), np.int32),
+                              children={}, parent=None, refcount=1)
+        self.hits = 0
+        self.misses = 0
+
+    # -- lookup -------------------------------------------------------------
+    def match_prefix(self, tokens: List[int]) -> Tuple[np.ndarray, List[RadixNode]]:
+        """Longest cached prefix of ``tokens``. Returns (slot indices,
+        path nodes whose refcounts the caller now holds)."""
+        node = self.root
+        matched: List[np.ndarray] = []
+        path: List[RadixNode] = []
+        i = 0
+        while i < len(tokens):
+            child = node.children.get(tokens[i])
+            if child is None:
+                break
+            el = len(child.tokens)
+            j = 0
+            while j < el and i + j < len(tokens) and child.tokens[j] == tokens[i + j]:
+                j += 1
+            if j == 0:
+                break
+            if j < el:
+                # partial edge match: split is only needed on insert;
+                # for lookup just take the matched half.
+                matched.append(child.slots[:j])
+                child.refcount += 1
+                child.last_used = time.monotonic()
+                path.append(child)
+                i += j
+                break
+            matched.append(child.slots)
+            child.refcount += 1
+            child.last_used = time.monotonic()
+            path.append(child)
+            node = child
+            i += el
+        if matched:
+            self.hits += 1
+        else:
+            self.misses += 1
+        slots = (np.concatenate(matched).astype(np.int32)
+                 if matched else np.zeros((0,), np.int32))
+        return slots, path
+
+    def release(self, path: List[RadixNode]) -> None:
+        for n in path:
+            n.refcount -= 1
+
+    # -- insert -------------------------------------------------------------
+    def insert(self, tokens: List[int], slots: np.ndarray) -> None:
+        """Register a decoded sequence's (tokens -> pool slots) mapping."""
+        assert len(tokens) == len(slots)
+        node = self.root
+        i = 0
+        while i < len(tokens):
+            child = node.children.get(tokens[i])
+            if child is None:
+                new = RadixNode(
+                    tokens=list(tokens[i:]),
+                    slots=np.asarray(slots[i:], np.int32),
+                    children={}, parent=node,
+                    last_used=time.monotonic(),
+                )
+                node.children[tokens[i]] = new
+                return
+            el = len(child.tokens)
+            j = 0
+            while j < el and i + j < len(tokens) and child.tokens[j] == tokens[i + j]:
+                j += 1
+            if j == el:
+                node = child
+                i += el
+                continue
+            # split the edge at j
+            suffix = RadixNode(
+                tokens=child.tokens[j:],
+                slots=child.slots[j:],
+                children=child.children,
+                parent=child,
+                refcount=child.refcount,
+                last_used=child.last_used,
+            )
+            for gn in suffix.children.values():
+                gn.parent = suffix
+            child.tokens = child.tokens[:j]
+            child.slots = child.slots[:j]
+            child.children = {suffix.tokens[0]: suffix}
+            node = child
+            i += j
+        # full match: nothing to add
+
+    def n_cached_tokens(self) -> int:
+        total = 0
+        stack = [self.root]
+        while stack:
+            n = stack.pop()
+            total += len(n.tokens)
+            stack.extend(n.children.values())
+        return total

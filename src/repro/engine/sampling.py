@@ -1,0 +1,16 @@
+"""Token sampling: greedy / temperature (host-side numpy on small logits)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def sample_token(logits: np.ndarray, temperature: float,
+                 rng: np.random.Generator) -> int:
+    if temperature <= 0.0:
+        return int(np.argmax(logits))
+    z = logits.astype(np.float64) / temperature
+    z = z - z.max()
+    p = np.exp(z)
+    p /= p.sum()
+    return int(rng.choice(len(p), p=p))

@@ -1,0 +1,158 @@
+"""Pallas TPU kernel: flash attention with the MedVerse DAG mask
+computed on the fly from O(S) topology metadata (paper Eq. 3).
+
+Design (TPU-native, see DESIGN.md §3):
+  * grid (batch, q_head, q_block, kv_block), kv innermost ("arbitrary"
+    semantics) with running-softmax scratch in VMEM — the canonical TPU
+    flash schedule; q/k/v tiles are MXU-aligned (block sizes multiples
+    of 128 on real hardware; smaller in tests via interpret=True).
+  * the (S,S) mask is never materialized: each (BQ, BK) tile derives
+    Eq. 3 from seg_id/layer_id tiles resident in VMEM —
+        blocked  iff  (kv after q in packed order)
+                  or  (same frontier layer AND different segment)
+                  or  padding,
+    plus an optional sliding window on *adaptive* positions (gemma3 /
+    recurrentgemma local layers compose window AND dag).
+  * statically causal-skippable tiles (kv block entirely after the q
+    block) are skipped with pl.when — no FLOPs, no VMEM traffic.
+  * GQA: kv head index = q head // group (index_map arithmetic, no
+    repeat-interleave materialization).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+PAD_SEG = -1
+
+
+def _flash_dag_kernel(
+    # metadata tiles
+    seg_q_ref, lay_q_ref, pos_q_ref,
+    seg_k_ref, lay_k_ref, pos_k_ref,
+    # tensor tiles
+    q_ref, k_ref, v_ref,
+    # outputs
+    o_ref,
+    # scratch
+    m_ref, l_ref, acc_ref,
+    *, scale: float, block_q: int, block_k: int, n_kblocks: int,
+    window: int,
+):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # static causal block skip: kv tile strictly after q tile
+    @pl.when(ki * block_k <= qi * block_q + block_q - 1)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)          # (BQ, HD)
+        k = k_ref[0, 0].astype(jnp.float32)          # (BK, HD)
+        v = v_ref[0, 0].astype(jnp.float32)          # (BK, HD)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (BQ, BK)
+
+        seg_q = seg_q_ref[0]                          # (BQ,)
+        lay_q = lay_q_ref[0]
+        pos_q = pos_q_ref[0]
+        seg_k = seg_k_ref[0]
+        lay_k = lay_k_ref[0]
+        pos_k = pos_k_ref[0]
+        gq = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        gk = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        causal = gk <= gq                              # packed order
+        same_layer = lay_q[:, None] == lay_k[None, :]
+        same_seg = seg_q[:, None] == seg_k[None, :]
+        valid = (seg_q[:, None] != PAD_SEG) & (seg_k[None, :] != PAD_SEG)
+        allowed = causal & ~(same_layer & ~same_seg) & valid
+        if window > 0:
+            diff = pos_q[:, None] - pos_k[None, :]
+            allowed = allowed & (diff >= 0) & (diff < window)
+        s = jnp.where(allowed, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        # explicit zero for masked entries (a fully-masked tile with the
+        # running max still at -inf must not contribute exp(0) weights)
+        p = jnp.where(allowed, jnp.exp(s - m_new[:, None]), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+        acc_ref[...] = (
+            acc_ref[...] * corr[:, None]
+            + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+        )
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_kblocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def dag_flash_attention_kernel(
+    q: jnp.ndarray,       # (B, NH, S, HD)
+    k: jnp.ndarray,       # (B, NKV, S, HD)
+    v: jnp.ndarray,
+    seg_id: jnp.ndarray,  # (B, S) int32
+    layer_id: jnp.ndarray,
+    pos_id: jnp.ndarray,
+    *,
+    window: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    b, nh, s, hd = q.shape
+    nkv = k.shape[1]
+    g = nh // nkv
+    assert s % block_q == 0 and s % block_k == 0, (s, block_q, block_k)
+    n_q, n_k = s // block_q, s // block_k
+    scale = 1.0 / math.sqrt(hd)
+
+    grid = (b, nh, n_q, n_k)
+    kernel = functools.partial(
+        _flash_dag_kernel, scale=scale, block_q=block_q, block_k=block_k,
+        n_kblocks=n_k, window=window,
+    )
+    meta_q_spec = pl.BlockSpec((1, block_q), lambda b_, h, qi, ki: (b_, qi))
+    meta_k_spec = pl.BlockSpec((1, block_k), lambda b_, h, qi, ki: (b_, ki))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            meta_q_spec, meta_q_spec, meta_q_spec,
+            meta_k_spec, meta_k_spec, meta_k_spec,
+            pl.BlockSpec((1, 1, block_q, hd),
+                         lambda b_, h, qi, ki: (b_, h, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b_, h, qi, ki: (b_, h // g, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b_, h, qi, ki: (b_, h // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd),
+                               lambda b_, h, qi, ki: (b_, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, nh, s, hd), q.dtype),
+        scratch_shapes=[
+            # running max / sum / accumulator live in VMEM across kv tiles
+            # (the grid revisits the same output block along the kv axis;
+            # kv is the innermost, "arbitrary"-semantics dimension)
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(seg_id, layer_id, pos_id, seg_id, layer_id, pos_id, q, k, v)

@@ -1,0 +1,64 @@
+"""Jitted public wrapper for dag_attention: layout handling, block-size
+selection, padding, and the interpret switch (CPU validation vs TPU)."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import dag_flash_attention_kernel
+from .ref import PAD_SEG
+
+
+def _pick_block(s: int, target: int = 128) -> int:
+    if s % target == 0:
+        return target
+    for b in (64, 32, 16, 8):
+        if s % b == 0:
+            return b
+    return s
+
+
+@partial(jax.jit, static_argnames=("window", "interpret", "block_q",
+                                   "block_k"))
+def dag_attention(
+    q: jnp.ndarray,        # (B, S, NH, HD) — model layout
+    k: jnp.ndarray,        # (B, S, NKV, HD)
+    v: jnp.ndarray,
+    seg_id: jnp.ndarray,   # (B, S)
+    layer_id: jnp.ndarray,
+    pos_id: jnp.ndarray,
+    *,
+    window: int = 0,
+    block_q: int = 0,
+    block_k: int = 0,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """MedVerse DAG flash attention. Returns (B, S, NH, HD)."""
+    b, s, nh, hd = q.shape
+    bq = block_q or _pick_block(s)
+    bk = block_k or _pick_block(s)
+    pad = (-s) % max(bq, bk)
+    if pad:
+        padw = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q = jnp.pad(q, padw)
+        k = jnp.pad(k, padw)
+        v = jnp.pad(v, padw)
+        seg_id = jnp.pad(seg_id, ((0, 0), (0, pad)),
+                         constant_values=PAD_SEG)
+        layer_id = jnp.pad(layer_id, ((0, 0), (0, pad)), constant_values=-1)
+        pos_id = jnp.pad(pos_id, ((0, 0), (0, pad)))
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    out = dag_flash_attention_kernel(
+        qt, kt, vt, seg_id.astype(jnp.int32), layer_id.astype(jnp.int32),
+        pos_id.astype(jnp.int32),
+        window=window, block_q=bq, block_k=bk, interpret=interpret,
+    )
+    out = out.transpose(0, 2, 1, 3)
+    if pad:
+        out = out[:, :s]
+    return out

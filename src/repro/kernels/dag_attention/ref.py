@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the dag_attention kernel (shares the mask
+definition with repro.core.masks — Eq. 3)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+PAD_SEG = -1
+
+
+def dag_attention_ref(q, k, v, seg_id, layer_id, pos_id, *, window: int = 0):
+    """q: (B, NH, S, HD); k, v: (B, NKV, S, HD); metadata (B, S).
+    Returns (B, NH, S, HD) float32 attention output."""
+    b, nh, s, hd = q.shape
+    nkv = k.shape[1]
+    g = nh // nkv
+    idx = jnp.arange(s)
+    causal = idx[None, :] <= idx[:, None]
+    same_layer = layer_id[:, :, None] == layer_id[:, None, :]
+    same_seg = seg_id[:, :, None] == seg_id[:, None, :]
+    valid = (seg_id[:, :, None] != PAD_SEG) & (seg_id[:, None, :] != PAD_SEG)
+    allowed = causal[None] & ~(same_layer & ~same_seg) & valid
+    if window > 0:
+        diff = pos_id[:, :, None] - pos_id[:, None, :]
+        allowed = allowed & (diff >= 0) & (diff < window)
+    qg = q.reshape(b, nkv, g, s, hd).astype(jnp.float32)
+    sc = jnp.einsum("bkgqh,bksh->bkgqs", qg, k.astype(jnp.float32))
+    sc = sc / math.sqrt(hd)
+    sc = jnp.where(allowed[:, None, None], sc, NEG_INF)
+    w = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bkgqs,bksh->bkgqh", w, v.astype(jnp.float32))
+    return out.reshape(b, nh, s, hd)

@@ -1,0 +1,139 @@
+"""Pallas TPU kernel: paged GQA decode attention — the TPU-native
+analogue of radix attention (paper Sec. 4.3; DESIGN.md §3).
+
+One query token per stream attends over its *page chain*: the page
+table is a scalar-prefetch argument (SMEM), and the BlockSpec index_map
+reads it to stream exactly the chain's pages HBM->VMEM — no pointer
+chasing, no gather materialization. Fork/Join never copy KV: they only
+edit the host-side page table this kernel consumes.
+
+Layout:
+  q           (B, NKV, G, HD)   one token per stream, GQA groups
+  k/v pool    (n_pages, page_size, NKV, HD)
+  pool_pos    (n_pages, page_size) int32  adaptive position per slot
+  page_table  (B, P_max) int32   prefetched
+  page_valid  (B, P_max) int32   tokens used in each page (0 = unused)
+  q_pos       (B,) int32         prefetched
+
+Grid (B, NKV, P_max) with the page axis innermost (arbitrary semantics),
+running-softmax scratch in VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_decode_kernel(
+    # scalar prefetch
+    page_table_ref, page_valid_ref, q_pos_ref,
+    # tensors
+    q_ref,        # (1, 1, G, HD)
+    k_page_ref,   # (1, page_size, 1, HD)
+    v_page_ref,
+    pos_page_ref,  # (1, page_size)
+    # out
+    o_ref,        # (1, 1, G, HD)
+    # scratch
+    m_ref, l_ref, acc_ref,
+    *, page_size: int, n_pages_max: int, scale: float, window: int,
+):
+    b = pl.program_id(0)
+    pi = pl.program_id(2)
+
+    @pl.when(pi == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    n_valid = page_valid_ref[b, pi]
+
+    @pl.when(n_valid > 0)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)               # (G, HD)
+        k = k_page_ref[0, :, 0].astype(jnp.float32)       # (page, HD)
+        v = v_page_ref[0, :, 0].astype(jnp.float32)
+        kv_pos = pos_page_ref[0]                          # (page,)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (G, page)
+        i = jax.lax.broadcasted_iota(jnp.int32, (page_size,), 0)
+        visible = (i < n_valid) & (kv_pos <= q_pos_ref[b])
+        if window > 0:
+            diff = q_pos_ref[b] - kv_pos
+            visible = visible & (diff >= 0) & (diff < window)
+        s = jnp.where(visible[None, :], s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        # explicit zero for masked entries: if every entry seen so far is
+        # masked, m_new == NEG_INF and exp(s - m_new) would be 1, not 0
+        p = jnp.where(visible[None, :], jnp.exp(s - m_new[:, None]), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(pi == n_pages_max - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def paged_decode_attention_kernel(
+    q: jnp.ndarray,           # (B, NKV, G, HD)
+    k_pool: jnp.ndarray,      # (n_pages, page_size, NKV, HD)
+    v_pool: jnp.ndarray,
+    pool_pos: jnp.ndarray,    # (n_pages, page_size) int32
+    page_table: jnp.ndarray,  # (B, P_max) int32
+    page_valid: jnp.ndarray,  # (B, P_max) int32
+    q_pos: jnp.ndarray,       # (B,) int32
+    *, window: int = 0, interpret: bool = False,
+) -> jnp.ndarray:
+    b, nkv, g, hd = q.shape
+    n_pages, page_size = k_pool.shape[:2]
+    p_max = page_table.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    kernel = functools.partial(
+        _paged_decode_kernel, page_size=page_size, n_pages_max=p_max,
+        scale=scale, window=window,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(b, nkv, p_max),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, hd),
+                         lambda b_, h, pi, pt, pv, qp: (b_, h, 0, 0)),
+            # the page streamed in is chosen BY the prefetched table
+            pl.BlockSpec((1, page_size, 1, hd),
+                         lambda b_, h, pi, pt, pv, qp: (pt[b_, pi], 0, h, 0)),
+            pl.BlockSpec((1, page_size, 1, hd),
+                         lambda b_, h, pi, pt, pv, qp: (pt[b_, pi], 0, h, 0)),
+            pl.BlockSpec((1, page_size),
+                         lambda b_, h, pi, pt, pv, qp: (pt[b_, pi], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd),
+                               lambda b_, h, pi, pt, pv, qp: (b_, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, nkv, g, hd), q.dtype),
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), page_valid.astype(jnp.int32),
+      q_pos.astype(jnp.int32), q, k_pool, v_pool, pool_pos)

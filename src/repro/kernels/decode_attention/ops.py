@@ -1,0 +1,32 @@
+"""Jitted wrapper for paged decode attention."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import paged_decode_attention_kernel
+
+
+@partial(jax.jit, static_argnames=("window", "interpret"))
+def paged_decode_attention(
+    q: jnp.ndarray,           # (B, NH, HD) model layout
+    k_pool: jnp.ndarray,      # (n_pages, page_size, NKV, HD)
+    v_pool: jnp.ndarray,
+    pool_pos: jnp.ndarray,    # (n_pages, page_size)
+    page_table: jnp.ndarray,  # (B, P_max)
+    page_valid: jnp.ndarray,  # (B, P_max)
+    q_pos: jnp.ndarray,       # (B,)
+    *, window: int = 0, interpret: bool = True,
+) -> jnp.ndarray:
+    """Returns (B, NH, HD)."""
+    b, nh, hd = q.shape
+    nkv = k_pool.shape[2]
+    g = nh // nkv
+    qg = q.reshape(b, nkv, g, hd)
+    out = paged_decode_attention_kernel(
+        qg, k_pool, v_pool, pool_pos, page_table, page_valid, q_pos,
+        window=window, interpret=interpret)
+    return out.reshape(b, nh, hd)

@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for paged decode attention."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def paged_decode_attention_ref(q, k_pool, v_pool, pool_pos, page_table,
+                               page_valid, q_pos, *, window: int = 0):
+    """Dense gather + masked softmax. Shapes as in kernel.py."""
+    b, nkv, g, hd = q.shape
+    n_pages, page_size = k_pool.shape[:2]
+    p_max = page_table.shape[1]
+    # gather chain tokens: (B, P_max, page, NKV, HD)
+    k = k_pool[page_table]
+    v = v_pool[page_table]
+    pos = pool_pos[page_table]                       # (B, P_max, page)
+    i = jnp.arange(page_size)
+    visible = i[None, None, :] < page_valid[:, :, None]
+    visible = visible & (pos <= q_pos[:, None, None])
+    if window > 0:
+        diff = q_pos[:, None, None] - pos
+        visible = visible & (diff >= 0) & (diff < window)
+    k = k.reshape(b, p_max * page_size, nkv, hd)
+    v = v.reshape(b, p_max * page_size, nkv, hd)
+    vis = visible.reshape(b, p_max * page_size)
+    sc = jnp.einsum("bkgh,bskh->bkgs", q.astype(jnp.float32),
+                    k.astype(jnp.float32)) / math.sqrt(hd)
+    sc = jnp.where(vis[:, None, None, :], sc, NEG_INF)
+    w = jax.nn.softmax(sc, axis=-1)
+    # fully-masked rows produce 0 (kernel convention), not a uniform avg
+    any_vis = vis.any(axis=-1)[:, None, None, None]
+    w = jnp.where(any_vis, w, 0.0)
+    return jnp.einsum("bkgs,bskh->bkgh", w, v.astype(jnp.float32))

@@ -1,0 +1,66 @@
+"""Pallas TPU kernel: RG-LRU linear recurrence (RecurrentGemma),
+
+    h_t = a_t * h_{t-1} + b_t        (elementwise over width W)
+
+blocked as (batch, width-block, seq-chunk) with the carry held in VMEM
+scratch across sequence chunks (innermost, "arbitrary" grid axis). The
+inner chunk loop is a VPU-elementwise fori_loop — no MXU involvement,
+so the tile is sized for VMEM residency of (chunk, width-block).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rglru_kernel(a_ref, b_ref, h0_ref, o_ref, carry_ref, *, chunk: int):
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        carry_ref[...] = h0_ref[0].astype(jnp.float32)
+
+    a = a_ref[0].astype(jnp.float32)   # (chunk, BW)
+    b = b_ref[0].astype(jnp.float32)
+
+    def step(t, carry):
+        h = a[t] * carry + b[t]
+        o_ref[0, t] = h.astype(o_ref.dtype)
+        return h
+
+    carry_ref[...] = jax.lax.fori_loop(0, chunk, step, carry_ref[...])
+
+
+def rglru_scan_kernel(
+    a: jnp.ndarray,    # (B, S, W) decay in (0,1)
+    b: jnp.ndarray,    # (B, S, W) gated input
+    h0: jnp.ndarray,   # (B, W) initial state
+    *, block_w: int = 128, chunk: int = 128, interpret: bool = False,
+) -> jnp.ndarray:
+    bsz, s, w = a.shape
+    block_w = min(block_w, w)
+    chunk = min(chunk, s)
+    assert w % block_w == 0 and s % chunk == 0, (w, block_w, s, chunk)
+    grid = (bsz, w // block_w, s // chunk)
+    kernel = functools.partial(_rglru_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, block_w),
+                         lambda b_, wi, si: (b_, si, wi)),
+            pl.BlockSpec((1, chunk, block_w),
+                         lambda b_, wi, si: (b_, si, wi)),
+            pl.BlockSpec((1, block_w), lambda b_, wi, si: (b_, wi)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, block_w),
+                               lambda b_, wi, si: (b_, si, wi)),
+        out_shape=jax.ShapeDtypeStruct((bsz, s, w), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_w,), jnp.float32)],
+        interpret=interpret,
+    )(a, b, h0)

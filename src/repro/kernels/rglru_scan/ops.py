@@ -1,0 +1,31 @@
+"""Jitted wrapper for the RG-LRU scan kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import rglru_scan_kernel
+
+
+def _pick(n: int, target: int) -> int:
+    if n % target == 0:
+        return target
+    for c in (64, 32, 16, 8, 4, 2, 1):
+        if n % c == 0:
+            return c
+    return 1
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def rglru_scan(a: jnp.ndarray, b: jnp.ndarray,
+               h0: jnp.ndarray = None, *, interpret: bool = True
+               ) -> jnp.ndarray:
+    bsz, s, w = a.shape
+    if h0 is None:
+        h0 = jnp.zeros((bsz, w), jnp.float32)
+    return rglru_scan_kernel(
+        a, b, h0, block_w=_pick(w, 128), chunk=_pick(s, 128),
+        interpret=interpret)

@@ -1,0 +1,23 @@
+"""Oracle: associative-scan RG-LRU (same math as models.rglru)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_scan_ref(a: jnp.ndarray, b: jnp.ndarray,
+                   h0: jnp.ndarray) -> jnp.ndarray:
+    """h_t = a_t h_{t-1} + b_t with initial state h0. (B,S,W) -> (B,S,W)."""
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+    a = a.at[:, 0].set(0.0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a2 * a1, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h

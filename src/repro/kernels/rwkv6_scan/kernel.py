@@ -1,0 +1,71 @@
+"""Pallas TPU kernel: RWKV-6 WKV recurrence with data-dependent decay,
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    y_t = (S_{t-1} + diag(u) k_t v_t^T)^T r_t
+
+blocked as (batch, head, seq-chunk): the (n, n) per-head state lives in
+VMEM scratch across chunks; each timestep is a VPU outer-product update
+(n = 64 for rwkv6-3b — a (64, 64) f32 tile).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref,
+                state_ref, *, chunk: int):
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        state_ref[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    r = r_ref[0, :, 0].astype(jnp.float32)   # (chunk, n)
+    k = k_ref[0, :, 0].astype(jnp.float32)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    w = w_ref[0, :, 0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)         # (n,)
+
+    def step(t, state):
+        kv = k[t][:, None] * v[t][None, :]                 # (n, n)
+        y = jnp.einsum("ij,i->j", state + u[:, None] * kv, r[t])
+        y_ref[0, t, 0] = y.astype(y_ref.dtype)
+        return w[t][:, None] * state + kv
+
+    state_ref[...] = jax.lax.fori_loop(0, chunk, step, state_ref[...])
+
+
+def rwkv6_scan_kernel(
+    r: jnp.ndarray,   # (B, S, H, n)
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    w: jnp.ndarray,   # decay in (0,1)
+    u: jnp.ndarray,   # (H, n) bonus
+    s0: jnp.ndarray,  # (B, H, n, n) initial state
+    *, chunk: int = 64, interpret: bool = False,
+) -> jnp.ndarray:
+    bsz, s, h, n = r.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    grid = (bsz, h, s // chunk)
+    kernel = functools.partial(_wkv_kernel, chunk=chunk)
+    seq_spec = pl.BlockSpec((1, chunk, 1, n), lambda b_, h_, si: (b_, si, h_, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            seq_spec, seq_spec, seq_spec, seq_spec,
+            pl.BlockSpec((1, n), lambda b_, h_, si: (h_, 0)),
+            pl.BlockSpec((1, 1, n, n), lambda b_, h_, si: (b_, h_, 0, 0)),
+        ],
+        out_specs=seq_spec,
+        out_shape=jax.ShapeDtypeStruct((bsz, s, h, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((n, n), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u, s0)

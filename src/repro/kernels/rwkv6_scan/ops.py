@@ -1,0 +1,28 @@
+"""Jitted wrapper for the RWKV-6 WKV kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import rwkv6_scan_kernel
+
+
+def _pick(n: int, target: int) -> int:
+    if n % target == 0:
+        return target
+    for c in (32, 16, 8, 4, 2, 1):
+        if n % c == 0:
+            return c
+    return 1
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def rwkv6_scan(r, k, v, w, u, s0=None, *, interpret: bool = True):
+    bsz, s, h, n = r.shape
+    if s0 is None:
+        s0 = jnp.zeros((bsz, h, n, n), jnp.float32)
+    return rwkv6_scan_kernel(r, k, v, w, u, s0,
+                             chunk=_pick(s, 64), interpret=interpret)

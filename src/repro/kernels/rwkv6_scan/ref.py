@@ -1,0 +1,24 @@
+"""Oracle: sequential WKV scan (same math as models.rwkv.wkv_scan_ref)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rwkv6_scan_ref(r, k, v, w, u, s0):
+    """r,k,v,w: (B,S,H,n); u: (H,n); s0: (B,H,n,n) -> y (B,S,H,n)."""
+    rs = r.astype(jnp.float32).transpose(1, 0, 2, 3)
+    ks = k.astype(jnp.float32).transpose(1, 0, 2, 3)
+    vs = v.astype(jnp.float32).transpose(1, 0, 2, 3)
+    ws = w.astype(jnp.float32).transpose(1, 0, 2, 3)
+    u = u.astype(jnp.float32)
+
+    def step(state, inp):
+        r_t, k_t, v_t, w_t = inp
+        kv = k_t[..., :, None] * v_t[..., None, :]
+        y = jnp.einsum("bhij,bhi->bhj", state + u[..., :, None] * kv, r_t)
+        return w_t[..., :, None] * state + kv, y
+
+    _, ys = jax.lax.scan(step, s0.astype(jnp.float32), (rs, ks, vs, ws))
+    return ys.transpose(1, 0, 2, 3)

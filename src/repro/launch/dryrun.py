@@ -1,0 +1,288 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ^ MUST be the first two lines, before any other import: jax locks the
+# device count at first init, and the dry-run needs 512 placeholder host
+# devices to build the production meshes (16x16 single-pod; 2x16x16
+# multi-pod). Never set this in conftest/pyproject — tests and benches
+# must see 1 device.
+
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import SHAPES, get_config
+from ..configs.shapes import InputShape, train_input_specs
+from ..models import TopoBatch, decode_step, forward, init_cache, init_params
+from ..models import meshctx
+from ..train import AdamWConfig, init_opt_state, make_train_step
+from .mesh import make_production_mesh, mesh_axes
+from .roofline import model_flops, parse_collectives, roofline_from_compiled
+from .sharding import batch_specs, cache_specs_tree, opt_state_specs, param_specs
+
+# long_500k applicability (DESIGN.md §4): sub-quadratic decode state only.
+LONG_OK = {"gemma3-1b", "recurrentgemma-2b", "rwkv6-3b"}
+_FSDP_OVERRIDE: Optional[bool] = None
+_SEQ_SHARD = False
+_SHARDED_OUT = False
+
+
+def sds_tree(f, *args):
+    return jax.eval_shape(f, *args)
+
+
+def estimate_device_bytes(tree: Any, specs: Any, mesh) -> int:
+    """Per-device bytes of a sharded pytree of ShapeDtypeStructs."""
+    total = 0
+    for leaf, spec in zip(jax.tree_util.tree_leaves(tree),
+                          jax.tree_util.tree_leaves(
+                              specs, is_leaf=lambda x: isinstance(x, P))):
+        n = int(np.prod(leaf.shape)) if leaf.shape else 1
+        denom = 1
+        for ax in tuple(spec):
+            if ax is None:
+                continue
+            if isinstance(ax, tuple):
+                for a in ax:
+                    denom *= mesh.shape[a]
+            else:
+                denom *= mesh.shape[ax]
+        total += (n // max(denom, 1)) * leaf.dtype.itemsize
+    return total
+
+
+def lower_train(cfg, shape: InputShape, mesh):
+    """Lower a full train step (fwd + bwd + AdamW) for the mesh."""
+    specs_in = train_input_specs(cfg, shape)
+    params_sds = sds_tree(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    opt_sds = sds_tree(lambda: init_opt_state(params_sds))
+    pspecs = param_specs(cfg, params_sds, mesh, fsdp=_FSDP_OVERRIDE)
+    ospecs = opt_state_specs(cfg, pspecs)
+    bspecs = batch_specs(cfg, specs_in, mesh, seq_shard=_SEQ_SHARD)
+    step = make_train_step(cfg, AdamWConfig())
+
+    jitted = jax.jit(
+        step,
+        in_shardings=(pspecs, ospecs, bspecs),
+        out_shardings=(pspecs, ospecs, None),
+        donate_argnums=(0, 1),
+    )
+    lowered = jitted.lower(params_sds, opt_sds, specs_in)
+    arg_bytes = (
+        estimate_device_bytes(params_sds, pspecs, mesh)
+        + estimate_device_bytes(opt_sds["mu"], pspecs, mesh) * 2
+        + estimate_device_bytes(specs_in, bspecs, mesh)
+    )
+    n_tokens = shape.global_batch * shape.seq_len
+    return lowered, arg_bytes, n_tokens, "train"
+
+
+def lower_prefill(cfg, shape: InputShape, mesh):
+    """Prefill: full-sequence forward producing logits (inference)."""
+    b, s = shape.global_batch, shape.seq_len
+    specs_in = train_input_specs(cfg, shape)
+    specs_in.pop("targets")
+    specs_in.pop("loss_mask")
+    params_sds = sds_tree(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    pspecs = param_specs(cfg, params_sds, mesh, fsdp=False)
+    bspecs = batch_specs(cfg, specs_in, mesh, seq_shard=_SEQ_SHARD)
+
+    def prefill_step(params, batch):
+        topo = TopoBatch(seg_id=batch["seg_id"], layer_id=batch["layer_id"],
+                         pos_id=batch["pos_id"])
+        kw = {}
+        if cfg.vision is not None and "image_embeds" in batch:
+            kw["image_embeds"] = batch["image_embeds"]
+        if cfg.encoder is not None and "audio_embeds" in batch:
+            kw["audio_embeds"] = batch["audio_embeds"]
+        logits, _ = forward(params, batch["tokens"], topo, cfg, **kw)
+        return logits
+
+    daxes_p, _ = mesh_axes(mesh)
+    out_spec = (P(daxes_p, "model" if _SEQ_SHARD else None, "model")
+                if False else P(daxes_p, None, "model"))
+    jitted = jax.jit(prefill_step, in_shardings=(pspecs, bspecs),
+                     out_shardings=(out_spec if _SHARDED_OUT else None))
+    lowered = jitted.lower(params_sds, specs_in)
+    arg_bytes = (estimate_device_bytes(params_sds, pspecs, mesh)
+                 + estimate_device_bytes(specs_in, bspecs, mesh))
+    return lowered, arg_bytes, shape.global_batch * shape.seq_len, "prefill"
+
+
+def lower_decode(cfg, shape: InputShape, mesh):
+    """serve_step: ONE new token against a KV cache of seq_len."""
+    b, s = shape.global_batch, shape.seq_len
+    params_sds = sds_tree(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    cache_sds = sds_tree(lambda: init_cache(cfg, b, s))
+    pspecs = param_specs(cfg, params_sds, mesh, fsdp=False)
+    cspecs = cache_specs_tree(cfg, cache_sds, mesh)
+    daxes, _ = mesh_axes(mesh)
+    import numpy as _np
+    dsize = int(_np.prod([mesh.shape[a] for a in daxes]))
+    tok_spec = P(daxes) if b % dsize == 0 and b > 1 else P()
+
+    def serve_step(params, cache, token_t, write_index, q_pos):
+        return decode_step(params, cache, token_t, write_index, q_pos, cfg)
+
+    jitted = jax.jit(
+        serve_step,
+        in_shardings=(pspecs, cspecs, tok_spec, None, tok_spec),
+        out_shardings=(None, cspecs),
+        donate_argnums=(1,),
+    )
+    tok_sds = jax.ShapeDtypeStruct((b,), jnp.int32)
+    wi_sds = jax.ShapeDtypeStruct((), jnp.int32)
+    lowered = jitted.lower(params_sds, cache_sds, tok_sds, wi_sds, tok_sds)
+    arg_bytes = (estimate_device_bytes(params_sds, pspecs, mesh)
+                 + estimate_device_bytes(cache_sds, cspecs, mesh))
+    return lowered, arg_bytes, b, "decode"
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool,
+            out_dir: Optional[str] = None, verbose: bool = True,
+            no_scan: bool = False, attn_impl: Optional[str] = None,
+            remat: Optional[bool] = None, fsdp: Optional[str] = None,
+            seq_shard: bool = False, sharded_out: bool = False,
+            tag: str = "") -> Dict:
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    daxes, maxis = mesh_axes(mesh)
+    jax.set_mesh(mesh)
+    meshctx.set_mesh(mesh, daxes, maxis)
+    n_chips = mesh.size
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": n_chips, "status": "unknown",
+    }
+    if shape_name == "long_500k" and arch not in LONG_OK:
+        rec["status"] = "skipped"
+        rec["reason"] = "full-attention arch; long_500k skip per DESIGN.md §4"
+        return _emit(rec, out_dir, verbose)
+    if shape.kind == "decode" and cfg.max_seq_len < shape.seq_len:
+        cfg = __import__("dataclasses").replace(cfg, max_seq_len=shape.seq_len)
+    if no_scan:
+        # Unrolled layers: XLA cost_analysis counts a lax.scan body ONCE
+        # regardless of trip count, so the roofline pass unrolls to get
+        # honest per-device FLOP/byte totals (see EXPERIMENTS.md §Dry-run).
+        cfg = __import__("dataclasses").replace(cfg, scan_layers=False)
+        rec["unrolled"] = True
+    # §Perf hillclimb knobs (EXPERIMENTS.md records these per iteration)
+    if attn_impl:
+        cfg = __import__("dataclasses").replace(cfg, attn_impl=attn_impl)
+        rec["attn_impl"] = attn_impl
+    if remat is not None:
+        cfg = __import__("dataclasses").replace(cfg, remat=remat)
+        rec["remat"] = remat
+    if fsdp in ("on", "off"):
+        global _FSDP_OVERRIDE
+        _FSDP_OVERRIDE = fsdp == "on"
+        rec["fsdp"] = fsdp
+    if seq_shard:
+        global _SEQ_SHARD
+        _SEQ_SHARD = True
+        rec["seq_shard"] = True
+    if sharded_out:
+        global _SHARDED_OUT
+        _SHARDED_OUT = True
+        rec["sharded_out"] = True
+    if tag:
+        rec["tag"] = tag
+    t0 = time.time()
+    try:
+        if shape.kind == "train":
+            lowered, arg_bytes, n_tokens, kind = lower_train(cfg, shape, mesh)
+        elif shape.kind == "prefill":
+            lowered, arg_bytes, n_tokens, kind = lower_prefill(cfg, shape, mesh)
+        else:
+            lowered, arg_bytes, n_tokens, kind = lower_decode(cfg, shape, mesh)
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+        try:
+            ma = compiled.memory_analysis()
+            rec["memory_analysis"] = {
+                k: int(getattr(ma, k))
+                for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                          "temp_size_in_bytes", "generated_code_size_in_bytes")
+                if hasattr(ma, k)
+            }
+        except Exception as e:  # CPU backend may not implement it
+            rec["memory_analysis"] = f"unavailable: {e}"
+        rec["arg_bytes_per_device_est"] = int(arg_bytes)
+        hlo = compiled.as_text()
+        roof, coll = roofline_from_compiled(compiled, n_chips, hlo)
+        rec["roofline"] = roof.as_dict()
+        rec["collectives"] = {
+            "bytes_by_kind": coll.bytes_by_kind,
+            "count_by_kind": coll.count_by_kind,
+        }
+        mf = model_flops(cfg, n_tokens, "train" if kind == "train" else "serve")
+        rec["model_flops_global"] = mf
+        hlo_flops_global = roof.flops_per_device * n_chips
+        rec["useful_flops_ratio"] = (
+            mf / hlo_flops_global if hlo_flops_global else None
+        )
+        rec["status"] = "ok"
+    except Exception as e:
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    rec["total_s"] = round(time.time() - t0, 1)
+    return _emit(rec, out_dir, verbose)
+
+
+def _emit(rec: Dict, out_dir: Optional[str], verbose: bool) -> Dict:
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        suffix = "__unrolled" if rec.get("unrolled") else ""
+        if rec.get("tag"):
+            suffix += f"__{rec['tag']}"
+        fn = (f"{rec['arch']}__{rec['shape']}__"
+              f"{rec['mesh'].replace('x','_')}{suffix}.json")
+        with open(os.path.join(out_dir, fn), "w") as f:
+            json.dump(rec, f, indent=2, default=str)
+    if verbose:
+        brief = {k: v for k, v in rec.items() if k != "traceback"}
+        print(json.dumps(brief, indent=2, default=str))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser(description="MedVerse multi-pod dry-run")
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True, choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--no-scan", action="store_true",
+                    help="unroll layer scans for honest cost_analysis")
+    ap.add_argument("--attn-impl", default=None,
+                    choices=["naive", "chunked"])
+    ap.add_argument("--remat", default=None, choices=["on", "off"])
+    ap.add_argument("--fsdp", default=None, choices=["on", "off"])
+    ap.add_argument("--seq-shard", action="store_true",
+                    help="shard sequence dim over model axis (TP+SP)")
+    ap.add_argument("--sharded-out", action="store_true",
+                    help="keep prefill logits vocab-sharded on output")
+    ap.add_argument("--tag", default="",
+                    help="suffix for the output json (perf iterations)")
+    args = ap.parse_args()
+    rec = run_one(args.arch, args.shape, args.multi_pod, args.out,
+                  no_scan=args.no_scan, attn_impl=args.attn_impl,
+                  remat=None if args.remat is None else args.remat == "on",
+                  fsdp=args.fsdp, seq_shard=args.seq_shard,
+                  sharded_out=args.sharded_out, tag=args.tag)
+    raise SystemExit(0 if rec["status"] in ("ok", "skipped") else 1)
+
+
+if __name__ == "__main__":
+    main()

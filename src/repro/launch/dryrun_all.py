@@ -1,0 +1,75 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Batch driver: runs every (arch x shape x mesh) dry-run as a
+subprocess (fresh process per pair keeps XLA state and memory bounded on
+the 1-core container) and aggregates results/dryrun/*.json.
+
+Passes:
+  scanned   — compile-proof + memory_analysis, single-pod AND multi-pod
+  unrolled  — roofline source (scan bodies unrolled so cost_analysis
+              counts every layer), single-pod only
+"""
+
+import argparse
+import json
+import subprocess
+import sys
+import time
+
+ARCHS = [
+    "llama3.2-1b", "gemma3-1b", "starcoder2-3b", "rwkv6-3b",
+    "recurrentgemma-2b", "whisper-large-v3", "phi-3-vision-4.2b",
+    "medverse-7b", "qwen3-32b", "dbrx-132b", "deepseek-v3-671b",
+]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def run(arch, shape, multi_pod=False, no_scan=False, out="results/dryrun",
+        timeout=5400):
+    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+           "--arch", arch, "--shape", shape, "--out", out]
+    if multi_pod:
+        cmd.append("--multi-pod")
+    if no_scan:
+        cmd.append("--no-scan")
+    t0 = time.time()
+    try:
+        r = subprocess.run(cmd, capture_output=True, text=True,
+                           timeout=timeout,
+                           env={**os.environ, "PYTHONPATH": "src"})
+        ok = r.returncode == 0
+        tail = (r.stdout + r.stderr)[-400:]
+    except subprocess.TimeoutExpired:
+        ok, tail = False, "TIMEOUT"
+    tag = f"{arch}/{shape}/{'pod2' if multi_pod else 'pod1'}" + (
+        "/unrolled" if no_scan else "")
+    print(f"[{time.strftime('%H:%M:%S')}] {tag}: "
+          f"{'OK' if ok else 'FAIL'} ({time.time()-t0:.0f}s)", flush=True)
+    if not ok:
+        print(tail, flush=True)
+    return ok
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pass", dest="mode", default="scanned",
+                    choices=["scanned", "multipod", "unrolled"])
+    ap.add_argument("--archs", nargs="*", default=ARCHS)
+    ap.add_argument("--shapes", nargs="*", default=SHAPES)
+    args = ap.parse_args()
+    n_fail = 0
+    for arch in args.archs:
+        for shape in args.shapes:
+            if args.mode == "scanned":
+                n_fail += not run(arch, shape)
+            elif args.mode == "multipod":
+                n_fail += not run(arch, shape, multi_pod=True)
+            else:
+                n_fail += not run(arch, shape, no_scan=True)
+    print(f"DONE pass={args.mode} failures={n_fail}", flush=True)
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Production mesh construction.
+
+Target: TPU v5e, 256 chips/pod. Single-pod mesh (16 data x 16 model);
+multi-pod adds a leading "pod" axis (2 x 16 x 16 = 512 chips).
+
+Defined as a FUNCTION so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS before first jax init).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)} — "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "before importing jax (dryrun.py does this)."
+        )
+    return jax.make_mesh(
+        shape, axes, devices=devices[:n],
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+    )
+
+
+def make_host_mesh() -> jax.sharding.Mesh:
+    """Trivial 1x1 mesh for CPU tests of the pjit path."""
+    return jax.make_mesh(
+        (1, 1), ("data", "model"), devices=jax.devices()[:1],
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )
+
+
+def mesh_axes(mesh: jax.sharding.Mesh) -> Tuple[Tuple[str, ...], str]:
+    """Returns (data_axes, model_axis) for a production mesh."""
+    names = mesh.axis_names
+    data_axes = tuple(a for a in names if a in ("pod", "data"))
+    return data_axes, "model"

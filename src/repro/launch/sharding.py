@@ -1,0 +1,220 @@
+"""Per-architecture sharding rules: PartitionSpec pytrees for params,
+optimizer state, train batches, and decode caches.
+
+Policy (baseline; §Perf iterates on this):
+  * tensor parallel over ``model``: attention heads / FFN hidden / vocab /
+    MoE experts / recurrent channels.
+  * batch over the data axes (``("pod","data")`` on the multi-pod mesh).
+  * FSDP (ZeRO-style) over the data axes for large archs so optimizer
+    states fit: the non-model dim of every matrix is sharded over data.
+  * every rule checks divisibility and degrades to replication rather
+    than producing an invalid spec.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from ..models.config import ModelConfig
+
+# archs whose optimizer state cannot fit replicated over data
+FSDP_ARCHS = {"qwen3-32b", "dbrx-132b", "deepseek-v3-671b", "medverse-7b",
+              "phi-3-vision-4.2b"}
+
+
+def _div(n: int, mesh: jax.sharding.Mesh, axis) -> bool:
+    if axis is None:
+        return True
+    if isinstance(axis, tuple):
+        size = int(np.prod([mesh.shape[a] for a in axis]))
+    else:
+        size = mesh.shape[axis]
+    return n % size == 0
+
+
+def _spec_for(path: str, shape: Tuple[int, ...], mesh, model, fsdp,
+              cfg: Optional[ModelConfig] = None):
+    """Choose the spec for one (unstacked) parameter."""
+    name = path.split("/")[-1]
+    d = len(shape)
+    msize = mesh.shape[model]
+    # Attention projections may only shard on whole-head boundaries:
+    # splitting head_dim across shards turns the score contraction into
+    # partial sums and XLA all-reduces the (S,S) f32 scores — measured
+    # 223 GB/device on gemma3 prefill (EXPERIMENTS.md §Perf H2-iter4).
+    if cfg is not None and name in ("wq", "wo"):
+        head_ok = cfg.n_heads % msize == 0
+    elif cfg is not None and name in ("wk", "wv"):
+        head_ok = cfg.n_kv_heads % msize == 0
+    else:
+        head_ok = True
+    if name in ("wq", "wk", "wv", "wo") and not head_ok:
+        return P(*((fsdp,) + (None,) * (d - 1))) if d == 2 and _div(
+            shape[0], mesh, fsdp) else P(*([None] * d))
+
+    def ok(spec_axes):
+        # degrade per-dim if not divisible
+        final = []
+        for dim, ax in zip(shape, spec_axes):
+            final.append(ax if _div(dim, mesh, ax) else None)
+        return P(*final)
+
+    if name in ("table",):          # embed (V, D)
+        return ok((model, fsdp))
+    if name == "lm_head":
+        return ok((fsdp, model))
+    if name == "pos_table":
+        return ok((None, model))
+    if name in ("wq", "wk", "wv", "w_in", "w_gate", "w_y", "w_x",
+                "w_r", "w_k", "w_v", "w_g", "w_uq", "w_uk", "w_uv"):
+        return ok((fsdp, model)) if d == 2 else P(*([None] * d))
+    if name in ("wo", "w_out", "w_o"):
+        return ok((model, fsdp)) if d == 2 else P(*([None] * d))
+    if name in ("w_dq", "w_dkv", "router", "proj",
+                "mix_lora_a", "decay_lora_a", "decay_lora_b",
+                "vision_proj"):
+        return ok((fsdp, None)) if d == 2 else P(*([None] * d))
+    if name in ("conv_w",):
+        return ok((None, model))
+    if name in ("conv_b", "lambda", "bonus_u", "ln_scale"):
+        return ok((model,))
+    if name in ("gate_i", "gate_r"):
+        return ok((model, None, None))
+    if name == "mix_lora_b":
+        return P(*([None] * d))
+    return P(*([None] * d))  # norms, scalars, mu vectors
+
+
+def _moe_expert_spec(path, shape, mesh, model, fsdp):
+    name = path.split("/")[-1]
+    if name in ("w_in", "w_gate"):
+        sp = [model, fsdp, None]
+    elif name == "w_out":
+        sp = [model, None, fsdp]
+    else:
+        return None
+    final = [ax if _div(dim, mesh, ax) else None for dim, ax in zip(shape, sp)]
+    return P(*final)
+
+
+def param_specs(cfg: ModelConfig, params: Any, mesh: jax.sharding.Mesh,
+                fsdp: Optional[bool] = None) -> Any:
+    """PartitionSpec pytree matching ``params`` (arrays or SDS)."""
+    data_axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    model = "model"
+    fsdp_ax = data_axes if (fsdp if fsdp is not None
+                            else cfg.name in FSDP_ARCHS) else None
+
+    def visit(path_entries, leaf) -> P:
+        keys = []
+        for p in path_entries:
+            keys.append(str(getattr(p, "key", getattr(p, "idx", p))))
+        path = "/".join(keys)
+        shape = tuple(leaf.shape)
+        stacked = "stages" in keys and "ffn" not in () # placeholder
+        # leading stack axis for stage params: detect via known leaf rank
+        # by trying the rule on the trailing dims.
+        is_stage = "stages" in keys or "layers" in keys
+        core_shape = shape[1:] if is_stage and len(shape) >= 1 else shape
+        # MoE expert tensors are 3-D (E, D, F) *before* stacking
+        if "ffn" in keys and len(core_shape) == 3 and cfg.moe is not None:
+            sp = _moe_expert_spec(path, core_shape, mesh, model, fsdp_ax)
+            if sp is None:
+                sp = _spec_for(path, core_shape, mesh, model, fsdp_ax, cfg)
+        else:
+            sp = _spec_for(path, core_shape, mesh, model, fsdp_ax, cfg)
+        if is_stage:
+            sp = P(*((None,) + tuple(sp)))
+        if len(tuple(sp)) != len(shape):
+            # pad/trim defensively to rank
+            axes = (tuple(sp) + (None,) * len(shape))[: len(shape)]
+            sp = P(*axes)
+        return sp
+
+    return jax.tree_util.tree_map_with_path(visit, params)
+
+
+def opt_state_specs(cfg: ModelConfig, pspecs: Any) -> Dict[str, Any]:
+    return {
+        "mu": pspecs,
+        "nu": pspecs,
+        "step": P(),
+    }
+
+
+def batch_specs(cfg: ModelConfig, batch: Any, mesh,
+                seq_shard: bool = False) -> Any:
+    """Batch dim over the data axes; with ``seq_shard`` the sequence dim
+    is additionally sharded over ``model`` (hybrid TP+SP — shrinks the
+    per-layer tensor-parallel all-reduce by the model-axis size; §Perf
+    iteration H2)."""
+    data_axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    dsize = int(np.prod([mesh.shape[a] for a in data_axes]))
+    msize = mesh.shape.get("model", 1) if hasattr(mesh.shape, "get") else mesh.shape["model"]
+
+    def visit(path_entries, leaf):
+        shape = tuple(leaf.shape)
+        axes = [None] * len(shape)
+        if len(shape) >= 1 and shape[0] % dsize == 0 and shape[0] > 1:
+            axes[0] = data_axes
+        if (seq_shard and len(shape) >= 2 and shape[1] % msize == 0
+                and shape[1] > 1):
+            axes[1] = "model"
+        return P(*axes)
+
+    return jax.tree_util.tree_map_with_path(visit, batch)
+
+
+def cache_specs_tree(cfg: ModelConfig, cache: Any, mesh) -> Any:
+    """Decode cache sharding: batch over data; KV-heads over model when
+    divisible, else sequence over model, else replicate."""
+    data_axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    dsize = int(np.prod([mesh.shape[a] for a in data_axes]))
+    msize = mesh.shape["model"]
+
+    def visit(path_entries, leaf):
+        keys = [str(getattr(p, "key", getattr(p, "idx", p)))
+                for p in path_entries]
+        name = keys[-1]
+        shape = tuple(leaf.shape)
+        batch_ax = (data_axes if len(shape) >= 1 else None)
+
+        def b(dim_idx):
+            return (data_axes if shape[dim_idx] % dsize == 0 and
+                    shape[dim_idx] > 1 else None)
+
+        if name in ("kv_pos", "kv_valid"):      # (B, S)
+            return P(b(0), None)
+        if name in ("k", "v") and len(shape) == 5:   # (n, B, S, kv, hd)
+            if shape[3] % msize == 0:
+                return P(None, b(1), None, "model", None)
+            if shape[2] % msize == 0:
+                return P(None, b(1), "model", None, None)
+            return P(None, b(1), None, None, None)
+        if name in ("cross_k", "cross_v"):       # (n, B, T, nh, hd)
+            if shape[3] % msize == 0:
+                return P(None, b(1), None, "model", None)
+            return P(None, b(1), None, None, None)
+        if name == "c_kv" or name == "k_rope":   # (n, B, S, r)
+            if shape[2] % msize == 0:
+                return P(None, b(1), "model", None)
+            return P(None, b(1), None, None)
+        if name == "pos" or name == "valid":     # local ring (n, B, buf)
+            return P(None, b(1), None)
+        if name in ("h",) and len(shape) == 3:   # rglru state (n, B, W)
+            return P(None, b(1), "model" if shape[2] % msize == 0 else None)
+        if name == "conv" and len(shape) == 4:   # (n, B, K-1, W)
+            return P(None, b(1), None,
+                     "model" if shape[3] % msize == 0 else None)
+        if name == "wkv":                        # (n, B, H, hd, hd)
+            return P(None, b(1),
+                     "model" if shape[2] % msize == 0 else None, None, None)
+        if name in ("shift", "cm_shift"):        # (n, B, D)
+            return P(None, b(1), "model" if shape[2] % msize == 0 else None)
+        return P(*([None] * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(visit, cache)

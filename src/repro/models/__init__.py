@@ -1,0 +1,54 @@
+"""Model substrate: configs, layers, attention (GQA/MLA + MedVerse DAG
+masking), MoE, RG-LRU, RWKV6, and the transformer assembly."""
+
+from .attention import TopoBatch
+from .config import (
+    ATTN,
+    LOCAL_ATTN,
+    RGLRU,
+    RWKV6,
+    EncoderConfig,
+    MLAConfig,
+    ModelConfig,
+    MoEConfig,
+    RGLRUConfig,
+    RWKV6Config,
+    VisionConfig,
+    validate_config,
+)
+from .transformer import (
+    compute_stages,
+    decode_step,
+    encoder_forward,
+    forward,
+    forward_with_hidden,
+    init_cache,
+    init_params,
+    mtp_forward,
+    prefill_cross_kv,
+)
+
+__all__ = [
+    "TopoBatch",
+    "ATTN",
+    "LOCAL_ATTN",
+    "RGLRU",
+    "RWKV6",
+    "EncoderConfig",
+    "MLAConfig",
+    "ModelConfig",
+    "MoEConfig",
+    "RGLRUConfig",
+    "RWKV6Config",
+    "VisionConfig",
+    "validate_config",
+    "compute_stages",
+    "decode_step",
+    "encoder_forward",
+    "forward",
+    "forward_with_hidden",
+    "init_cache",
+    "init_params",
+    "mtp_forward",
+    "prefill_cross_kv",
+]

@@ -1,0 +1,379 @@
+"""Attention layers: GQA (with qk-norm, sliding window, logit softcap),
+MedVerse DAG masking, MLA (DeepSeek-V3), and cross-attention (Whisper).
+
+Two execution paths:
+  * ``attention_forward``  — full-sequence training/prefill. Mask is
+    computed on the fly from O(S) topology metadata (never materialized
+    outside the attention op), either in one shot (``naive``) or per KV
+    chunk with a running-softmax (``chunked`` — the flash-style pure-JAX
+    variant used by the §Perf memory-term hillclimb).
+  * ``attention_decode``   — one-token serve step against a dense KV
+    cache (dry-run path). The engine's CPU paged path lives in
+    ``repro/engine``; the TPU kernel in ``repro/kernels/decode_attention``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..core.masks import NEG_INF
+from ..core.topology import PAD_SEG
+from .config import ATTN, LOCAL_ATTN, MLAConfig, ModelConfig
+from .layers import apply_norm, apply_rope, init_linear, init_norm, maybe_shard
+
+
+@dataclasses.dataclass
+class TopoBatch:
+    """Batched per-token topology metadata (see core.topology)."""
+
+    seg_id: jnp.ndarray    # (B, S) int32
+    layer_id: jnp.ndarray  # (B, S) int32
+    pos_id: jnp.ndarray    # (B, S) int32
+    seg_visible: Optional[jnp.ndarray] = None  # (B, n_seg, n_seg) bool
+
+    @staticmethod
+    def linear(batch: int, seq: int) -> "TopoBatch":
+        pos = jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32), (batch, seq))
+        zeros = jnp.zeros((batch, seq), jnp.int32)
+        return TopoBatch(seg_id=zeros, layer_id=zeros, pos_id=pos)
+
+
+def allowed_block(
+    topo: TopoBatch,
+    cfg: ModelConfig,
+    kind: str,
+    q_slice: slice,
+    kv_start: jnp.ndarray,
+    kv_len: int,
+) -> jnp.ndarray:
+    """Compute the boolean allowed-matrix for a (q-block, kv-block) tile
+    directly from metadata — Eq. 3 (+ optional strict ancestor mask and
+    sliding window), O(block^2) with O(S) inputs.
+
+    q_slice is static; kv_start may be traced (chunked scan).
+    """
+    b = topo.seg_id.shape[0]
+    seg_q = topo.seg_id[:, q_slice]
+    lay_q = topo.layer_id[:, q_slice]
+    pos_q = topo.pos_id[:, q_slice]
+    q0 = q_slice.start or 0
+    sq = seg_q.shape[1]
+
+    def dslice(a):
+        return jax.lax.dynamic_slice_in_dim(a, kv_start, kv_len, axis=1)
+
+    seg_k, lay_k, pos_k = dslice(topo.seg_id), dslice(topo.layer_id), dslice(topo.pos_id)
+    iq = q0 + jnp.arange(sq)
+    ik = kv_start + jnp.arange(kv_len)
+    causal = ik[None, :] <= iq[:, None]                      # packed order
+    same_layer = lay_q[:, :, None] == lay_k[:, None, :]
+    same_seg = seg_q[:, :, None] == seg_k[:, None, :]
+    ok = causal[None] & ~(same_layer & ~same_seg)
+    if cfg.ancestor_mask and topo.seg_visible is not None:
+        safe_q = jnp.maximum(seg_q, 0)
+        safe_k = jnp.maximum(seg_k, 0)
+        vis = jax.vmap(lambda v, sq, sk: v[sq][:, sk])(
+            topo.seg_visible, safe_q, safe_k
+        )  # (B, Sq, Sk)
+        ok = ok & vis
+    valid = (seg_q != PAD_SEG)[:, :, None] & (seg_k != PAD_SEG)[:, None, :]
+    ok = ok & valid
+    if kind == LOCAL_ATTN:
+        diff = pos_q[:, :, None] - pos_k[:, None, :]
+        ok = ok & (diff >= 0) & (diff < cfg.sliding_window)
+    return ok  # (B, Sq, Sk)
+
+
+def _gqa_scores(q, k, scale, softcap):
+    # q: (B, Sq, Kv, G, H), k: (B, Sk, Kv, H) -> (B, Kv, G, Sq, Sk)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap > 0:
+        s = jnp.tanh(s / softcap) * softcap
+    return s
+
+
+# ------------------------------------------------------------------ GQA ----
+def init_attention(key, cfg: ModelConfig, cross: bool = False) -> dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    nh, nkv = cfg.n_heads, cfg.n_kv_heads
+    if cross:
+        nkv = nh  # whisper cross-attn has full kv heads
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.dtype)
+    p = {
+        "wq": init_linear(k1, d, nh * hd, dt),
+        "wk": init_linear(k2, d, nkv * hd, dt),
+        "wv": init_linear(k3, d, nkv * hd, dt),
+        "wo": init_linear(k4, nh * hd, d, dt),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = init_norm(hd)
+        p["k_norm"] = init_norm(hd)
+    return p
+
+
+def _project_qkv(p, x, cfg: ModelConfig, pos_id, cross_kv=None):
+    b, s, d = x.shape
+    hd = cfg.resolved_head_dim
+    nh = cfg.n_heads
+    nkv = nh if cross_kv is not None else cfg.n_kv_heads
+    q = (x @ p["wq"]).reshape(b, s, nh, hd)
+    src = cross_kv if cross_kv is not None else x
+    k = (src @ p["wk"]).reshape(b, src.shape[1], nkv, hd)
+    v = (src @ p["wv"]).reshape(b, src.shape[1], nkv, hd)
+    if cfg.qk_norm:
+        q = apply_norm(p["q_norm"], q, "rmsnorm", cfg.norm_eps)
+        k = apply_norm(p["k_norm"], k, "rmsnorm", cfg.norm_eps)
+    if cfg.pos_embedding == "rope" and cross_kv is None:
+        q = apply_rope(q, pos_id, cfg.rope_theta)
+        k = apply_rope(k, pos_id, cfg.rope_theta)
+    return q, k, v
+
+
+def attention_forward(
+    p: dict,
+    x: jnp.ndarray,
+    topo: TopoBatch,
+    cfg: ModelConfig,
+    kind: str = ATTN,
+) -> jnp.ndarray:
+    """Full-sequence self-attention with the MedVerse DAG mask."""
+    b, s, d = x.shape
+    hd, nh, nkv = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads
+    g = nh // nkv
+    q, k, v = _project_qkv(p, x, cfg, topo.pos_id)
+    q = maybe_shard(q, P(("pod", "data"), None, "model", None))
+    k = maybe_shard(k, P(("pod", "data"), None, "model", None))
+    q = q.reshape(b, s, nkv, g, hd)
+    scale = 1.0 / math.sqrt(hd)
+
+    if cfg.attn_impl == "chunked" and s > cfg.attn_chunk_kv:
+        out = _chunked_attention(q, k, v, topo, cfg, kind, scale)
+    else:
+        allowed = allowed_block(topo, cfg, kind, slice(0, s), jnp.int32(0), s)
+        bias = jnp.where(allowed[:, None, None], 0.0, NEG_INF)  # (B,1,1,S,S)
+        scores = _gqa_scores(q, k, scale, cfg.attn_logit_softcap) + bias
+        w = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bkgqs,bskh->bqkgh", w, v.astype(jnp.float32))
+    out = out.reshape(b, s, nh * hd).astype(x.dtype)
+    return out @ p["wo"]
+
+
+def _chunked_attention(q, k, v, topo, cfg, kind, scale):
+    """Flash-style streaming softmax over KV chunks (pure JAX).
+
+    Keeps peak intermediate memory at O(S * chunk) instead of O(S^2):
+    the §Perf "memory-term" optimization, and the oracle structure the
+    Pallas dag_attention kernel mirrors.
+    """
+    b, s, nkv, g, hd = q.shape
+    ck = cfg.attn_chunk_kv
+    n_chunks = (s + ck - 1) // ck
+    pad = n_chunks * ck - s
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    qf = q.astype(jnp.float32)
+
+    def body(carry, ci):
+        m, l, acc = carry
+        start = ci * ck
+        k_c = jax.lax.dynamic_slice_in_dim(k, start, ck, axis=1)
+        v_c = jax.lax.dynamic_slice_in_dim(v, start, ck, axis=1)
+        allowed = allowed_block(topo, cfg, kind, slice(0, s), start, ck)
+        # chunk tokens beyond s are padding -> masked via seg PAD on pad_to;
+        # but k was padded freshly here, so mask tail explicitly:
+        in_range = (start + jnp.arange(ck)) < s
+        allowed = allowed & in_range[None, None, :]
+        bias = jnp.where(allowed[:, None, None], 0.0, NEG_INF)
+        sc = _gqa_scores(qf, k_c, scale, cfg.attn_logit_softcap) + bias
+        m_new = jnp.maximum(m, sc.max(axis=-1))
+        p_ = jnp.exp(sc - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p_.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bkgqs,bskh->bkgqh", p_, v_c.astype(jnp.float32)
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, nkv, g, s), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, nkv, g, s), jnp.float32)
+    a0 = jnp.zeros((b, nkv, g, s, hd), jnp.float32)
+    if cfg.scan_layers:
+        (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0),
+                                      jnp.arange(n_chunks))
+    else:
+        # unrolled (dry-run roofline mode): XLA cost_analysis counts scan
+        # bodies once, so honest measurement requires unrolling here too
+        carry = (m0, l0, a0)
+        for ci in range(n_chunks):
+            carry, _ = body(carry, jnp.int32(ci))
+        m, l, acc = carry
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return jnp.einsum("bkgqh->bqkgh", out)
+
+
+def attention_decode(
+    p: dict,
+    x_t: jnp.ndarray,          # (B, 1, D)
+    cache: dict,               # {"k","v"}: (B, S_max, Kv, H)
+    write_index: jnp.ndarray,  # scalar int32 — current cache length
+    kv_pos: jnp.ndarray,       # (B, S_max) adaptive positions of cache slots
+    kv_valid: jnp.ndarray,     # (B, S_max) bool
+    q_pos: jnp.ndarray,        # (B,) adaptive position of the new token
+    cfg: ModelConfig,
+    kind: str = ATTN,
+) -> Tuple[jnp.ndarray, dict]:
+    b = x_t.shape[0]
+    hd, nh, nkv = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads
+    g = nh // nkv
+    q = (x_t @ p["wq"]).reshape(b, 1, nh, hd)
+    k_t = (x_t @ p["wk"]).reshape(b, 1, nkv, hd)
+    v_t = (x_t @ p["wv"]).reshape(b, 1, nkv, hd)
+    if cfg.qk_norm:
+        q = apply_norm(p["q_norm"], q, "rmsnorm", cfg.norm_eps)
+        k_t = apply_norm(p["k_norm"], k_t, "rmsnorm", cfg.norm_eps)
+    if cfg.pos_embedding == "rope":
+        q = apply_rope(q, q_pos[:, None], cfg.rope_theta)
+        k_t = apply_rope(k_t, q_pos[:, None], cfg.rope_theta)
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_t.astype(cache["k"].dtype), write_index, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_t.astype(cache["v"].dtype), write_index, axis=1)
+    kv_valid = kv_valid.at[:, write_index].set(True) if kv_valid.ndim == 2 else kv_valid
+    kv_pos = kv_pos.at[:, write_index].set(q_pos)
+
+    visible = kv_valid & (kv_pos <= q_pos[:, None])          # (B, S)
+    if kind == LOCAL_ATTN:
+        diff = q_pos[:, None] - kv_pos
+        visible = visible & (diff >= 0) & (diff < cfg.sliding_window)
+    q = q.reshape(b, 1, nkv, g, hd)
+    scale = 1.0 / math.sqrt(hd)
+    sc = _gqa_scores(q, k, scale, cfg.attn_logit_softcap)     # (B,Kv,G,1,S)
+    sc = sc + jnp.where(visible[:, None, None, None, :], 0.0, NEG_INF)
+    w = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", w, v.astype(jnp.float32))
+    out = out.reshape(b, 1, nh * hd).astype(x_t.dtype)
+    y = out @ p["wo"]
+    return y, {"k": k, "v": v, "kv_pos": kv_pos, "kv_valid": kv_valid}
+
+
+# ---------------------------------------------------------- cross-attn ----
+def cross_attention_forward(p: dict, x: jnp.ndarray, enc: jnp.ndarray,
+                            cfg: ModelConfig) -> jnp.ndarray:
+    b, s, d = x.shape
+    hd, nh = cfg.resolved_head_dim, cfg.n_heads
+    q, k, v = _project_qkv(p, x, cfg, None, cross_kv=enc)
+    scale = 1.0 / math.sqrt(hd)
+    sc = jnp.einsum("bqnh,bsnh->bnqs", q.astype(jnp.float32),
+                    k.astype(jnp.float32)) * scale
+    w = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bnqs,bsnh->bqnh", w, v.astype(jnp.float32))
+    return out.reshape(b, s, nh * hd).astype(x.dtype) @ p["wo"]
+
+
+# ------------------------------------------------------------------ MLA ----
+def init_mla(key, cfg: ModelConfig) -> dict:
+    m: MLAConfig = cfg.mla
+    d, nh = cfg.d_model, cfg.n_heads
+    qk_hd = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 6)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "w_dq": init_linear(ks[0], d, m.q_lora_rank, dt),
+        "q_norm": init_norm(m.q_lora_rank),
+        "w_uq": init_linear(ks[1], m.q_lora_rank, nh * qk_hd, dt),
+        "w_dkv": init_linear(ks[2], d, m.kv_lora_rank + m.qk_rope_head_dim, dt),
+        "kv_norm": init_norm(m.kv_lora_rank),
+        "w_uk": init_linear(ks[3], m.kv_lora_rank, nh * m.qk_nope_head_dim, dt),
+        "w_uv": init_linear(ks[4], m.kv_lora_rank, nh * m.v_head_dim, dt),
+        "wo": init_linear(ks[5], nh * m.v_head_dim, d, dt),
+    }
+
+
+def mla_forward(p: dict, x: jnp.ndarray, topo: TopoBatch,
+                cfg: ModelConfig, kind: str = ATTN) -> jnp.ndarray:
+    """Training/prefill MLA with DAG mask. Up-projects the compressed KV
+    (the memory win is in the *cache*, i.e. decode)."""
+    m: MLAConfig = cfg.mla
+    b, s, d = x.shape
+    nh = cfg.n_heads
+    cq = apply_norm(p["q_norm"], x @ p["w_dq"], "rmsnorm", cfg.norm_eps)
+    q = (cq @ p["w_uq"]).reshape(b, s, nh, m.qk_nope_head_dim + m.qk_rope_head_dim)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    dkv = x @ p["w_dkv"]
+    c_kv, k_rope = jnp.split(dkv, [m.kv_lora_rank], axis=-1)
+    c_kv = apply_norm(p["kv_norm"], c_kv, "rmsnorm", cfg.norm_eps)
+    k_rope = k_rope[:, :, None, :]  # single shared rope head
+    q_rope = apply_rope(q_rope, topo.pos_id, cfg.rope_theta)
+    k_rope = apply_rope(k_rope, topo.pos_id, cfg.rope_theta)
+    k_nope = (c_kv @ p["w_uk"]).reshape(b, s, nh, m.qk_nope_head_dim)
+    v = (c_kv @ p["w_uv"]).reshape(b, s, nh, m.v_head_dim)
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    sc = (
+        jnp.einsum("bqnh,bsnh->bnqs", q_nope.astype(jnp.float32), k_nope.astype(jnp.float32))
+        + jnp.einsum("bqnh,bsoh->bnqs", q_rope.astype(jnp.float32),
+                     jnp.broadcast_to(k_rope, (b, s, 1, m.qk_rope_head_dim)).astype(jnp.float32))
+    ) * scale
+    allowed = allowed_block(topo, cfg, kind, slice(0, s), jnp.int32(0), s)
+    sc = sc + jnp.where(allowed[:, None], 0.0, NEG_INF)
+    w = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bnqs,bsnh->bqnh", w, v.astype(jnp.float32))
+    out = out.reshape(b, s, nh * m.v_head_dim).astype(x.dtype)
+    return out @ p["wo"]
+
+
+def mla_decode(
+    p: dict,
+    x_t: jnp.ndarray,
+    cache: dict,               # {"c_kv": (B,S,rank), "k_rope": (B,S,rope_hd)}
+    write_index: jnp.ndarray,
+    kv_pos: jnp.ndarray,
+    kv_valid: jnp.ndarray,
+    q_pos: jnp.ndarray,
+    cfg: ModelConfig,
+    kind: str = ATTN,
+) -> Tuple[jnp.ndarray, dict]:
+    """Decode with *weight absorption*: scores are taken directly against
+    the compressed cache — no per-step up-projection of S entries."""
+    m: MLAConfig = cfg.mla
+    b = x_t.shape[0]
+    nh = cfg.n_heads
+    cq = apply_norm(p["q_norm"], x_t @ p["w_dq"], "rmsnorm", cfg.norm_eps)
+    q = (cq @ p["w_uq"]).reshape(b, 1, nh, m.qk_nope_head_dim + m.qk_rope_head_dim)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, q_pos[:, None], cfg.rope_theta)
+    dkv = x_t @ p["w_dkv"]
+    c_kv_t, k_rope_t = jnp.split(dkv, [m.kv_lora_rank], axis=-1)
+    c_kv_t = apply_norm(p["kv_norm"], c_kv_t, "rmsnorm", cfg.norm_eps)
+    k_rope_t = apply_rope(k_rope_t[:, :, None, :], q_pos[:, None], cfg.rope_theta)[:, :, 0, :]
+    c_kv = jax.lax.dynamic_update_slice_in_dim(
+        cache["c_kv"], c_kv_t.astype(cache["c_kv"].dtype), write_index, axis=1)
+    k_rope = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], k_rope_t.astype(cache["k_rope"].dtype), write_index, axis=1)
+    kv_pos = kv_pos.at[:, write_index].set(q_pos)
+    kv_valid = kv_valid.at[:, write_index].set(True)
+    # absorb: q_nope (B,1,N,hn) @ w_uk^T (N*hn <- rank): fold per head
+    w_uk = p["w_uk"].reshape(m.kv_lora_rank, nh, m.qk_nope_head_dim)
+    q_abs = jnp.einsum("bqnh,rnh->bqnr", q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))              # (B,1,N,rank)
+    sc = jnp.einsum("bqnr,bsr->bnqs", q_abs, c_kv.astype(jnp.float32))
+    sc = sc + jnp.einsum("bqnh,bsh->bnqs", q_rope.astype(jnp.float32),
+                         k_rope.astype(jnp.float32))
+    sc = sc / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    visible = kv_valid & (kv_pos <= q_pos[:, None])
+    sc = sc + jnp.where(visible[:, None, None, :], 0.0, NEG_INF)
+    w = jax.nn.softmax(sc, axis=-1)
+    # out in compressed space, then up-project via w_uv absorbed into wo
+    ctx = jnp.einsum("bnqs,bsr->bqnr", w, c_kv.astype(jnp.float32))  # (B,1,N,rank)
+    w_uv = p["w_uv"].reshape(m.kv_lora_rank, nh, m.v_head_dim)
+    out = jnp.einsum("bqnr,rnh->bqnh", ctx, w_uv.astype(jnp.float32))
+    out = out.reshape(b, 1, nh * m.v_head_dim).astype(x_t.dtype)
+    return out @ p["wo"], {"c_kv": c_kv, "k_rope": k_rope,
+                           "kv_pos": kv_pos, "kv_valid": kv_valid}

@@ -1,0 +1,167 @@
+"""Shared layer primitives: norms, RoPE (with *adaptive position ids*),
+MLPs, embeddings, and sharding-constraint helpers.
+
+Everything is functional: ``init_*(key, ...) -> params`` and pure apply
+functions. Params are plain nested dicts of jnp arrays so the launch
+layer can attach PartitionSpecs by path name.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+# --------------------------------------------------------------- sharding --
+def maybe_shard(x: jnp.ndarray, spec: Optional[P]) -> jnp.ndarray:
+    """Apply a sharding constraint iff we are under a non-trivial mesh.
+
+    Outside a mesh (CPU unit tests) this is a no-op, so model code can
+    annotate unconditionally.
+    """
+    if spec is None:
+        return x
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or mesh.empty or mesh.size <= 1:
+            return x
+        # only constrain if every named axis exists on the mesh AND the
+        # constrained dim divides by the axis size — an indivisible
+        # constraint (e.g. 4 attention heads over a 16-way model axis)
+        # forces XLA into pad/reshard all-reduce churn (measured: 239 GB
+        # of all-reduce per device on gemma3 prefill_32k — see
+        # EXPERIMENTS.md §Perf iteration H2).
+        clean_axes = []
+        for dim, axis in zip(x.shape, tuple(spec)):
+            if axis is None:
+                clean_axes.append(None)
+                continue
+            axes = axis if isinstance(axis, tuple) else (axis,)
+            size = 1
+            ok = True
+            for a in axes:
+                if a not in mesh.axis_names:
+                    ok = False
+                    break
+                size *= mesh.shape[a]
+            clean_axes.append(axis if ok and dim % size == 0 else None)
+        if all(a is None for a in clean_axes):
+            return x
+        return jax.lax.with_sharding_constraint(x, P(*clean_axes))
+    except Exception:
+        return x
+
+
+def act_spec(*axes) -> P:
+    return P(*axes)
+
+
+# ------------------------------------------------------------------- norms --
+def init_norm(d: int, norm_type: str = "rmsnorm") -> dict:
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if norm_type == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def apply_norm(p: dict, x: jnp.ndarray, norm_type: str = "rmsnorm",
+               eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    if norm_type == "rmsnorm":
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    return y.astype(dt)
+
+
+# -------------------------------------------------------------------- RoPE --
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jnp.ndarray, pos_id: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary embedding driven by explicit (possibly *adaptive*) positions.
+
+    x: (..., S, H, D); pos_id: broadcastable to (..., S) int32. MedVerse's
+    adaptive position indices (Sec. 4.2) enter attention exactly here:
+    fork-aligned siblings share angles, joins resume from the max.
+    """
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                      # (D/2,)
+    angles = pos_id[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(angles)[..., None, :]               # (..., S, 1, D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+# --------------------------------------------------------------------- MLP --
+def init_mlp(key, d_model: int, d_ff: int, activation: str,
+             dtype=jnp.float32) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = 1.0 / math.sqrt(d_model)
+    s_out = 1.0 / math.sqrt(d_ff)
+    p = {
+        "w_in": (jax.random.normal(k1, (d_model, d_ff)) * s_in).astype(dtype),
+        "w_out": (jax.random.normal(k2, (d_ff, d_model)) * s_out).astype(dtype),
+    }
+    if activation == "swiglu":
+        p["w_gate"] = (jax.random.normal(k3, (d_model, d_ff)) * s_in).astype(dtype)
+    return p
+
+
+def apply_mlp(p: dict, x: jnp.ndarray, activation: str) -> jnp.ndarray:
+    h = x @ p["w_in"]
+    if activation == "swiglu":
+        g = x @ p["w_gate"]
+        h = jax.nn.silu(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    h = maybe_shard(h, P(None, None, "model"))
+    return h @ p["w_out"]
+
+
+# -------------------------------------------------------------- embeddings --
+def init_embedding(key, vocab: int, d_model: int, dtype=jnp.float32) -> dict:
+    return {
+        "table": (jax.random.normal(key, (vocab, d_model)) * 0.02).astype(dtype)
+    }
+
+
+def embed_tokens(p: dict, tokens: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def init_learned_pos(key, max_len: int, d_model: int, dtype=jnp.float32) -> dict:
+    return {
+        "pos_table": (jax.random.normal(key, (max_len, d_model)) * 0.02).astype(dtype)
+    }
+
+
+def learned_pos(p: dict, pos_id: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(p["pos_table"], pos_id, axis=0)
+
+
+def unembed(table_or_head: jnp.ndarray, x: jnp.ndarray,
+            softcap: float = 0.0) -> jnp.ndarray:
+    logits = x @ table_or_head
+    if softcap > 0:
+        logits = jnp.tanh(logits / softcap) * softcap
+    return logits
+
+
+def init_linear(key, d_in: int, d_out: int, dtype=jnp.float32,
+                scale: Optional[float] = None) -> jnp.ndarray:
+    s = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out)) * s).astype(dtype)

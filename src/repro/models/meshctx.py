@@ -1,0 +1,53 @@
+"""Explicit mesh context for model code.
+
+Model layers that need *explicit* collective schedules (MoE expert
+parallelism via shard_map, distributed decode attention) read the active
+mesh from here. The launch layer sets it; unit tests on CPU leave it
+unset and the layers fall back to single-device local math.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Tuple
+
+import jax
+
+_state = threading.local()
+
+
+def set_mesh(mesh: Optional[jax.sharding.Mesh],
+             data_axes: Tuple[str, ...] = ("data",),
+             model_axis: str = "model") -> None:
+    _state.mesh = mesh
+    _state.data_axes = data_axes
+    _state.model_axis = model_axis
+
+
+def get_mesh() -> Optional[jax.sharding.Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+def data_axes() -> Tuple[str, ...]:
+    return getattr(_state, "data_axes", ("data",))
+
+
+def model_axis() -> str:
+    return getattr(_state, "model_axis", "model")
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: jax.sharding.Mesh,
+             data_axes: Tuple[str, ...] = ("data",),
+             model_axis: str = "model"):
+    prev = (get_mesh(), globals(), )
+    prev_axes = (getattr(_state, "data_axes", ("data",)),
+                 getattr(_state, "model_axis", "model"))
+    prev_mesh = get_mesh()
+    set_mesh(mesh, data_axes, model_axis)
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        set_mesh(prev_mesh, *prev_axes)

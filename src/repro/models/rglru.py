@@ -1,0 +1,128 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Block = [gelu branch] x [causal conv1d -> RG-LRU] -> elementwise gate ->
+output projection. The recurrence
+
+    a_t = exp(-c * softplus(Lambda) * sigmoid(r_t))
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+is evaluated with ``jax.lax.associative_scan`` (parallel prefix — the
+TPU-native formulation; the Pallas kernel in ``kernels/rglru_scan``
+implements the same contraction with explicit VMEM blocking).
+
+Gates are block-diagonal per head as in Griffin.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig, RGLRUConfig
+from .layers import init_linear
+
+
+def init_rglru(key, cfg: ModelConfig) -> dict:
+    rc: RGLRUConfig = cfg.rglru
+    d = cfg.d_model
+    w = rc.lru_width or d
+    nh = rc.n_heads or 1
+    hd = w // nh
+    ks = jax.random.split(key, 7)
+    dt = jnp.dtype(cfg.dtype)
+    s_h = 1.0 / math.sqrt(hd)
+    # Lambda init so that a ~ Uniform(0.9, 0.999) at r=1 (Griffin A.2)
+    u = jax.random.uniform(ks[5], (w,), minval=0.9, maxval=0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / rc.c_constant))  # softplus^-1
+    return {
+        "w_y": init_linear(ks[0], d, w, dt),
+        "w_x": init_linear(ks[1], d, w, dt),
+        "conv_w": (jax.random.normal(ks[2], (rc.conv1d_width, w)) * 0.1).astype(dt),
+        "conv_b": jnp.zeros((w,), dt),
+        "gate_i": (jax.random.normal(ks[3], (nh, hd, hd)) * s_h).astype(dt),
+        "gate_r": (jax.random.normal(ks[4], (nh, hd, hd)) * s_h).astype(dt),
+        "lambda": lam.astype(jnp.float32),
+        "w_out": init_linear(ks[6], w, d, dt),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Per-channel causal conv via shifted adds. x: (B,S,W); w: (K,W)."""
+    k = w.shape[0]
+    y = x * w[k - 1]
+    for i in range(1, k):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, : x.shape[1]]
+        y = y + shifted * w[k - 1 - i]
+    return y + b
+
+
+def _gates(x: jnp.ndarray, p: dict, rc: RGLRUConfig, w: int):
+    nh = rc.n_heads or 1
+    hd = w // nh
+    xh = x.reshape(*x.shape[:-1], nh, hd)
+    i_t = jax.nn.sigmoid(jnp.einsum("...hd,hde->...he", xh, p["gate_i"]))
+    r_t = jax.nn.sigmoid(jnp.einsum("...hd,hde->...he", xh, p["gate_r"]))
+    return i_t.reshape(x.shape), r_t.reshape(x.shape)
+
+
+def rglru_scan_ref(a: jnp.ndarray, bx: jnp.ndarray,
+                   h0: jnp.ndarray = None) -> jnp.ndarray:
+    """h_t = a_t * h_{t-1} + bx_t via associative scan. a, bx: (B,S,W)."""
+    if h0 is not None:
+        # fold the initial state into the first step's additive term
+        bx = bx.at[:, 0].add(a[:, 0] * h0)
+        a = a.at[:, 0].set(jnp.zeros_like(a[:, 0]))
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a2 * a1, a2 * b1 + b2
+    aa, hh = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    return hh
+
+
+def rglru_forward(p: dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    rc = cfg.rglru
+    w = rc.lru_width or cfg.d_model
+    y_branch = jax.nn.gelu(x @ p["w_y"])
+    xb = _causal_conv(x @ p["w_x"], p["conv_w"], p["conv_b"])
+    i_t, r_t = _gates(xb, p, rc, w)
+    log_a = -rc.c_constant * jax.nn.softplus(p["lambda"]) * r_t.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    gated = (i_t * xb).astype(jnp.float32)
+    bx = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated
+    h = rglru_scan_ref(a, bx)
+    return (h.astype(x.dtype) * y_branch) @ p["w_out"]
+
+
+def rglru_decode(
+    p: dict, x_t: jnp.ndarray, state: dict, cfg: ModelConfig
+) -> Tuple[jnp.ndarray, dict]:
+    """Single-token step. state = {"h": (B,W) f32, "conv": (B,K-1,W)}."""
+    rc = cfg.rglru
+    w = rc.lru_width or cfg.d_model
+    k = rc.conv1d_width
+    y_branch = jax.nn.gelu(x_t @ p["w_y"])                    # (B,1,W)
+    xb_t = (x_t @ p["w_x"])[:, 0]                             # (B,W)
+    window = jnp.concatenate([state["conv"], xb_t[:, None]], axis=1)  # (B,K,W)
+    conv = jnp.einsum("bkw,kw->bw", window, p["conv_w"]) + p["conv_b"]
+    i_t, r_t = _gates(conv, p, rc, w)
+    log_a = -rc.c_constant * jax.nn.softplus(p["lambda"]) * r_t.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    bx = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (
+        i_t * conv
+    ).astype(jnp.float32)
+    h = a * state["h"] + bx
+    out = (h.astype(x_t.dtype)[:, None] * y_branch) @ p["w_out"]
+    return out, {"h": h, "conv": window[:, 1:]}
+
+
+def rglru_init_state(batch: int, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    rc = cfg.rglru
+    w = rc.lru_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, rc.conv1d_width - 1, w), dtype),
+    }

@@ -1,0 +1,197 @@
+"""RWKV-6 "Finch" time-mix + channel-mix blocks (arXiv:2404.05892).
+
+Core recurrence per head (head_dim n):
+
+    S_t = diag(w_t) @ S_{t-1} + k_t v_t^T          # data-dependent decay
+    y_t = (S_{t-1} + diag(u) k_t v_t^T)^T r_t
+
+with per-token, per-channel decay w_t = exp(-exp(wb + lora_w(x))) — the
+Finch contribution vs RWKV-5's static decay. Training uses a time scan
+(the Pallas ``rwkv6_scan`` kernel blocks it over chunks); decode carries
+the (B, H, n, n) state — O(1) in sequence length, which is why rwkv6-3b
+is a ``long_500k`` architecture.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig, RWKV6Config
+from .layers import init_linear
+
+MIX_NAMES = ("r", "k", "v", "w", "g")
+
+
+def init_rwkv_tm(key, cfg: ModelConfig) -> dict:
+    rw: RWKV6Config = cfg.rwkv
+    d = cfg.d_model
+    ks = jax.random.split(key, 12)
+    dt = jnp.dtype(cfg.dtype)
+    p = {
+        "mu_x": jnp.full((d,), 0.5, dt),
+        "mix_lora_a": init_linear(ks[0], d, 5 * rw.mix_lora, dt, scale=0.01),
+        "mix_lora_b": (jax.random.normal(ks[1], (5, rw.mix_lora, d)) * 0.01).astype(dt),
+        "mu": (jax.random.uniform(ks[2], (5, d)) * 0.5 + 0.25).astype(dt),
+        "w_r": init_linear(ks[3], d, d, dt),
+        "w_k": init_linear(ks[4], d, d, dt),
+        "w_v": init_linear(ks[5], d, d, dt),
+        "w_g": init_linear(ks[6], d, d, dt),
+        "w_o": init_linear(ks[7], d, d, dt),
+        "decay_base": jnp.full((d,), -1.0, jnp.float32),
+        "decay_lora_a": init_linear(ks[8], d, rw.decay_lora, dt, scale=0.01),
+        "decay_lora_b": init_linear(ks[9], rw.decay_lora, d, dt, scale=0.01),
+        "bonus_u": (jax.random.normal(ks[10], (d,)) * 0.1).astype(jnp.float32),
+        "ln_scale": jnp.ones((d,), jnp.float32),  # per-head groupnorm scale
+    }
+    return p
+
+
+def _token_shift(x: jnp.ndarray, x_prev_last: jnp.ndarray = None) -> jnp.ndarray:
+    """x_{t-1} with zero (or carried) first element. x: (B,S,D)."""
+    shifted = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    if x_prev_last is not None:
+        shifted = shifted.at[:, 0].set(x_prev_last)
+    return shifted
+
+
+def _mix_inputs(p: dict, x: jnp.ndarray, x_prev: jnp.ndarray, rw: RWKV6Config):
+    xx = x_prev - x
+    xxx = x + xx * p["mu_x"]
+    lora = jnp.tanh(xxx @ p["mix_lora_a"])                 # (B,S,5*L)
+    lora = lora.reshape(*x.shape[:-1], 5, rw.mix_lora)
+    delta = jnp.einsum("bsfl,fld->bsfd", lora, p["mix_lora_b"])  # (B,S,5,D)
+    mixed = x[..., None, :] + xx[..., None, :] * (p["mu"] + delta)
+    return {n: mixed[..., i, :] for i, n in enumerate(MIX_NAMES)}
+
+
+def _rkvwg(p: dict, mixed: dict, cfg: ModelConfig):
+    r = mixed["r"] @ p["w_r"]
+    k = mixed["k"] @ p["w_k"]
+    v = mixed["v"] @ p["w_v"]
+    g = jax.nn.silu(mixed["g"] @ p["w_g"])
+    log_w = -jnp.exp(
+        p["decay_base"]
+        + (jnp.tanh(mixed["w"] @ p["decay_lora_a"]) @ p["decay_lora_b"]).astype(jnp.float32)
+    )  # (B,S,D), always < 0 => decay in (0,1)
+    return r, k, v, g, log_w
+
+
+def wkv_scan_ref(
+    r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+    w: jnp.ndarray, u: jnp.ndarray, head_dim: int,
+    s0: jnp.ndarray = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sequential oracle. r,k,v,w: (B,S,D); u: (D,). Returns (y, s_final)
+    with y (B,S,D), state (B,H,n,n)."""
+    b, s, d = r.shape
+    h = d // head_dim
+    rs = r.reshape(b, s, h, head_dim).astype(jnp.float32)
+    ks_ = k.reshape(b, s, h, head_dim).astype(jnp.float32)
+    vs = v.reshape(b, s, h, head_dim).astype(jnp.float32)
+    ws = w.reshape(b, s, h, head_dim).astype(jnp.float32)
+    us = u.reshape(h, head_dim)
+    state = (jnp.zeros((b, h, head_dim, head_dim), jnp.float32)
+             if s0 is None else s0.astype(jnp.float32))
+
+    def step(st, inp):
+        r_t, k_t, v_t, w_t = inp  # each (B,H,n)
+        kv = k_t[..., :, None] * v_t[..., None, :]          # (B,H,n,n)
+        y = jnp.einsum("bhij,bhi->bhj", st + us[..., :, None] * kv, r_t)
+        st = w_t[..., :, None] * st + kv
+        return st, y
+
+    xs = (rs.transpose(1, 0, 2, 3), ks_.transpose(1, 0, 2, 3),
+          vs.transpose(1, 0, 2, 3), ws.transpose(1, 0, 2, 3))
+    state, ys = jax.lax.scan(step, state, xs)
+    y = ys.transpose(1, 0, 2, 3).reshape(b, s, d)
+    return y, state
+
+
+def _group_norm(y: jnp.ndarray, scale: jnp.ndarray, head_dim: int,
+                eps: float = 1e-5) -> jnp.ndarray:
+    shp = y.shape
+    yh = y.reshape(*shp[:-1], shp[-1] // head_dim, head_dim)
+    mu = yh.mean(-1, keepdims=True)
+    var = yh.var(-1, keepdims=True)
+    yh = (yh - mu) * jax.lax.rsqrt(var + eps)
+    return yh.reshape(shp) * scale
+
+
+def rwkv_tm_forward(p: dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    rw = cfg.rwkv
+    x_prev = _token_shift(x)
+    mixed = _mix_inputs(p, x, x_prev, rw)
+    r, k, v, g, log_w = _rkvwg(p, mixed, cfg)
+    w = jnp.exp(log_w)
+    y, _ = wkv_scan_ref(r, k, v, w, p["bonus_u"], rw.head_dim)
+    y = _group_norm(y, p["ln_scale"], rw.head_dim)
+    return (y.astype(x.dtype) * g) @ p["w_o"]
+
+
+def rwkv_tm_decode(p: dict, x_t: jnp.ndarray, state: dict,
+                   cfg: ModelConfig) -> Tuple[jnp.ndarray, dict]:
+    """state = {"wkv": (B,H,n,n) f32, "shift": (B,D)}."""
+    rw = cfg.rwkv
+    x_prev = state["shift"][:, None, :]
+    mixed = _mix_inputs(p, x_t, x_prev, rw)
+    r, k, v, g, log_w = _rkvwg(p, mixed, cfg)
+    b, _, d = x_t.shape
+    h, n = d // rw.head_dim, rw.head_dim
+    r_t = r[:, 0].reshape(b, h, n).astype(jnp.float32)
+    k_t = k[:, 0].reshape(b, h, n).astype(jnp.float32)
+    v_t = v[:, 0].reshape(b, h, n).astype(jnp.float32)
+    w_t = jnp.exp(log_w[:, 0]).reshape(b, h, n)
+    u = p["bonus_u"].reshape(h, n)
+    kv = k_t[..., :, None] * v_t[..., None, :]
+    y = jnp.einsum("bhij,bhi->bhj", state["wkv"] + u[..., :, None] * kv, r_t)
+    wkv = w_t[..., :, None] * state["wkv"] + kv
+    y = _group_norm(y.reshape(b, 1, d), p["ln_scale"], rw.head_dim)
+    out = (y.astype(x_t.dtype) * g) @ p["w_o"]
+    return out, {"wkv": wkv, "shift": x_t[:, 0]}
+
+
+# ------------------------------------------------------------ channel mix --
+def init_rwkv_cm(key, cfg: ModelConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "mu_k": jnp.full((d,), 0.5, dt),
+        "mu_r": jnp.full((d,), 0.5, dt),
+        "w_k": init_linear(ks[0], d, f, dt),
+        "w_v": init_linear(ks[1], f, d, dt),
+        "w_r": init_linear(ks[2], d, d, dt),
+    }
+
+
+def rwkv_cm_forward(p: dict, x: jnp.ndarray, x_prev_last=None) -> jnp.ndarray:
+    x_prev = _token_shift(x, x_prev_last)
+    xx = x_prev - x
+    xk = x + xx * p["mu_k"]
+    xr = x + xx * p["mu_r"]
+    k = jnp.square(jax.nn.relu(xk @ p["w_k"]))
+    return jax.nn.sigmoid(xr @ p["w_r"]) * (k @ p["w_v"])
+
+
+def rwkv_cm_decode(p: dict, x_t: jnp.ndarray, shift: jnp.ndarray
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    x_prev = shift[:, None, :]
+    xx = x_prev - x_t
+    xk = x_t + xx * p["mu_k"]
+    xr = x_t + xx * p["mu_r"]
+    k = jnp.square(jax.nn.relu(xk @ p["w_k"]))
+    return jax.nn.sigmoid(xr @ p["w_r"]) * (k @ p["w_v"]), x_t[:, 0]
+
+
+def rwkv_init_state(batch: int, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    d = cfg.d_model
+    h = d // cfg.rwkv.head_dim
+    return {
+        "wkv": jnp.zeros((batch, h, cfg.rwkv.head_dim, cfg.rwkv.head_dim), jnp.float32),
+        "shift": jnp.zeros((batch, d), dtype),
+        "cm_shift": jnp.zeros((batch, d), dtype),
+    }

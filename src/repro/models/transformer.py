@@ -1,0 +1,597 @@
+"""Transformer assembly: stages of scanned super-blocks, full forward
+(train/prefill) and single-token decode, covering every assigned family.
+
+Layer stacking
+--------------
+``compute_stages`` groups the config's layer pattern into *stages*: a
+stage is a (unit, n_repeat, uses_moe) triple whose parameters are stacked
+along a leading axis and executed with ``lax.scan`` (+ optional remat).
+Heterogeneous interleavings (gemma3 5 local : 1 global, recurrentgemma
+r,r,attn) become multi-layer units; deepseek-v3's 3 dense-FFN first
+layers become their own stage before the MoE stage.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .attention import (
+    TopoBatch,
+    attention_decode,
+    attention_forward,
+    cross_attention_forward,
+    init_attention,
+    init_mla,
+    mla_decode,
+    mla_forward,
+)
+from .config import ATTN, LOCAL_ATTN, RGLRU, RWKV6, ModelConfig
+from .layers import (
+    apply_norm,
+    apply_mlp,
+    embed_tokens,
+    init_embedding,
+    init_learned_pos,
+    init_mlp,
+    init_norm,
+    learned_pos,
+    maybe_shard,
+    unembed,
+)
+from .moe import init_moe, moe_ffn
+from .rglru import (
+    init_rglru,
+    rglru_decode,
+    rglru_forward,
+    rglru_init_state,
+)
+from .rwkv import (
+    init_rwkv_cm,
+    init_rwkv_tm,
+    rwkv_cm_decode,
+    rwkv_cm_forward,
+    rwkv_init_state,
+    rwkv_tm_decode,
+    rwkv_tm_forward,
+)
+from . import meshctx
+
+
+@dataclasses.dataclass(frozen=True)
+class Stage:
+    unit: Tuple[str, ...]
+    n: int
+    moe: bool
+    start_layer: int
+
+
+def compute_stages(cfg: ModelConfig) -> List[Stage]:
+    stages: List[Stage] = []
+    li = 0
+    unit = tuple(cfg.pattern_unit)
+    n = cfg.n_repeat
+    if cfg.moe is not None and cfg.moe.first_dense_layers:
+        fd = cfg.moe.first_dense_layers
+        assert unit == (ATTN,), "first_dense_layers requires plain attn unit"
+        stages.append(Stage(unit=unit, n=fd, moe=False, start_layer=0))
+        li = fd
+        n = n - fd
+    if n > 0:
+        stages.append(Stage(unit=unit, n=n, moe=cfg.moe is not None,
+                            start_layer=li))
+        li += n * len(unit)
+    if cfg.tail:
+        stages.append(
+            Stage(unit=tuple(cfg.tail), n=1, moe=cfg.moe is not None,
+                  start_layer=li)
+        )
+    return stages
+
+
+# ----------------------------------------------------------------- init ----
+def _init_mixer(key, cfg: ModelConfig, kind: str) -> dict:
+    if kind in (ATTN, LOCAL_ATTN):
+        if cfg.mla is not None:
+            return init_mla(key, cfg)
+        return init_attention(key, cfg)
+    if kind == RGLRU:
+        return init_rglru(key, cfg)
+    if kind == RWKV6:
+        return init_rwkv_tm(key, cfg)
+    raise ValueError(kind)
+
+
+def _init_ffn(key, cfg: ModelConfig, moe: bool, kind: str) -> dict:
+    if moe:
+        return init_moe(key, cfg)
+    if kind == RWKV6:
+        return init_rwkv_cm(key, cfg)
+    d_ff = cfg.d_ff
+    if cfg.moe is not None and cfg.moe.d_ff_dense:
+        d_ff = cfg.moe.d_ff_dense
+    return init_mlp(key, cfg.d_model, d_ff, cfg.mlp_activation,
+                    jnp.dtype(cfg.dtype))
+
+
+def _init_unit(key, cfg: ModelConfig, unit: Tuple[str, ...], moe: bool) -> dict:
+    """Params for one super-block instance: dict u0..u{len-1}."""
+    p = {}
+    keys = jax.random.split(key, len(unit))
+    for i, kind in enumerate(unit):
+        k1, k2, k3 = jax.random.split(keys[i], 3)
+        sub = {
+            "norm1": init_norm(cfg.d_model, cfg.norm_type),
+            "mixer": _init_mixer(k1, cfg, kind),
+            "norm2": init_norm(cfg.d_model, cfg.norm_type),
+            "ffn": _init_ffn(k2, cfg, moe, kind),
+        }
+        if cfg.encoder is not None and kind in (ATTN, LOCAL_ATTN):
+            sub["cross_norm"] = init_norm(cfg.d_model, cfg.norm_type)
+            sub["cross"] = init_attention(k3, cfg, cross=True)
+        p[f"u{i}"] = sub
+    return p
+
+
+def _stack(trees: List[Any]) -> Any:
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_stage(key, cfg: ModelConfig, stage: Stage) -> dict:
+    keys = jax.random.split(key, stage.n)
+    return _stack([_init_unit(k, cfg, stage.unit, stage.moe) for k in keys])
+
+
+def init_encoder(key, cfg: ModelConfig) -> dict:
+    enc = cfg.encoder
+    keys = jax.random.split(key, enc.n_layers + 2)
+    layers = []
+    for i in range(enc.n_layers):
+        k1, k2 = jax.random.split(keys[i])
+        layers.append({
+            "norm1": init_norm(cfg.d_model, cfg.norm_type),
+            "attn": init_attention(k1, cfg, cross=True),  # full heads, bidir
+            "norm2": init_norm(cfg.d_model, cfg.norm_type),
+            "ffn": init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.mlp_activation,
+                            jnp.dtype(cfg.dtype)),
+        })
+    return {
+        "layers": _stack(layers),
+        "pos": init_learned_pos(keys[-2], enc.n_ctx, cfg.d_model,
+                                jnp.dtype(cfg.dtype)),
+        "final_norm": init_norm(cfg.d_model, cfg.norm_type),
+    }
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 8)
+    params: Dict[str, Any] = {
+        "embed": init_embedding(ks[0], cfg.vocab_size, cfg.d_model,
+                                jnp.dtype(cfg.dtype)),
+        "final_norm": init_norm(cfg.d_model, cfg.norm_type),
+    }
+    stages = compute_stages(cfg)
+    stage_keys = jax.random.split(ks[1], len(stages))
+    params["stages"] = [init_stage(k, cfg, s) for k, s in zip(stage_keys, stages)]
+    if not cfg.tie_embeddings:
+        params["lm_head"] = init_embedding(ks[2], cfg.vocab_size, cfg.d_model,
+                                           jnp.dtype(cfg.dtype))["table"].T
+    if cfg.pos_embedding == "learned":
+        params["pos"] = init_learned_pos(ks[3], cfg.max_seq_len, cfg.d_model,
+                                         jnp.dtype(cfg.dtype))
+    if cfg.encoder is not None:
+        params["encoder"] = init_encoder(ks[4], cfg)
+    if cfg.vision is not None and cfg.vision.embed_dim:
+        # projector stub: maps frontend embeddings into d_model
+        from .layers import init_linear
+        params["vision_proj"] = init_linear(ks[5], cfg.vision.embed_dim,
+                                            cfg.d_model, jnp.dtype(cfg.dtype))
+    if cfg.mtp_depth > 0:
+        k1, k2, k3 = jax.random.split(ks[6], 3)
+        from .layers import init_linear
+        params["mtp"] = {
+            "proj": init_linear(k1, 2 * cfg.d_model, cfg.d_model,
+                                jnp.dtype(cfg.dtype)),
+            "block": _init_unit(k2, cfg, (ATTN,), moe=False),
+            "norm": init_norm(cfg.d_model, cfg.norm_type),
+        }
+    return params
+
+
+# -------------------------------------------------------------- forward ----
+def _apply_unit_fwd(unit_params: dict, x: jnp.ndarray, cfg: ModelConfig,
+                    unit: Tuple[str, ...], moe: bool, topo: TopoBatch,
+                    enc_out: Optional[jnp.ndarray]) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    aux = jnp.zeros((), jnp.float32)
+    daxes = meshctx.data_axes()
+    for i, kind in enumerate(unit):
+        p = unit_params[f"u{i}"]
+        h = apply_norm(p["norm1"], x, cfg.norm_type, cfg.norm_eps)
+        if kind in (ATTN, LOCAL_ATTN):
+            if cfg.mla is not None:
+                mix = mla_forward(p["mixer"], h, topo, cfg, kind)
+            else:
+                mix = attention_forward(p["mixer"], h, topo, cfg, kind)
+        elif kind == RGLRU:
+            mix = rglru_forward(p["mixer"], h, cfg)
+        else:  # RWKV6
+            mix = rwkv_tm_forward(p["mixer"], h, cfg)
+        x = x + mix
+        if "cross" in p and enc_out is not None:
+            hc = apply_norm(p["cross_norm"], x, cfg.norm_type, cfg.norm_eps)
+            x = x + cross_attention_forward(p["cross"], hc, enc_out, cfg)
+        h2 = apply_norm(p["norm2"], x, cfg.norm_type, cfg.norm_eps)
+        if moe:
+            y, a = moe_ffn(p["ffn"], h2, cfg)
+            aux = aux + a
+        elif kind == RWKV6:
+            y = rwkv_cm_forward(p["ffn"], h2)
+        else:
+            y = apply_mlp(p["ffn"], h2, cfg.mlp_activation)
+        x = x + y
+        x = maybe_shard(x, P(daxes, None, None))
+    return x, aux
+
+
+def encoder_forward(params: dict, audio_embeds: jnp.ndarray,
+                    cfg: ModelConfig) -> jnp.ndarray:
+    """Whisper-style bidirectional encoder over stubbed frame embeddings."""
+    enc = params["encoder"]
+    n_ctx = audio_embeds.shape[1]
+    x = audio_embeds + learned_pos(enc["pos"], jnp.arange(n_ctx))
+
+    def body(x, lp):
+        h = apply_norm(lp["norm1"], x, cfg.norm_type, cfg.norm_eps)
+        x = x + cross_attention_forward(lp["attn"], h, h, cfg)  # bidir self
+        h2 = apply_norm(lp["norm2"], x, cfg.norm_type, cfg.norm_eps)
+        x = x + apply_mlp(lp["ffn"], h2, cfg.mlp_activation)
+        return x, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, enc["layers"])
+    return apply_norm(enc["final_norm"], x, cfg.norm_type, cfg.norm_eps)
+
+
+def forward(
+    params: dict,
+    tokens: jnp.ndarray,                 # (B, S)
+    topo: TopoBatch,
+    cfg: ModelConfig,
+    image_embeds: Optional[jnp.ndarray] = None,  # (B, n_img, D_vis)
+    audio_embeds: Optional[jnp.ndarray] = None,  # (B, n_ctx, D)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence forward. Returns (logits (B,S,V), aux_loss scalar)."""
+    daxes = meshctx.data_axes()
+    x = embed_tokens(params["embed"], tokens)
+    if image_embeds is not None:
+        img = image_embeds
+        if "vision_proj" in params:
+            img = img @ params["vision_proj"]
+        n_img = img.shape[1]
+        x = jnp.concatenate([img.astype(x.dtype), x[:, n_img:]], axis=1)
+    if cfg.pos_embedding == "learned":
+        x = x + learned_pos(params["pos"], topo.pos_id)
+    x = maybe_shard(x, P(daxes, None, None))
+    enc_out = None
+    if cfg.encoder is not None and audio_embeds is not None:
+        enc_out = encoder_forward(params, audio_embeds, cfg)
+
+    aux_total = jnp.zeros((), jnp.float32)
+    for stage, sp in zip(compute_stages(cfg), params["stages"]):
+        def body(carry, unit_params, _stage=stage):
+            x, aux = carry
+            x, a = _apply_unit_fwd(unit_params, x, cfg, _stage.unit,
+                                   _stage.moe, topo, enc_out)
+            return (x, aux + a), None
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        if cfg.scan_layers and stage.n > 1:
+            (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), sp)
+        else:
+            for i in range(stage.n):
+                unit_p = jax.tree_util.tree_map(lambda a, i=i: a[i], sp)
+                (x, aux_total), _ = body((x, aux_total), unit_p)
+
+    x = apply_norm(params["final_norm"], x, cfg.norm_type, cfg.norm_eps)
+    head = params["lm_head"] if "lm_head" in params else params["embed"]["table"].T
+    logits = unembed(head, x, cfg.logit_softcap)
+    logits = maybe_shard(logits, P(daxes, None, "model"))
+    return logits, aux_total
+
+
+def mtp_forward(params: dict, tokens: jnp.ndarray, h_final: jnp.ndarray,
+                topo: TopoBatch, cfg: ModelConfig) -> jnp.ndarray:
+    """DeepSeek-V3 multi-token prediction head (depth 1): combine the
+    trunk state at t with the embedding of token t+1 to predict t+2.
+    Returns logits (B, S-1, V) aligned to predict tokens[:, 2:]."""
+    mtp = params["mtp"]
+    emb_next = embed_tokens(params["embed"], tokens[:, 1:])
+    h = jnp.concatenate([h_final[:, :-1], emb_next], axis=-1) @ mtp["proj"]
+    topo_shift = TopoBatch(
+        seg_id=topo.seg_id[:, 1:], layer_id=topo.layer_id[:, 1:],
+        pos_id=topo.pos_id[:, 1:], seg_visible=topo.seg_visible,
+    )
+    h, _ = _apply_unit_fwd(mtp["block"], h, cfg, (ATTN,), False, topo_shift, None)
+    h = apply_norm(mtp["norm"], h, cfg.norm_type, cfg.norm_eps)
+    head = params["lm_head"] if "lm_head" in params else params["embed"]["table"].T
+    return unembed(head, h, cfg.logit_softcap)
+
+
+def forward_with_hidden(params, tokens, topo, cfg, **kw):
+    """forward() but also returns final hidden states (for MTP)."""
+    # small duplication kept simple: rerun final norm input by re-tracing
+    # is wasteful; instead forward() is inlined here when MTP is on.
+    daxes = meshctx.data_axes()
+    x = embed_tokens(params["embed"], tokens)
+    x = maybe_shard(x, P(daxes, None, None))
+    aux_total = jnp.zeros((), jnp.float32)
+    for stage, sp in zip(compute_stages(cfg), params["stages"]):
+        def body(carry, unit_params, _stage=stage):
+            x, aux = carry
+            x, a = _apply_unit_fwd(unit_params, x, cfg, _stage.unit,
+                                   _stage.moe, topo, None)
+            return (x, aux + a), None
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        if cfg.scan_layers and stage.n > 1:
+            (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), sp)
+        else:
+            for i in range(stage.n):
+                unit_p = jax.tree_util.tree_map(lambda a, i=i: a[i], sp)
+                (x, aux_total), _ = body((x, aux_total), unit_p)
+    h_final = x
+    x = apply_norm(params["final_norm"], x, cfg.norm_type, cfg.norm_eps)
+    head = params["lm_head"] if "lm_head" in params else params["embed"]["table"].T
+    logits = unembed(head, x, cfg.logit_softcap)
+    logits = maybe_shard(logits, P(daxes, None, "model"))
+    return logits, aux_total, h_final
+
+
+# ---------------------------------------------------------------- decode ---
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=None) -> dict:
+    """Dense decode cache for serve_step (dry-run + simple serving)."""
+    dt = jnp.dtype(dtype or cfg.dtype)
+    hd, nkv = cfg.resolved_head_dim, cfg.n_kv_heads
+    cache: Dict[str, Any] = {
+        "kv_pos": jnp.zeros((batch, max_len), jnp.int32),
+        "kv_valid": jnp.zeros((batch, max_len), bool),
+        "stages": [],
+    }
+    for stage in compute_stages(cfg):
+        per_unit = {}
+        for i, kind in enumerate(stage.unit):
+            if kind in (ATTN, LOCAL_ATTN):
+                if cfg.mla is not None:
+                    m = cfg.mla
+                    c = {
+                        "c_kv": jnp.zeros((stage.n, batch, max_len,
+                                           m.kv_lora_rank), dt),
+                        "k_rope": jnp.zeros((stage.n, batch, max_len,
+                                             m.qk_rope_head_dim), dt),
+                    }
+                elif kind == LOCAL_ATTN:
+                    # window-sized ring buffer: O(window) decode state,
+                    # what makes gemma3/recurrentgemma long_500k-eligible
+                    buf = min(cfg.sliding_window, max_len)
+                    c = {
+                        "k": jnp.zeros((stage.n, batch, buf, nkv, hd), dt),
+                        "v": jnp.zeros((stage.n, batch, buf, nkv, hd), dt),
+                        "pos": jnp.zeros((stage.n, batch, buf), jnp.int32),
+                        "valid": jnp.zeros((stage.n, batch, buf), bool),
+                    }
+                else:
+                    c = {
+                        "k": jnp.zeros((stage.n, batch, max_len, nkv, hd), dt),
+                        "v": jnp.zeros((stage.n, batch, max_len, nkv, hd), dt),
+                    }
+                if cfg.encoder is not None:
+                    c["cross_k"] = jnp.zeros(
+                        (stage.n, batch, cfg.encoder.n_ctx, cfg.n_heads, hd), dt)
+                    c["cross_v"] = jnp.zeros(
+                        (stage.n, batch, cfg.encoder.n_ctx, cfg.n_heads, hd), dt)
+            elif kind == RGLRU:
+                st = rglru_init_state(batch, cfg, dt)
+                c = jax.tree_util.tree_map(
+                    lambda a: jnp.broadcast_to(a, (stage.n,) + a.shape), st)
+                # local attn window cache lives in its own unit slot
+            else:  # RWKV6
+                st = rwkv_init_state(batch, cfg, dt)
+                c = jax.tree_util.tree_map(
+                    lambda a: jnp.broadcast_to(a, (stage.n,) + a.shape), st)
+            per_unit[f"u{i}"] = c
+        cache["stages"].append(per_unit)
+    return cache
+
+
+def _apply_unit_decode(unit_params, unit_cache, x_t, cfg, unit, moe,
+                       write_index, visible, kv_pos, q_pos):
+    new_cache = {}
+    for i, kind in enumerate(unit):
+        p = unit_params[f"u{i}"]
+        c = unit_cache[f"u{i}"]
+        h = apply_norm(p["norm1"], x_t, cfg.norm_type, cfg.norm_eps)
+        if kind in (ATTN, LOCAL_ATTN):
+            if cfg.mla is not None:
+                mix, c2 = _mla_decode_dense(p["mixer"], h, c, write_index,
+                                            visible, kv_pos, q_pos, cfg)
+            elif kind == LOCAL_ATTN:
+                mix, c2 = _local_attn_decode(p["mixer"], h, c, write_index,
+                                             q_pos, cfg)
+            else:
+                mix, c2 = _attn_decode_dense(p["mixer"], h, c, write_index,
+                                             visible, kv_pos, q_pos, cfg, kind)
+            if "cross" in p and "cross_k" in c:
+                hc = apply_norm(p["cross_norm"], x_t + mix, cfg.norm_type,
+                                cfg.norm_eps)
+                mix = mix + _cross_decode(p["cross"], hc, c, cfg)
+                c2["cross_k"], c2["cross_v"] = c["cross_k"], c["cross_v"]
+        elif kind == RGLRU:
+            mix, c2 = rglru_decode(p["mixer"], h, c, cfg)
+        else:
+            mix, c2 = rwkv_tm_decode(
+                p["mixer"], h, {"wkv": c["wkv"], "shift": c["shift"]}, cfg)
+            c2 = {**c2, "cm_shift": c["cm_shift"]}
+        x_t = x_t + mix
+        h2 = apply_norm(p["norm2"], x_t, cfg.norm_type, cfg.norm_eps)
+        if moe:
+            y, _ = moe_ffn(p["ffn"], h2, cfg)
+        elif kind == RWKV6:
+            y, new_shift = rwkv_cm_decode(p["ffn"], h2, c["cm_shift"])
+            c2["cm_shift"] = new_shift
+        else:
+            y = apply_mlp(p["ffn"], h2, cfg.mlp_activation)
+        x_t = x_t + y
+        new_cache[f"u{i}"] = c2
+    return x_t, new_cache
+
+
+def _local_attn_decode(p, h, c, write_index, q_pos, cfg):
+    """Sliding-window decode against a ring buffer of size `window`."""
+    import math as _m
+    b = h.shape[0]
+    hd, nh, nkv = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads
+    g = nh // nkv
+    q = (h @ p["wq"]).reshape(b, 1, nh, hd)
+    k_t = (h @ p["wk"]).reshape(b, 1, nkv, hd)
+    v_t = (h @ p["wv"]).reshape(b, 1, nkv, hd)
+    if cfg.qk_norm:
+        q = apply_norm(p["q_norm"], q, "rmsnorm", cfg.norm_eps)
+        k_t = apply_norm(p["k_norm"], k_t, "rmsnorm", cfg.norm_eps)
+    if cfg.pos_embedding == "rope":
+        from .layers import apply_rope
+        q = apply_rope(q, q_pos[:, None], cfg.rope_theta)
+        k_t = apply_rope(k_t, q_pos[:, None], cfg.rope_theta)
+    buf = c["k"].shape[2] if c["k"].ndim == 5 else c["k"].shape[1]
+    # cache inside a unit (after scan slicing) is (B, buf, nkv, hd)
+    slot = jnp.mod(write_index, buf)
+    k = jax.lax.dynamic_update_slice_in_dim(c["k"], k_t.astype(c["k"].dtype), slot, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(c["v"], v_t.astype(c["v"].dtype), slot, axis=1)
+    pos = c["pos"].at[:, slot].set(q_pos)
+    valid = c["valid"].at[:, slot].set(True)
+    diff = q_pos[:, None] - pos
+    visible = valid & (diff >= 0) & (diff < cfg.sliding_window)
+    qg = q.reshape(b, 1, nkv, g, hd)
+    sc = jnp.einsum("bqkgh,bskh->bkgqs", qg.astype(jnp.float32),
+                    k.astype(jnp.float32)) / _m.sqrt(hd)
+    if cfg.attn_logit_softcap > 0:
+        sc = jnp.tanh(sc / cfg.attn_logit_softcap) * cfg.attn_logit_softcap
+    from ..core.masks import NEG_INF
+    sc = sc + jnp.where(visible[:, None, None, None, :], 0.0, NEG_INF)
+    w = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", w, v.astype(jnp.float32))
+    out = out.reshape(b, 1, nh * hd).astype(h.dtype)
+    return out @ p["wo"], {"k": k, "v": v, "pos": pos, "valid": valid}
+
+
+def _attn_decode_dense(p, h, c, write_index, visible, kv_pos, q_pos, cfg, kind):
+    from .attention import attention_decode  # local to avoid cycle
+    # attention_decode handles rope/qk-norm/window; it takes kv_pos/kv_valid
+    out, new = attention_decode(
+        p, h, {"k": c["k"], "v": c["v"]},
+        write_index,
+        kv_pos[:, : c["k"].shape[1]],
+        visible[:, : c["k"].shape[1]],
+        q_pos, cfg, kind,
+    )
+    return out, {"k": new["k"], "v": new["v"]}
+
+
+def _mla_decode_dense(p, h, c, write_index, visible, kv_pos, q_pos, cfg):
+    out, new = mla_decode(
+        p, h, {"c_kv": c["c_kv"], "k_rope": c["k_rope"]},
+        write_index, kv_pos, visible, q_pos, cfg,
+    )
+    return out, {"c_kv": new["c_kv"], "k_rope": new["k_rope"]}
+
+
+def _cross_decode(p, h, c, cfg):
+    b = h.shape[0]
+    hd, nh = cfg.resolved_head_dim, cfg.n_heads
+    q = (h @ p["wq"]).reshape(b, 1, nh, hd)
+    import math as _m
+    sc = jnp.einsum("bqnh,bsnh->bnqs", q.astype(jnp.float32),
+                    c["cross_k"].astype(jnp.float32)) / _m.sqrt(hd)
+    w = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bnqs,bsnh->bqnh", w, c["cross_v"].astype(jnp.float32))
+    return out.reshape(b, 1, nh * hd).astype(h.dtype) @ p["wo"]
+
+
+def decode_step(
+    params: dict,
+    cache: dict,
+    token_t: jnp.ndarray,      # (B,) int32
+    write_index: jnp.ndarray,  # scalar int32
+    q_pos: jnp.ndarray,        # (B,) adaptive positions
+    cfg: ModelConfig,
+) -> Tuple[jnp.ndarray, dict]:
+    """One decode step for all active streams. Returns (logits (B,V), cache)."""
+    b = token_t.shape[0]
+    x = embed_tokens(params["embed"], token_t)[:, None, :]
+    if cfg.pos_embedding == "learned":
+        x = x + learned_pos(params["pos"], q_pos)[:, None, :]
+    kv_pos = cache["kv_pos"].at[:, write_index].set(q_pos)
+    kv_valid = cache["kv_valid"].at[:, write_index].set(True)
+    visible = kv_valid & (kv_pos <= q_pos[:, None])
+
+    new_stage_caches = []
+    for stage, sp, sc in zip(compute_stages(cfg), params["stages"],
+                             cache["stages"]):
+        if cfg.scan_layers and stage.n > 1:
+            def body(x_t, xs, _stage=stage):
+                unit_p, unit_c = xs
+                x_t, new_c = _apply_unit_decode(
+                    unit_p, unit_c, x_t, cfg, _stage.unit, _stage.moe,
+                    write_index, visible, kv_pos, q_pos)
+                return x_t, new_c
+            x, new_c = jax.lax.scan(body, x, (sp, sc))
+        else:
+            new_cs = []
+            for i in range(stage.n):
+                unit_p = jax.tree_util.tree_map(lambda a, i=i: a[i], sp)
+                unit_c = jax.tree_util.tree_map(lambda a, i=i: a[i], sc)
+                x, nc = _apply_unit_decode(
+                    unit_p, unit_c, x, cfg, stage.unit, stage.moe,
+                    write_index, visible, kv_pos, q_pos)
+                new_cs.append(nc)
+            new_c = _stack(new_cs)
+        new_stage_caches.append(new_c)
+
+    x = apply_norm(params["final_norm"], x, cfg.norm_type, cfg.norm_eps)
+    head = params["lm_head"] if "lm_head" in params else params["embed"]["table"].T
+    logits = unembed(head, x, cfg.logit_softcap)[:, 0]
+    return logits, {"kv_pos": kv_pos, "kv_valid": kv_valid,
+                    "stages": new_stage_caches}
+
+
+def prefill_cross_kv(params: dict, cache: dict, enc_out: jnp.ndarray,
+                     cfg: ModelConfig) -> dict:
+    """Precompute whisper cross-attention K/V from encoder output."""
+    hd, nh = cfg.resolved_head_dim, cfg.n_heads
+    b, t, _ = enc_out.shape
+    new_stages = []
+    for stage, sp, sc in zip(compute_stages(cfg), params["stages"],
+                             cache["stages"]):
+        sc = dict(sc)
+        for i, kind in enumerate(stage.unit):
+            if kind in (ATTN, LOCAL_ATTN) and "cross_k" in sc[f"u{i}"]:
+                def per_layer(pp):
+                    k = (enc_out @ pp[f"u{i}"]["cross"]["wk"]).reshape(b, t, nh, hd)
+                    v = (enc_out @ pp[f"u{i}"]["cross"]["wv"]).reshape(b, t, nh, hd)
+                    return k, v
+
+                ks, vs = jax.vmap(
+                    lambda pp: per_layer(pp), in_axes=(0,)
+                )(sp)
+                unit_c = dict(sc[f"u{i}"])
+                unit_c["cross_k"] = ks.astype(unit_c["cross_k"].dtype)
+                unit_c["cross_v"] = vs.astype(unit_c["cross_v"].dtype)
+                sc[f"u{i}"] = unit_c
+        new_stages.append(sc)
+    return {**cache, "stages": new_stages}

@@ -1,0 +1,19 @@
+from .checkpoint import load_checkpoint, save_checkpoint
+from .loss import batch_topo, loss_fn, make_train_step, masked_ce
+from .optimizer import AdamWConfig, adamw_update, init_opt_state, lr_schedule
+
+__all__ = [
+    "TrainConfig",
+    "train_model",
+    "load_checkpoint",
+    "save_checkpoint",
+    "batch_topo",
+    "loss_fn",
+    "make_train_step",
+    "masked_ce",
+    "AdamWConfig",
+    "adamw_update",
+    "init_opt_state",
+    "lr_schedule",
+]
+from .trainer import TrainConfig, train_model

@@ -1,0 +1,73 @@
+"""Checkpointing: pytrees serialized with msgpack (+ numpy buffers).
+
+No orbax in this container; this is a self-contained, deterministic
+format with shape/dtype manifests and atomic rename on save.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _flatten_with_paths(tree: Any):
+    flat = jax.tree_util.tree_flatten_with_path(tree)
+    entries = []
+    for path, leaf in flat[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        entries.append((key, leaf))
+    return entries, flat[1]
+
+
+def save_checkpoint(path: str, tree: Any, step: int = 0,
+                    metadata: Dict | None = None) -> None:
+    entries, _ = _flatten_with_paths(tree)
+    payload = {
+        "step": step,
+        "metadata": metadata or {},
+        "tensors": {
+            key: {
+                "dtype": str(np.asarray(leaf).dtype),
+                "shape": list(np.asarray(leaf).shape),
+                "data": np.ascontiguousarray(
+                    np.asarray(leaf)
+                ).tobytes(),
+            }
+            for key, leaf in entries
+        },
+    }
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)))
+    with os.fdopen(fd, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+    os.replace(tmp, path)
+
+
+def load_checkpoint(path: str, like: Any) -> Tuple[Any, int, Dict]:
+    """Restore into the structure of ``like`` (a pytree template)."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    tensors = payload["tensors"]
+    entries, tdef = _flatten_with_paths(like)
+    leaves = []
+    for key, leaf in entries:
+        if key not in tensors:
+            raise KeyError(f"checkpoint missing tensor '{key}'")
+        rec = tensors[key]
+        arr = np.frombuffer(rec["data"], dtype=np.dtype(rec["dtype"]))
+        arr = arr.reshape(rec["shape"])
+        want = np.asarray(leaf)
+        if list(arr.shape) != list(want.shape):
+            raise ValueError(
+                f"shape mismatch for '{key}': ckpt {arr.shape} vs model {want.shape}"
+            )
+        leaves.append(jnp.asarray(arr))
+    tree = jax.tree_util.tree_unflatten(tdef, leaves)
+    return tree, payload["step"], payload.get("metadata", {})

@@ -1,0 +1,80 @@
+"""DAG-masked cross-entropy loss + the jit-able train_step factory."""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models import TopoBatch, forward, forward_with_hidden, mtp_forward
+from ..models.config import ModelConfig
+from .optimizer import AdamWConfig, adamw_update
+
+
+import os
+
+# Sharded-CE (§Perf iteration): take_along_axis over a vocab-sharded
+# logits tensor forces XLA to all-gather the logits; the one-hot
+# contraction keeps the reduction local per vocab shard and all-reduces
+# only a (B, S) scalar field. Toggle to measure both (dryrun --sharded-ce).
+_SHARDED_CE = os.environ.get("REPRO_SHARDED_CE", "0") == "1"
+
+
+def masked_ce(logits: jnp.ndarray, targets: jnp.ndarray,
+              mask: jnp.ndarray) -> jnp.ndarray:
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    if _SHARDED_CE:
+        onehot = jax.nn.one_hot(targets, logits.shape[-1], dtype=lp.dtype)
+        nll = -jnp.einsum("...v,...v->...", lp, onehot)
+    else:
+        nll = -jnp.take_along_axis(lp, targets[..., None], axis=-1)[..., 0]
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def batch_topo(batch: Dict[str, jnp.ndarray]) -> TopoBatch:
+    return TopoBatch(
+        seg_id=batch["seg_id"],
+        layer_id=batch["layer_id"],
+        pos_id=batch["pos_id"],
+        seg_visible=batch.get("seg_visible"),
+    )
+
+
+def loss_fn(params: Any, batch: Dict[str, jnp.ndarray], cfg: ModelConfig
+            ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    topo = batch_topo(batch)
+    extra = {}
+    if cfg.vision is not None and "image_embeds" in batch:
+        extra["image_embeds"] = batch["image_embeds"]
+    if cfg.encoder is not None and "audio_embeds" in batch:
+        extra["audio_embeds"] = batch["audio_embeds"]
+    if cfg.mtp_depth > 0:
+        logits, aux, h_final = forward_with_hidden(
+            params, batch["tokens"], topo, cfg, **extra)
+        ce = masked_ce(logits, batch["targets"], batch["loss_mask"])
+        mtp_logits = mtp_forward(params, batch["tokens"], h_final, topo, cfg)
+        # mtp predicts t+2: logits index i corresponds to target index i+1
+        mtp_ce = masked_ce(
+            mtp_logits[:, :-1],
+            batch["targets"][:, 2:],
+            batch["loss_mask"][:, 2:],
+        )
+        total = ce + 0.3 * mtp_ce + aux
+        return total, {"ce": ce, "mtp_ce": mtp_ce, "aux": aux}
+    logits, aux = forward(params, batch["tokens"], topo, cfg, **extra)
+    ce = masked_ce(logits, batch["targets"], batch["loss_mask"])
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: Optional[AdamWConfig] = None):
+    opt_cfg = opt_cfg or AdamWConfig()
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, batch, cfg), has_aux=True)(params)
+        params, opt_state, opt_metrics = adamw_update(
+            params, grads, opt_state, opt_cfg)
+        return params, opt_state, {"loss": loss, **metrics, **opt_metrics}
+
+    return train_step

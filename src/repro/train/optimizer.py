@@ -1,0 +1,82 @@
+"""AdamW + cosine schedule with linear warmup, as a pure pytree
+transformation (no optax dependency in this container)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    learning_rate: float = 1e-5          # paper Sec. 5.1
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    grad_clip: float = 1.0
+
+
+def init_opt_state(params: Any) -> dict:
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return {
+        "mu": jax.tree_util.tree_map(zeros, params),
+        "nu": jax.tree_util.tree_map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def lr_schedule(step: jnp.ndarray, cfg: AdamWConfig) -> jnp.ndarray:
+    step_f = step.astype(jnp.float32)
+    warm = step_f / jnp.maximum(cfg.warmup_steps, 1)
+    decay_steps = jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1)
+    progress = jnp.clip((step_f - cfg.warmup_steps) / decay_steps, 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * progress))
+    decayed = cfg.min_lr_ratio + (1.0 - cfg.min_lr_ratio) * cos
+    return cfg.learning_rate * jnp.where(step_f < cfg.warmup_steps, warm, decayed)
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def adamw_update(
+    params: Any, grads: Any, state: dict, cfg: AdamWConfig
+) -> Tuple[Any, dict, dict]:
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    lr = lr_schedule(step, cfg)
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * jnp.square(g)
+        mu_hat = mu / bc1
+        nu_hat = nu / bc2
+        delta = mu_hat / (jnp.sqrt(nu_hat) + cfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), mu, nu
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_mu = jax.tree_util.tree_leaves(state["mu"])
+    flat_nu = jax.tree_util.tree_leaves(state["nu"])
+    out = [upd(p, g, m, n) for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = jax.tree_util.tree_unflatten(tdef, [o[0] for o in out])
+    new_mu = jax.tree_util.tree_unflatten(tdef, [o[1] for o in out])
+    new_nu = jax.tree_util.tree_unflatten(tdef, [o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, {"mu": new_mu, "nu": new_nu, "step": step}, metrics

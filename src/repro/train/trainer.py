@@ -1,0 +1,74 @@
+"""Training loop: curated corpus -> trained MedVerse model (CPU-scale
+here; the pjit path in launch/train.py scales the same step function to
+the production mesh)."""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..data.dataset import Corpus, encode_example, make_batches
+from ..models import init_params
+from ..models.config import ModelConfig
+from .loss import make_train_step
+from .optimizer import AdamWConfig, init_opt_state
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    epochs: int = 3                 # paper Sec. 5.1: 3 epochs
+    batch_size: int = 8
+    seq_len: int = 256
+    learning_rate: float = 1e-3     # word-level small models train hot
+    log_every: int = 20
+    causal: bool = False            # False -> MedVerse attention (Mask-*)
+    seed: int = 0
+    max_examples: Optional[int] = None
+
+
+def train_model(cfg: ModelConfig, corpus: Corpus, tcfg: TrainConfig,
+                params=None) -> Tuple[dict, List[Dict[str, float]]]:
+    tok = corpus.tokenizer
+    assert tok.vocab_size <= cfg.vocab_size, (
+        f"tokenizer vocab {tok.vocab_size} exceeds model vocab "
+        f"{cfg.vocab_size}")
+    examples = corpus.train
+    if tcfg.max_examples:
+        examples = examples[: tcfg.max_examples]
+    encoded = [encode_example(e, tok, causal=tcfg.causal) for e in examples]
+    if params is None:
+        params = init_params(jax.random.PRNGKey(tcfg.seed), cfg)
+    total_steps = max(tcfg.epochs * (len(encoded) // tcfg.batch_size), 1)
+    opt_cfg = AdamWConfig(
+        learning_rate=tcfg.learning_rate,
+        warmup_steps=min(20, max(total_steps // 10, 1)),
+        total_steps=total_steps,
+    )
+    opt_state = init_opt_state(params)
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg))
+    history: List[Dict[str, float]] = []
+    it = 0
+    for epoch in range(tcfg.epochs):
+        batches = make_batches(encoded, tcfg.batch_size, tcfg.seq_len,
+                               seed=tcfg.seed + epoch)
+        for batch in batches:
+            jb = {k: jnp.asarray(v) for k, v in batch.items()}
+            t0 = time.time()
+            params, opt_state, metrics = step_fn(params, opt_state, jb)
+            if it % tcfg.log_every == 0:
+                rec = {"step": it, "epoch": epoch,
+                       "loss": float(metrics["loss"]),
+                       "ce": float(metrics["ce"]),
+                       "dt": time.time() - t0}
+                history.append(rec)
+            it += 1
+    if history:
+        history.append({"step": it, "epoch": tcfg.epochs,
+                        "loss": history[-1]["loss"],
+                        "ce": history[-1]["ce"], "dt": 0.0})
+    return params, history

@@ -1,0 +1,161 @@
+"""Per-architecture smoke tests: reduced variants (2-3 layers,
+d_model<=512, <=4 experts), one forward + one train-grad step + one
+decode step on CPU, asserting shapes and no NaNs."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import (
+    TopoBatch,
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    prefill_cross_kv,
+    encoder_forward,
+)
+
+B, S = 2, 16
+
+
+def make_inputs(cfg, key):
+    ks = jax.random.split(key, 4)
+    tokens = jax.random.randint(ks[0], (B, S), 0, cfg.vocab_size)
+    topo = TopoBatch.linear(B, S)
+    extra = {}
+    if cfg.vision is not None:
+        d = cfg.vision.embed_dim or cfg.d_model
+        extra["image_embeds"] = jax.random.normal(
+            ks[1], (B, cfg.vision.n_image_tokens, d), jnp.float32)
+    if cfg.encoder is not None:
+        extra["audio_embeds"] = jax.random.normal(
+            ks[2], (B, cfg.encoder.n_ctx, cfg.d_model), jnp.float32)
+    return tokens, topo, extra
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_smoke(arch):
+    cfg = get_config(arch, smoke=True)
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, cfg)
+    tokens, topo, extra = make_inputs(cfg, key)
+    logits, aux = jax.jit(
+        lambda p, t: forward(p, t, topo, cfg, **extra)
+    )(params, tokens)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits)).all(), f"{arch}: NaN/Inf logits"
+    assert np.isfinite(float(aux))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_grad_smoke(arch):
+    """One training step: masked CE + grad, finite values, nonzero grads."""
+    cfg = get_config(arch, smoke=True)
+    key = jax.random.PRNGKey(1)
+    params = init_params(key, cfg)
+    tokens, topo, extra = make_inputs(cfg, key)
+    targets = jnp.roll(tokens, -1, axis=1)
+
+    def loss_fn(p):
+        logits, aux = forward(p, tokens, topo, cfg, **extra)
+        lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(lp, targets[..., None], axis=-1)[..., 0]
+        return nll.mean() + aux
+
+    loss, grads = jax.jit(jax.value_and_grad(loss_fn))(params)
+    assert np.isfinite(float(loss)), f"{arch}: non-finite loss"
+    leaves = jax.tree_util.tree_leaves(grads)
+    assert all(np.isfinite(np.asarray(g)).all() for g in leaves), (
+        f"{arch}: non-finite grads"
+    )
+    total = sum(float(jnp.abs(g).sum()) for g in leaves)
+    assert total > 0, f"{arch}: all-zero grads"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_smoke(arch):
+    cfg = get_config(arch, smoke=True)
+    key = jax.random.PRNGKey(2)
+    params = init_params(key, cfg)
+    max_len = 32
+    cache = init_cache(cfg, B, max_len)
+    if cfg.encoder is not None:
+        audio = jax.random.normal(key, (B, cfg.encoder.n_ctx, cfg.d_model),
+                                  jnp.float32)
+        enc_out = encoder_forward(params, audio, cfg)
+        cache = prefill_cross_kv(params, cache, enc_out, cfg)
+
+    step = jax.jit(
+        lambda p, c, t, wi, qp: decode_step(p, c, t, wi, qp, cfg)
+    )
+    tok = jnp.zeros((B,), jnp.int32)
+    for i in range(3):
+        logits, cache = step(params, cache, tok,
+                             jnp.int32(i), jnp.full((B,), i, jnp.int32))
+        assert logits.shape == (B, cfg.vocab_size)
+        assert np.isfinite(np.asarray(logits)).all(), f"{arch}: NaN decode"
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def test_decode_matches_forward_llama():
+    """Greedy decode logits must match teacher-forced forward logits
+    (cache correctness, linear topology)."""
+    cfg = get_config("llama3.2-1b", smoke=True)
+    key = jax.random.PRNGKey(3)
+    params = init_params(key, cfg)
+    s = 8
+    tokens = jax.random.randint(key, (B, s), 0, cfg.vocab_size)
+    topo = TopoBatch.linear(B, s)
+    full_logits, _ = forward(params, tokens, topo, cfg)
+
+    cache = init_cache(cfg, B, s)
+    for i in range(s):
+        logits, cache = decode_step(
+            params, cache, tokens[:, i], jnp.int32(i),
+            jnp.full((B,), i, jnp.int32), cfg)
+        np.testing.assert_allclose(
+            np.asarray(logits), np.asarray(full_logits[:, i]),
+            rtol=2e-4, atol=2e-4,
+        )
+
+
+def test_decode_matches_forward_rwkv():
+    """Recurrent-state decode equals the scan-based forward for RWKV6."""
+    cfg = get_config("rwkv6-3b", smoke=True)
+    key = jax.random.PRNGKey(4)
+    params = init_params(key, cfg)
+    s = 8
+    tokens = jax.random.randint(key, (B, s), 0, cfg.vocab_size)
+    topo = TopoBatch.linear(B, s)
+    full_logits, _ = forward(params, tokens, topo, cfg)
+    cache = init_cache(cfg, B, s)
+    for i in range(s):
+        logits, cache = decode_step(
+            params, cache, tokens[:, i], jnp.int32(i),
+            jnp.full((B,), i, jnp.int32), cfg)
+        np.testing.assert_allclose(
+            np.asarray(logits), np.asarray(full_logits[:, i]),
+            rtol=5e-4, atol=5e-4,
+        )
+
+
+def test_decode_matches_forward_recurrentgemma():
+    cfg = get_config("recurrentgemma-2b", smoke=True)
+    key = jax.random.PRNGKey(5)
+    params = init_params(key, cfg)
+    s = 8
+    tokens = jax.random.randint(key, (B, s), 0, cfg.vocab_size)
+    topo = TopoBatch.linear(B, s)
+    full_logits, _ = forward(params, tokens, topo, cfg)
+    cache = init_cache(cfg, B, s)
+    for i in range(s):
+        logits, cache = decode_step(
+            params, cache, tokens[:, i], jnp.int32(i),
+            jnp.full((B,), i, jnp.int32), cfg)
+        np.testing.assert_allclose(
+            np.asarray(logits), np.asarray(full_logits[:, i]),
+            rtol=5e-4, atol=5e-4,
+        )

@@ -1,0 +1,197 @@
+"""Unit + property tests for the DAG / Petri-net / plan core."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    ColoredToken,
+    CycleError,
+    PetriNet,
+    PetriScheduler,
+    PlanParseError,
+    ReasoningDAG,
+    ReasoningPlan,
+    OutlineStep,
+    merge_paths_to_dag,
+    parse_answer,
+    parse_plan,
+    parse_steps,
+)
+
+
+# ---------------------------------------------------------------- DAG ----
+def diamond():
+    # 0 -> 1, 0 -> 2, {1,2} -> 3
+    return ReasoningDAG.from_deps({0: [], 1: [0], 2: [0], 3: [1, 2]})
+
+
+def test_layers_diamond():
+    assert diamond().topological_layers() == [[0], [1, 2], [3]]
+    assert diamond().depth() == 3
+
+
+def test_cycle_detected():
+    with pytest.raises(CycleError):
+        ReasoningDAG.from_deps({0: [1], 1: [0]})
+
+
+def test_self_loop_detected():
+    with pytest.raises(CycleError):
+        ReasoningDAG.from_deps({0: [0]})
+
+
+def test_unknown_dep():
+    with pytest.raises(ValueError):
+        ReasoningDAG.from_deps({0: [5]})
+
+
+def test_ancestors():
+    d = diamond()
+    assert d.ancestors(3) == frozenset({0, 1, 2})
+    assert d.ancestors(0) == frozenset()
+
+
+def test_classify():
+    assert ReasoningDAG.from_deps({0: [], 1: [0]}).classify_topology() == (
+        "single_linear_chain"
+    )
+    # two independent chains joining only at a final conclusion-like sink
+    two = ReasoningDAG.from_deps({0: [], 1: [], 2: [0], 3: [1]})
+    assert two.classify_topology() == "multiple_independent_chains"
+    assert diamond().classify_topology() == "complex_intersecting"
+
+
+@st.composite
+def random_dag_deps(draw):
+    n = draw(st.integers(min_value=1, max_value=12))
+    deps = {}
+    for v in range(n):
+        if v == 0:
+            deps[v] = []
+        else:
+            k = draw(st.integers(min_value=0, max_value=min(3, v)))
+            deps[v] = sorted(
+                draw(
+                    st.lists(
+                        st.integers(min_value=0, max_value=v - 1),
+                        min_size=k,
+                        max_size=k,
+                        unique=True,
+                    )
+                )
+            )
+    return deps
+
+
+@settings(max_examples=60, deadline=None)
+@given(random_dag_deps())
+def test_property_layers_respect_deps(deps):
+    """Every node sits in a strictly later layer than all its deps, and the
+    layering partitions the node set."""
+    dag = ReasoningDAG.from_deps(deps)
+    layers = dag.topological_layers()
+    where = {v: i for i, layer in enumerate(layers) for v in layer}
+    assert sorted(where) == sorted(dag.nodes)
+    for v in dag.nodes:
+        for p in dag.predecessors(v):
+            assert where[p] < where[v]
+
+
+@settings(max_examples=60, deadline=None)
+@given(random_dag_deps())
+def test_property_petri_run_matches_layers(deps):
+    """Max-parallel Petri execution fires exactly the topological layers,
+    each transition exactly once (the 'fires exactly once' invariant)."""
+    dag = ReasoningDAG.from_deps(deps)
+    net = PetriNet.from_dag(dag)
+    sched = PetriScheduler(net, ColoredToken(history="ctx"))
+    fired_order = []
+
+    def execute(t, inputs):
+        fired_order.append(t.tid)
+        return ColoredToken(history="+".join(i.history for i in inputs) + f"|{t.tid}")
+
+    sched.run(execute)
+    assert sched.is_complete()
+    assert sorted(fired_order) == sorted(dag.nodes)
+    assert sched.frontier_layers() == dag.topological_layers()
+
+
+# ---------------------------------------------------------------- Petri ---
+def test_fork_join_modes():
+    net = PetriNet.from_dag(diamond())
+    sched = PetriScheduler(net, ColoredToken(history="ctx"))
+    rounds = sched.run(lambda t, inputs: ColoredToken(history=f"h{t.tid}"))
+    modes = {f.transition.tid: f.mode for rnd in rounds for f in rnd}
+    assert modes[1] == "fork" and modes[2] == "fork"  # share place of 0
+    assert modes[3] == "join"
+
+
+def test_token_history_flows():
+    net = PetriNet.from_dag(diamond())
+    sched = PetriScheduler(net, ColoredToken(history="ctx"))
+
+    def execute(t, inputs):
+        return ColoredToken(history=",".join(i.history for i in inputs) + f">{t.tid}")
+
+    sched.run(execute)
+    final = sched.marking.get(net.transition(3).post[0])
+    assert "1" in final.history and "2" in final.history
+
+
+# ---------------------------------------------------------------- Plan ----
+EXAMPLE_PLAN = (
+    "some linear thinking... <Plan> "
+    "<Outline> Transient Step 1: Thyrotoxicosis -> KI; Dependency: [] </Outline> "
+    "<Outline> Transient Step 2: Thyrotoxicosis -> Iodine; Dependency: [] </Outline> "
+    "<Outline> Transient Step 3: KI, Iodine -> Reduced vascularity; "
+    "Dependency: [1, 2] </Outline> </Plan> trailing"
+)
+
+
+def test_parse_plan_roundtrip():
+    plan = parse_plan(EXAMPLE_PLAN)
+    assert len(plan.steps) == 3
+    assert plan.steps[2].dependencies == (1, 2)
+    dag = plan.to_dag()
+    assert dag.topological_layers() == [[0, 1], [2]]
+    reparsed = parse_plan(plan.serialize())
+    assert reparsed == plan
+
+
+def test_parse_plan_missing_dep():
+    bad = ReasoningPlan(
+        steps=(OutlineStep(index=1, label="A -> B", dependencies=(7,)),)
+    )
+    with pytest.raises(PlanParseError):
+        bad.to_dag()
+
+
+def test_parse_plan_rejects_garbage():
+    with pytest.raises(PlanParseError):
+        parse_plan("no plan here")
+    with pytest.raises(PlanParseError):
+        parse_plan("<Plan> empty </Plan>")
+
+
+def test_parse_steps_and_answer():
+    text = (
+        "<Step> Transient Step 1: A -> B because of X. </Step>"
+        "<Step> Transient Step 2: B -> C hence Y. </Step>"
+        "<Conclusion> Explanation: as shown. Answer: b) Obv </Conclusion>"
+    )
+    steps = parse_steps(text)
+    assert set(steps) == {1, 2}
+    assert "because of X" in steps[1]
+    assert parse_answer(text) == "b) Obv"
+
+
+def test_merge_paths_to_dag():
+    paths = [["q", "A", "C"], ["q", "B", "C"]]
+    dag, meta = merge_paths_to_dag(paths)
+    # transitions: ->A, ->B, {A,B}->C
+    layers = dag.topological_layers()
+    assert len(layers) == 2 and len(layers[0]) == 2
+    targets = {meta[t][0] for t in dag.nodes}
+    assert targets == {"A", "B", "C"}

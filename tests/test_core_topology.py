@@ -1,0 +1,198 @@
+"""Tests for topology metadata + DAG attention masks (paper Eq. 3)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    PAD_SEG,
+    ReasoningDAG,
+    SegmentSpec,
+    ancestor_attention_allowed,
+    build_topology,
+    dag_attention_allowed,
+    dag_depth_tokens,
+    linear_topology,
+    mask_bias,
+    sliding_window_allowed,
+    topology_from_dag,
+)
+
+
+def diamond():
+    return ReasoningDAG.from_deps({0: [], 1: [0], 2: [0], 3: [1, 2]})
+
+
+def make_diamond_topo(prefix=4, step=3, conc=2):
+    dag = diamond()
+    topo, order = topology_from_dag(
+        dag, prefix_len=prefix, step_lens={t: step for t in dag.nodes},
+        conclusion_len=conc,
+    )
+    return dag, topo, order
+
+
+def test_adaptive_positions_fork_alignment():
+    """Steps 1 and 2 (same frontier) share a start index (fork alignment);
+    the join step starts at the max predecessor end (Sec. 4.2)."""
+    _, topo, order = make_diamond_topo(prefix=4, step=3, conc=2)
+    # packed: prefix(4) step0(3) | step1(3) step2(3) | step3(3) conc(2)
+    assert order == [0, 1, 2, 3]
+    pos = topo.pos_id
+    # prefix positions 0..3
+    assert list(pos[:4]) == [0, 1, 2, 3]
+    # layer 1 = step0 starts at 4
+    assert list(pos[4:7]) == [4, 5, 6]
+    # layer 2 = steps 1 and 2 both start at 7 (fork alignment)
+    assert list(pos[7:10]) == [7, 8, 9]
+    assert list(pos[10:13]) == [7, 8, 9]
+    # layer 3 = join step starts at max end = 10
+    assert list(pos[13:16]) == [10, 11, 12]
+    # conclusion starts after join
+    assert list(pos[16:18]) == [13, 14]
+    assert dag_depth_tokens(topo) == 15  # critical path < total tokens (18)
+
+
+def test_dag_mask_blocks_same_layer_siblings():
+    _, topo, _ = make_diamond_topo()
+    allowed = np.asarray(
+        dag_attention_allowed(jnp.asarray(topo.seg_id), jnp.asarray(topo.layer_id))
+    )
+    # token 7 (step1 first token) vs token 10..12 (step2): same layer,
+    # different seg -> blocked both directions (within causal order)
+    assert not allowed[10, 7]
+    assert not allowed[12, 8]
+    # step1 token can see prefix and step0
+    assert allowed[7, 0] and allowed[7, 4]
+    # join step (tokens 13..15) can see both branches (paper mask: earlier
+    # layers are visible)
+    assert allowed[13, 8] and allowed[13, 11]
+    # causality in packed order
+    assert not allowed[7, 10]
+    # diagonal allowed
+    assert allowed[9, 9]
+
+
+def test_ancestor_mask_stricter():
+    dag, topo, _ = make_diamond_topo()
+    seg = jnp.asarray(topo.seg_id)
+    paper = np.asarray(dag_attention_allowed(seg, jnp.asarray(topo.layer_id)))
+    strict = np.asarray(ancestor_attention_allowed(seg, jnp.asarray(topo.seg_visible)))
+    # strict is a subset of paper-allowed for cross-layer non-ancestors:
+    # here the diamond has no non-ancestor earlier layer, so add one:
+    assert (strict & ~paper).sum() == 0 or True  # strictness checked below
+    # everything strict allows, paper allows too (on this diamond)
+    assert not (strict & ~paper).any()
+
+
+def test_ancestor_mask_blocks_non_ancestor_earlier_layer():
+    # 0->2, 1 independent; layers [[0,1],[2]]; 2 depends only on 0.
+    dag = ReasoningDAG.from_deps({0: [], 1: [], 2: [0]})
+    topo, order = topology_from_dag(
+        dag, prefix_len=2, step_lens={0: 2, 1: 2, 2: 2}, conclusion_len=1
+    )
+    seg = jnp.asarray(topo.seg_id)
+    paper = np.asarray(dag_attention_allowed(seg, jnp.asarray(topo.layer_id)))
+    strict = np.asarray(ancestor_attention_allowed(seg, jnp.asarray(topo.seg_visible)))
+    # packed: prefix(2) step0(2) step1(2) step2(2) conc(1)
+    # step2 tokens are 6,7; step1 tokens are 4,5 (non-ancestor, earlier layer)
+    assert paper[6, 4]        # paper mask allows earlier layer
+    assert not strict[6, 4]   # strict ancestor mask blocks it
+    assert strict[6, 2]       # ancestor (step0) visible
+    assert strict[8, 4]       # conclusion sees everything
+
+
+def test_padding_masked():
+    topo = linear_topology(5).pad_to(8)
+    allowed = np.asarray(
+        dag_attention_allowed(jnp.asarray(topo.seg_id), jnp.asarray(topo.layer_id))
+    )
+    assert not allowed[6, 6]  # pad rows/cols fully masked
+    assert not allowed[6, 2]
+    assert allowed[4, 2]
+
+
+def test_mask_bias_values():
+    topo = linear_topology(4)
+    allowed = dag_attention_allowed(
+        jnp.asarray(topo.seg_id), jnp.asarray(topo.layer_id)
+    )
+    bias = np.asarray(mask_bias(allowed))
+    assert bias[2, 1] == 0.0
+    assert bias[1, 2] < -1e29
+
+
+def test_sliding_window_composition():
+    _, topo, _ = make_diamond_topo(prefix=6, step=3, conc=2)
+    win = np.asarray(sliding_window_allowed(jnp.asarray(topo.pos_id), window=4))
+    # prefix token 5 (pos 5) cannot see pos 0/1 with window 4
+    assert not win[5, 0]
+    assert win[5, 2]
+    # fork-aligned siblings have *equal* positions; window never lets a
+    # token see a "future" adaptive position
+    pos = topo.pos_id
+    ii, jj = np.where(win)
+    assert (pos[jj] <= pos[ii]).all()
+
+
+@st.composite
+def random_dag_and_lens(draw):
+    n = draw(st.integers(min_value=1, max_value=8))
+    deps = {}
+    for v in range(n):
+        k = draw(st.integers(min_value=0, max_value=min(2, v)))
+        deps[v] = sorted(
+            draw(
+                st.lists(
+                    st.integers(min_value=0, max_value=v - 1),
+                    min_size=k,
+                    max_size=k,
+                    unique=True,
+                )
+            )
+        ) if v else []
+    lens = {v: draw(st.integers(min_value=1, max_value=4)) for v in range(n)}
+    prefix = draw(st.integers(min_value=1, max_value=5))
+    conc = draw(st.integers(min_value=1, max_value=3))
+    return deps, lens, prefix, conc
+
+
+@settings(max_examples=50, deadline=None)
+@given(random_dag_and_lens())
+def test_property_topology_invariants(data):
+    """System invariants: (1) same-frontier segments share a start pos;
+    (2) a segment's start pos >= every predecessor segment's end pos;
+    (3) the paper mask never allows attention across same-layer different
+    segments; (4) pos ids are contiguous within a segment."""
+    deps, lens, prefix, conc = data
+    dag = ReasoningDAG.from_deps(deps)
+    topo, order = topology_from_dag(dag, prefix, lens, conc)
+    seg, lay, pos = topo.seg_id, topo.layer_id, topo.pos_id
+    # (1) & (4)
+    for s in np.unique(seg):
+        idx = np.where(seg == s)[0]
+        p = pos[idx]
+        assert (np.diff(p) == 1).all()
+    starts = {}
+    ends = {}
+    for s in np.unique(seg):
+        idx = np.where(seg == s)[0]
+        starts[int(s)] = int(pos[idx].min())
+        ends[int(s)] = int(pos[idx].max()) + 1
+        layer_of = int(lay[idx[0]])
+        for s2 in np.unique(seg):
+            idx2 = np.where(seg == s2)[0]
+            if int(lay[idx2[0]]) == layer_of:
+                assert int(pos[idx2].min()) == starts[int(s)]
+    # (2) predecessors end before dependents start
+    for t in dag.nodes:
+        for p_ in dag.predecessors(t):
+            assert ends[p_ + 1] <= starts[t + 1]
+    # (3)
+    allowed = np.asarray(
+        dag_attention_allowed(jnp.asarray(seg), jnp.asarray(lay))
+    )
+    same_layer = lay[:, None] == lay[None, :]
+    diff_seg = seg[:, None] != seg[None, :]
+    assert not (allowed & same_layer & diff_seg).any()

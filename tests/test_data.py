@@ -1,0 +1,148 @@
+"""Curator / tokenizer / dataset tests (incl. properties)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.plan import parse_plan
+from repro.core.topology import PAD_SEG
+from repro.data import (
+    Corpus,
+    Curator,
+    Tokenizer,
+    build_kg,
+    encode_example,
+    generate_qa,
+    make_batches,
+    pad_example,
+)
+from repro.data.tokenizer import BOS, EOS, PAD, SPECIALS
+
+
+# ------------------------------------------------------------- tokenizer ---
+def test_tokenizer_roundtrip_words():
+    tok = Tokenizer.train(["alpha beta gamma <Plan> delta </Plan>"])
+    ids = tok.encode("alpha <Plan> beta </Plan>")
+    assert tok.decode(ids) == "alpha <Plan> beta </Plan>"
+
+
+def test_tokenizer_specials_single_tokens():
+    tok = Tokenizer.train(["x"])
+    for s in SPECIALS[4:]:
+        ids = tok.encode(s)
+        assert len(ids) == 1, s
+        assert tok.inv[ids[0]] == s
+
+
+def test_tokenizer_unk():
+    tok = Tokenizer.train(["known words"])
+    ids = tok.encode("unknown stuff known")
+    assert ids[0] == 1 and ids[1] == 1  # <unk>
+    assert tok.decode([ids[2]]) == "known"
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.sampled_from("abcde fgh ij klm nop".split()),
+                min_size=1, max_size=20))
+def test_property_tokenizer_roundtrip(words):
+    tok = Tokenizer.train(["abcde fgh ij klm nop"])
+    text = " ".join(words)
+    assert tok.decode(tok.encode(text)) == text
+
+
+# ---------------------------------------------------------------- curator --
+@pytest.fixture(scope="module")
+def kg_items():
+    kg = build_kg(20, seed=3)
+    items = generate_qa(kg, 64, seed=4)
+    return kg, items
+
+
+def test_curator_produces_valid_examples(kg_items):
+    kg, items = kg_items
+    cur = Curator(kg)
+    exs = cur.curate_all(items)
+    assert len(exs) > len(items) // 2, cur.stats
+    for ex in exs[:10]:
+        # plan reparses to the same DAG (the dual-layer syntax check,
+        # re-verified independently here)
+        plan2 = parse_plan(ex.prefix_text)
+        assert plan2.to_dag().deps == ex.dag.deps
+        # answer is stated in the conclusion
+        assert ex.answer_text in ex.conclusion_text
+
+
+def test_curator_kg_grounding(kg_items):
+    """Every reasoning edge in every curated plan exists in the KG —
+    the paper's knowledge-grounding guarantee."""
+    kg, items = kg_items
+    cur = Curator(kg)
+    for ex in cur.curate_all(items)[:20]:
+        for step in ex.plan.steps:
+            lhs, tgt = step.label.rsplit("->", 1)
+            for src in (s.strip() for s in lhs.split(",")):
+                assert kg.has_edge(src, tgt.strip()), (src, tgt)
+
+
+def test_curator_stats_track_failures(kg_items):
+    kg, items = kg_items
+    cur = Curator(kg)
+    cur.curate_all(items)
+    assert cur.stats.n_ok > 0
+    assert cur.stats.n_items == len(items)
+
+
+# ---------------------------------------------------------------- dataset --
+@pytest.fixture(scope="module")
+def corpus():
+    return Corpus.build(n_items=80, n_clusters=16, seed=7)
+
+
+def test_encode_targets_segment_local(corpus):
+    ex = next(e for e in corpus.train if len(e.step_texts) >= 2)
+    enc = encode_example(ex, corpus.tokenizer)
+    # boundaries: where seg changes, prediction is masked
+    s = enc.length
+    for i in range(s - 1):
+        if enc.seg_id[i] != enc.seg_id[i + 1]:
+            assert enc.loss_mask[i] == 0.0
+        if enc.loss_mask[i] > 0:
+            assert enc.targets[i] == enc.tokens[i + 1]
+    # question/options are never supervised
+    assert enc.loss_mask[:5].sum() == 0
+
+
+def test_encode_causal_variant(corpus):
+    ex = corpus.train[0]
+    enc = encode_example(ex, corpus.tokenizer, causal=True)
+    assert (enc.seg_id == 0).all()
+    assert (enc.pos_id == np.arange(enc.length)).all()
+    enc_d = encode_example(ex, corpus.tokenizer, causal=False)
+    # same tokens either way — only the metadata differs
+    assert np.array_equal(enc.tokens, enc_d.tokens)
+
+
+def test_pad_and_batch(corpus):
+    encs = [encode_example(e, corpus.tokenizer) for e in corpus.train[:9]]
+    batches = make_batches(encs, 4, 384)
+    assert batches, "no batches produced"
+    b = batches[0]
+    assert b["tokens"].shape == (4, 384)
+    pad_region = b["seg_id"] == PAD_SEG
+    assert (b["loss_mask"][pad_region] == 0).all()
+
+
+def test_adaptive_positions_parallel_steps(corpus):
+    """Sibling steps in the same frontier share their starting pos_id."""
+    ex = next(e for e in corpus.train
+              if e.topology == "complex_intersecting")
+    enc = encode_example(ex, corpus.tokenizer)
+    layers = ex.dag.topological_layers()
+    wide = next((l for l in layers if len(l) >= 2), None)
+    if wide is None:
+        pytest.skip("no wide frontier in this example")
+    starts = []
+    for t in wide:
+        idx = np.where(enc.seg_id == t + 1)[0]
+        starts.append(enc.pos_id[idx[0]])
+    assert len(set(starts)) == 1

@@ -1,0 +1,201 @@
+"""Engine tests: paged decode correctness vs the dense model path,
+zero-copy fork/join semantics, radix tree, allocator refcounts, and the
+full two-phase generate() flow."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.core.plan import parse_plan
+from repro.data.tokenizer import SPECIALS, Tokenizer
+from repro.engine import (
+    EngineConfig,
+    IndexChain,
+    MedVerseEngine,
+    PageAllocator,
+    PoolConfig,
+    RadixTree,
+    SerialEngine,
+    init_pool,
+    paged_decode,
+    prefill_forward,
+)
+from repro.models import TopoBatch, forward, init_params
+
+
+CFG = get_config("medverse-7b", smoke=True)
+
+
+def make_tok():
+    corpus = ["alpha beta gamma delta epsilon zeta eta theta iota kappa "
+              "Transient Step 1: 2: 3: Dependency: [] [1] [2] [1, 2] "
+              "A -> B ; C D q x y z"]
+    return Tokenizer.train(corpus)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    tok = make_tok()
+    params = init_params(jax.random.PRNGKey(0), CFG)
+    return tok, params
+
+
+def test_prefill_matches_forward(setup):
+    tok, params = setup
+    ids = np.arange(1, 11, dtype=np.int32)
+    logits, ks, vs = prefill_forward(
+        params, jnp.asarray(ids)[None], jnp.arange(10, dtype=jnp.int32)[None],
+        CFG)
+    full, _ = forward(params, jnp.asarray(ids)[None],
+                      TopoBatch.linear(1, 10), CFG)
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(full[0, -1]),
+                               rtol=2e-4, atol=2e-4)
+    assert ks.shape == (CFG.n_layers, 10, CFG.n_kv_heads, CFG.resolved_head_dim)
+
+
+def test_paged_decode_matches_dense(setup):
+    """Linear paged decode logits == teacher-forced forward logits."""
+    tok, params = setup
+    seq = np.asarray([5, 9, 3, 7, 2, 8, 4, 6], np.int32)
+    full, _ = forward(params, jnp.asarray(seq)[None],
+                      TopoBatch.linear(1, len(seq)), CFG)
+
+    pc = PoolConfig(n_layers=CFG.n_layers, n_pages=64, page_size=4,
+                    n_kv_heads=CFG.n_kv_heads,
+                    head_dim=CFG.resolved_head_dim)
+    pool = init_pool(pc)
+    alloc = PageAllocator(pc)
+    chain = IndexChain.fresh(alloc)
+    n_slots_batch = 2
+    s_max = 32
+    for i, t in enumerate(seq):
+        slot = chain.next_slot()
+        tokens = jnp.asarray(np.pad([t], (0, n_slots_batch - 1)))
+        qp = jnp.asarray(np.pad([i], (0, n_slots_batch - 1)))
+        sl = jnp.asarray(np.pad([slot], (0, n_slots_batch - 1)))
+        ci = jnp.asarray(np.pad(chain.padded(s_max)[None],
+                                [(0, n_slots_batch - 1), (0, 0)]))
+        cl = jnp.asarray(np.pad([chain.length], (0, n_slots_batch - 1)))
+        logits, pool["k"], pool["v"], pool["pos"] = paged_decode(
+            params, pool["k"], pool["v"], pool["pos"],
+            tokens, qp, sl, ci, cl, CFG)
+        np.testing.assert_allclose(
+            np.asarray(logits[0]), np.asarray(full[0, i]),
+            rtol=3e-4, atol=3e-4,
+            err_msg=f"paged decode diverges at position {i}")
+
+
+def test_fork_zero_copy_and_refcounts():
+    pc = PoolConfig(n_layers=1, n_pages=8, page_size=4, n_kv_heads=1,
+                    head_dim=8)
+    alloc = PageAllocator(pc)
+    parent = IndexChain.fresh(alloc)
+    parent.reserve(6)  # 2 pages
+    assert alloc.pages_in_use == 2
+    child = parent.fork()
+    # zero-copy: same slot indices, no new pages yet
+    assert np.array_equal(child.idx, parent.idx)
+    assert alloc.pages_in_use == 2
+    # child appends into its OWN page; parent's pages untouched
+    s = child.next_slot()
+    assert alloc.pages_in_use == 3
+    assert s // pc.page_size not in {i // pc.page_size for i in parent.idx}
+    # releasing parent keeps shared pages alive for child
+    parent.release()
+    assert alloc.pages_in_use == 3
+    child.release()
+    assert alloc.pages_in_use == 0
+
+
+def test_join_dedups_shared_ancestors():
+    pc = PoolConfig(n_layers=1, n_pages=16, page_size=4, n_kv_heads=1,
+                    head_dim=8)
+    alloc = PageAllocator(pc)
+    ctx = IndexChain.fresh(alloc)
+    ctx.reserve(5)
+    a = ctx.fork(); a.reserve(3)
+    b = ctx.fork(); b.reserve(2)
+    merged = IndexChain.join([a, b], prefix_len=5)
+    # prefix once + suffixes
+    assert merged.length == 5 + 3 + 2
+    assert len(set(merged.idx.tolist())) == merged.length  # no dup slots
+    # order: prefix, a-suffix, b-suffix
+    assert np.array_equal(merged.idx[:5], ctx.idx[:5])
+    assert np.array_equal(merged.idx[5:8], a.idx[5:8])
+
+
+def test_radix_tree_prefix_reuse():
+    tree = RadixTree()
+    toks = [4, 5, 6, 7, 8]
+    slots = np.arange(100, 105, dtype=np.int32)
+    tree.insert(toks, slots)
+    m, path = tree.match_prefix([4, 5, 6, 9])
+    assert m.tolist() == [100, 101, 102]
+    tree.release(path)
+    m2, path2 = tree.match_prefix([1, 2])
+    assert m2.size == 0
+    # insert splits edges correctly
+    tree.insert([4, 5, 9], np.asarray([100, 101, 200], np.int32))
+    m3, _ = tree.match_prefix([4, 5, 9])
+    assert m3.tolist() == [100, 101, 200]
+    assert tree.n_cached_tokens() >= 6
+
+
+PLAN = ("<Think> 1. q -> A -> C. 2. q -> B -> C. </Think> <Plan> "
+        "<Outline> Transient Step 1: q -> A ; Dependency: [] </Outline> "
+        "<Outline> Transient Step 2: q -> B ; Dependency: [] </Outline> "
+        "<Outline> Transient Step 3: A , B -> C ; Dependency: [1, 2] "
+        "</Outline> </Plan>")
+
+
+def test_engine_full_flow(setup):
+    """Two-phase generate() with an injected diamond plan: three steps
+    decode (two in parallel), join merges, conclusion runs, and the
+    critical path is shorter than total tokens."""
+    tok, params = setup
+    ecfg = EngineConfig(max_slots=4, page_size=4, n_pages=512,
+                        max_chain_len=256, max_step_tokens=6,
+                        max_conclusion_tokens=6, plan_override=PLAN)
+    eng = MedVerseEngine(params, CFG, tok, ecfg)
+    res = eng.generate(["q alpha beta"])[0]
+    assert res.plan_ok, res.text
+    assert len(res.step_texts) == 3
+    assert res.topology == "complex_intersecting"
+    # parallel speedup structurally: critical path < total generated
+    assert res.critical_path_tokens < res.n_tokens
+    assert "<Step>" in res.text and "<Conclusion>" in res.text
+    # frontier layering recorded: [1,2] then [3]
+    # (scheduler history holds 0-based tids)
+
+
+def test_engine_fallback_on_bad_plan(setup):
+    tok, params = setup
+    ecfg = EngineConfig(max_slots=2, page_size=4, n_pages=256,
+                        max_chain_len=128, max_plan_tokens=8,
+                        max_conclusion_tokens=4)
+    eng = MedVerseEngine(params, CFG, tok, ecfg)
+    res = eng.generate(["alpha beta gamma"])[0]
+    assert not res.plan_ok        # random model produced no valid plan
+    assert res.ok                 # but the request still completes
+
+
+def test_engine_batched_requests(setup):
+    tok, params = setup
+    ecfg = EngineConfig(max_slots=6, page_size=4, n_pages=1024,
+                        max_chain_len=256, max_step_tokens=4,
+                        max_conclusion_tokens=4, plan_override=PLAN)
+    eng = MedVerseEngine(params, CFG, tok, ecfg)
+    res = eng.generate(["q alpha", "q beta", "q gamma"])
+    assert len(res) == 3
+    assert all(r.plan_ok for r in res)
+
+
+def test_serial_engine(setup):
+    tok, params = setup
+    ecfg = EngineConfig(max_slots=2, page_size=4, n_pages=256,
+                        max_chain_len=128)
+    eng = SerialEngine(params, CFG, tok, ecfg)
+    res = eng.generate(["alpha beta"], max_tokens=8)[0]
+    assert res.n_tokens == 8

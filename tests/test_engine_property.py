@@ -1,0 +1,87 @@
+"""Property tests on the engine's host-side invariants: fork/join chain
+algebra over random DAG executions (no model needed — pure kvcache and
+scheduler machinery)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ColoredToken, PetriNet, PetriScheduler, ReasoningDAG
+from repro.engine.kvcache import IndexChain, PageAllocator, PoolConfig
+
+
+@st.composite
+def random_dag(draw):
+    n = draw(st.integers(min_value=1, max_value=8))
+    deps = {}
+    for v in range(n):
+        k = draw(st.integers(min_value=0, max_value=min(2, v)))
+        deps[v] = sorted(draw(st.lists(
+            st.integers(min_value=0, max_value=v - 1),
+            min_size=k, max_size=k, unique=True))) if v else []
+    lens = [draw(st.integers(min_value=1, max_value=6)) for _ in range(n)]
+    return deps, lens
+
+
+@settings(max_examples=40, deadline=None)
+@given(random_dag(), st.integers(min_value=1, max_value=9))
+def test_chain_algebra_over_random_executions(dag_lens, ctx_len):
+    """Simulate a full Petri execution with real index chains:
+      (1) every chain's indices are unique (no token double-membership);
+      (2) a child chain extends its parents' token sets exactly by its
+          own appended tokens;
+      (3) ordered-dedup join contains the union of predecessor tokens;
+      (4) refcounted pages are all freed after release."""
+    deps, lens = dag_lens
+    dag = ReasoningDAG.from_deps(deps)
+    net = PetriNet.from_dag(dag)
+    pc = PoolConfig(n_layers=1, n_pages=512, page_size=4, n_kv_heads=1,
+                    head_dim=4)
+    alloc = PageAllocator(pc)
+    ctx = IndexChain.fresh(alloc)
+    ctx.reserve(ctx_len)
+    sched = PetriScheduler(net, ColoredToken(history="ctx", kv_ref=ctx))
+    chains = {}
+
+    def execute(t, inputs):
+        in_chains = [tok.kv_ref for tok in inputs]
+        if len(in_chains) == 1:
+            ch = in_chains[0].fork()
+        else:
+            # engine-style ordered dedup join
+            seen, parts, pages = set(), [], set()
+            for c in in_chains:
+                arr = c.idx[:c.length]
+                mask = np.array([int(s) not in seen for s in arr])
+                seen.update(int(s) for s in arr)
+                parts.append(arr[mask])
+                pages |= c.pages
+            ch = IndexChain(alloc)
+            ch.idx = np.concatenate(parts).astype(np.int32)
+            ch.length = len(ch.idx)
+            ch.pages = pages
+            for pg in pages:
+                alloc.incref(pg)
+        before = set(ch.idx.tolist())
+        ch.reserve(lens[t.tid])
+        after = set(ch.idx.tolist())
+        # (1) uniqueness
+        assert len(ch.idx) == len(after)
+        # (2) extension property
+        assert before <= after and len(after - before) == lens[t.tid]
+        # (3) contains all ancestors' tokens
+        for c in in_chains:
+            assert set(c.idx[:c.length].tolist()) <= after
+        chains[t.tid] = ch
+        return ColoredToken(history=f"t{t.tid}", kv_ref=ch)
+
+    sched.run(execute)
+    assert sched.is_complete()
+    # every chain includes the full ctx prefix
+    ctx_set = set(ctx.idx.tolist())
+    for ch in chains.values():
+        assert ctx_set <= set(ch.idx.tolist())
+    # (4) release everything -> all pages freed
+    for ch in chains.values():
+        ch.release()
+    ctx.release()
+    assert alloc.pages_in_use == 0

@@ -1,0 +1,227 @@
+"""Per-kernel validation: shape/dtype sweeps + assert_allclose against
+the pure-jnp oracles (interpret=True executes the kernel body on CPU).
+Also cross-checks the kernels against the *model* implementations they
+accelerate."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import ReasoningDAG, topology_from_dag
+from repro.kernels.dag_attention.ops import dag_attention
+from repro.kernels.dag_attention.ref import dag_attention_ref
+from repro.kernels.decode_attention.ops import paged_decode_attention
+from repro.kernels.decode_attention.ref import paged_decode_attention_ref
+from repro.kernels.rglru_scan.ops import rglru_scan
+from repro.kernels.rglru_scan.ref import rglru_scan_ref
+from repro.kernels.rwkv6_scan.ops import rwkv6_scan
+from repro.kernels.rwkv6_scan.ref import rwkv6_scan_ref
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(
+        rtol=2e-5, atol=2e-5)
+
+
+def make_topo(batch, s, seed=0):
+    rng = np.random.default_rng(seed)
+    dag = ReasoningDAG.from_deps({0: [], 1: [], 2: [0, 1], 3: [0]})
+    lens = {t: int(rng.integers(3, 8)) for t in dag.nodes}
+    prefix = int(rng.integers(4, 10))
+    topo, _ = topology_from_dag(dag, prefix, lens, 4)
+    topo = topo.pad_to(s)
+    tile = lambda a: jnp.asarray(np.stack([a] * batch))
+    return tile(topo.seg_id), tile(topo.layer_id), tile(topo.pos_id)
+
+
+# --------------------------------------------------------- dag_attention ---
+@pytest.mark.parametrize("b,s,nh,nkv,hd,bq,bk", [
+    (1, 32, 4, 4, 8, 8, 8),       # MHA
+    (2, 64, 4, 2, 16, 16, 16),    # GQA
+    (1, 64, 8, 1, 32, 32, 16),    # MQA, uneven blocks
+    (2, 48, 4, 2, 16, 16, 16),    # padding path (48 -> 64)
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dag_attention_sweep(b, s, nh, nkv, hd, bq, bk, dtype):
+    key = jax.random.PRNGKey(s + nh)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, s, nh, hd), dtype)
+    k = jax.random.normal(ks[1], (b, s, nkv, hd), dtype)
+    v = jax.random.normal(ks[2], (b, s, nkv, hd), dtype)
+    seg, lay, pos = make_topo(b, s)
+    out = dag_attention(q, k, v, seg, lay, pos, block_q=bq, block_k=bk,
+                        interpret=True)
+    ref = dag_attention_ref(
+        q.transpose(0, 2, 1, 3).astype(jnp.float32),
+        k.transpose(0, 2, 1, 3).astype(jnp.float32),
+        v.transpose(0, 2, 1, 3).astype(jnp.float32),
+        seg, lay, pos).transpose(0, 2, 1, 3)
+    valid = np.asarray(seg[0] != -1)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32)[:, valid],
+        np.asarray(ref, np.float32)[:, valid], **_tol(dtype))
+
+
+def test_dag_attention_window():
+    b, s, nh, nkv, hd = 1, 64, 4, 2, 16
+    key = jax.random.PRNGKey(7)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, s, nh, hd))
+    k = jax.random.normal(ks[1], (b, s, nkv, hd))
+    v = jax.random.normal(ks[2], (b, s, nkv, hd))
+    seg, lay, pos = make_topo(b, s)
+    out = dag_attention(q, k, v, seg, lay, pos, window=6,
+                        block_q=16, block_k=16, interpret=True)
+    ref = dag_attention_ref(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), seg, lay, pos,
+        window=6).transpose(0, 2, 1, 3)
+    valid = np.asarray(seg[0] != -1)
+    np.testing.assert_allclose(np.asarray(out)[:, valid],
+                               np.asarray(ref)[:, valid],
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_dag_attention_matches_model_attention():
+    """Kernel == the model's naive masked attention on real topology."""
+    from repro.core.masks import dag_attention_allowed, mask_bias
+    b, s, nh, nkv, hd = 2, 64, 4, 2, 8
+    key = jax.random.PRNGKey(3)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, s, nh, hd))
+    k = jax.random.normal(ks[1], (b, s, nkv, hd))
+    v = jax.random.normal(ks[2], (b, s, nkv, hd))
+    seg, lay, pos = make_topo(b, s, seed=5)
+    out = dag_attention(q, k, v, seg, lay, pos, block_q=8, block_k=8,
+                        interpret=True)
+    allowed = dag_attention_allowed(seg, lay)
+    g = nh // nkv
+    qg = q.reshape(b, s, nkv, g, hd).astype(jnp.float32)
+    sc = jnp.einsum("bqkgh,bskh->bkgqs", qg, k.astype(jnp.float32))
+    sc = sc / np.sqrt(hd) + mask_bias(allowed)[:, None, None]
+    w = jax.nn.softmax(sc, axis=-1)
+    ref = jnp.einsum("bkgqs,bskh->bqkgh", w, v.astype(jnp.float32))
+    ref = ref.reshape(b, s, nh, hd)
+    valid = np.asarray(seg[0] != -1)
+    np.testing.assert_allclose(np.asarray(out)[:, valid],
+                               np.asarray(ref)[:, valid],
+                               rtol=2e-5, atol=2e-5)
+
+
+# ------------------------------------------------------ decode_attention ---
+@pytest.mark.parametrize("b,nh,nkv,hd,npages,pg,pmax", [
+    (2, 4, 2, 16, 16, 8, 4),
+    (4, 8, 8, 8, 32, 4, 8),       # MHA
+    (1, 4, 1, 32, 8, 16, 3),      # MQA
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_sweep(b, nh, nkv, hd, npages, pg, pmax, dtype):
+    rng = np.random.default_rng(b + nh)
+    key = jax.random.PRNGKey(b)
+    q = jax.random.normal(key, (b, nh, hd), dtype)
+    kp = jax.random.normal(jax.random.PRNGKey(1), (npages, pg, nkv, hd), dtype)
+    vp = jax.random.normal(jax.random.PRNGKey(2), (npages, pg, nkv, hd), dtype)
+    pos = jnp.asarray(rng.integers(0, 50, (npages, pg)), jnp.int32)
+    pt = jnp.asarray(rng.integers(0, npages, (b, pmax)), jnp.int32)
+    pv = jnp.asarray(rng.integers(0, pg + 1, (b, pmax)), jnp.int32)
+    qpos = jnp.asarray(rng.integers(10, 60, (b,)), jnp.int32)
+    out = paged_decode_attention(q, kp, vp, pos, pt, pv, qpos,
+                                 interpret=True)
+    ref = paged_decode_attention_ref(
+        q.reshape(b, nkv, nh // nkv, hd).astype(jnp.float32),
+        kp.astype(jnp.float32), vp.astype(jnp.float32),
+        pos, pt, pv, qpos).reshape(b, nh, hd)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+def test_decode_attention_fork_join_semantics():
+    """Two forked streams sharing prefix pages then a joined stream over
+    both branches — kernel visibility equals chain content."""
+    rng = np.random.default_rng(0)
+    npages, pg, nkv, hd, nh = 8, 4, 2, 8, 4
+    kp = jax.random.normal(jax.random.PRNGKey(1), (npages, pg, nkv, hd))
+    vp = jax.random.normal(jax.random.PRNGKey(2), (npages, pg, nkv, hd))
+    # prefix = pages 0,1 (pos 0..7); branch A page 2 (pos 8..11);
+    # branch B page 3 (pos 8..11, fork-aligned); join reads all four.
+    pos = jnp.asarray(
+        np.stack([np.arange(4), np.arange(4, 8), np.arange(8, 12),
+                  np.arange(8, 12)] + [np.zeros(4)] * 4), jnp.int32)
+    pt = jnp.asarray([[0, 1, 2, 3]], jnp.int32)
+    pv = jnp.asarray([[4, 4, 4, 4]], jnp.int32)
+    q = jax.random.normal(jax.random.PRNGKey(3), (1, nh, hd))
+    qpos = jnp.asarray([12], jnp.int32)
+    out = paged_decode_attention(q, kp, vp, pos, pt, pv, qpos,
+                                 interpret=True)
+    ref = paged_decode_attention_ref(
+        q.reshape(1, nkv, nh // nkv, hd), kp, vp, pos, pt, pv,
+        qpos).reshape(1, nh, hd)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ------------------------------------------------------------ rglru_scan ---
+@pytest.mark.parametrize("b,s,w", [(1, 16, 8), (2, 64, 32), (3, 128, 128),
+                                   (2, 96, 24)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rglru_scan_sweep(b, s, w, dtype):
+    key = jax.random.PRNGKey(s)
+    a = jax.nn.sigmoid(jax.random.normal(key, (b, s, w))).astype(dtype)
+    bb = jax.random.normal(jax.random.PRNGKey(1), (b, s, w), dtype)
+    h0 = jax.random.normal(jax.random.PRNGKey(2), (b, w), jnp.float32)
+    out = rglru_scan(a, bb, h0, interpret=True)
+    ref = rglru_scan_ref(a.astype(jnp.float32), bb.astype(jnp.float32), h0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               **_tol(dtype))
+
+
+def test_rglru_scan_matches_model_block():
+    """Kernel equals the model's associative-scan path (zero init)."""
+    from repro.models.rglru import rglru_scan_ref as model_scan
+    b, s, w = 2, 32, 16
+    a = jax.nn.sigmoid(jax.random.normal(jax.random.PRNGKey(0), (b, s, w))) * 0.98
+    bb = jax.random.normal(jax.random.PRNGKey(1), (b, s, w))
+    out = rglru_scan(a, bb, interpret=True)
+    ref = model_scan(a, bb)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ------------------------------------------------------------ rwkv6_scan ---
+@pytest.mark.parametrize("b,s,h,n", [(1, 16, 2, 8), (2, 64, 4, 16),
+                                     (1, 32, 1, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rwkv6_scan_sweep(b, s, h, n, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(s + n), 6)
+    r = jax.random.normal(ks[0], (b, s, h, n), dtype)
+    k = jax.random.normal(ks[1], (b, s, h, n), dtype) * 0.3
+    v = jax.random.normal(ks[2], (b, s, h, n), dtype)
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (b, s, h, n))).astype(dtype)
+    u = jax.random.normal(ks[4], (h, n), jnp.float32) * 0.1
+    s0 = jax.random.normal(ks[5], (b, h, n, n), jnp.float32) * 0.1
+    out = rwkv6_scan(r, k, v, w, u, s0, interpret=True)
+    ref = rwkv6_scan_ref(r.astype(jnp.float32), k.astype(jnp.float32),
+                         v.astype(jnp.float32), w.astype(jnp.float32), u, s0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               **_tol(dtype))
+
+
+def test_rwkv6_scan_matches_model_wkv():
+    """Kernel equals models.rwkv.wkv_scan_ref on flat (B,S,D) layout."""
+    from repro.models.rwkv import wkv_scan_ref
+    b, s, h, n = 2, 24, 2, 8
+    d = h * n
+    ks = jax.random.split(jax.random.PRNGKey(9), 5)
+    r = jax.random.normal(ks[0], (b, s, d))
+    k = jax.random.normal(ks[1], (b, s, d)) * 0.3
+    v = jax.random.normal(ks[2], (b, s, d))
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (b, s, d)))
+    u = jax.random.normal(ks[4], (d,)) * 0.1
+    y_model, _ = wkv_scan_ref(r, k, v, w, u, n)
+    y_kernel = rwkv6_scan(
+        r.reshape(b, s, h, n), k.reshape(b, s, h, n),
+        v.reshape(b, s, h, n), w.reshape(b, s, h, n),
+        u.reshape(h, n), interpret=True)
+    np.testing.assert_allclose(np.asarray(y_kernel).reshape(b, s, d),
+                               np.asarray(y_model), rtol=2e-5, atol=2e-5)

@@ -1,0 +1,147 @@
+"""Launch-layer tests: sharding specs are valid & divisible, the pjit
+train step runs on a host mesh, and the dry-run entry point works in a
+subprocess (fresh process so XLA device-count forcing doesn't leak)."""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.shapes import SHAPES, train_input_specs
+from repro.launch.mesh import make_host_mesh
+from repro.launch.sharding import batch_specs, cache_specs_tree, param_specs
+from repro.models import init_cache, init_params
+from repro.train import init_opt_state
+
+
+class FakeMesh:
+    """Looks enough like a 16x16 production mesh for spec validation."""
+    axis_names = ("data", "model")
+    shape = {"data": 16, "model": 16}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_specs_divisible(arch):
+    """Every sharded dim must divide by its mesh axes (full configs)."""
+    cfg = get_config(arch)
+    params = jax.eval_shape(
+        lambda: init_params(jax.random.PRNGKey(0), cfg))
+    mesh = FakeMesh()
+    specs = param_specs(cfg, params, mesh)
+    leaves = jax.tree_util.tree_leaves(params)
+    spec_leaves = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(leaves) == len(spec_leaves)
+    n_sharded = 0
+    for leaf, spec in zip(leaves, spec_leaves):
+        assert len(tuple(spec)) == len(leaf.shape), (spec, leaf.shape)
+        for dim, ax in zip(leaf.shape, tuple(spec)):
+            if ax is None:
+                continue
+            size = (np.prod([mesh.shape[a] for a in ax])
+                    if isinstance(ax, tuple) else mesh.shape[ax])
+            assert dim % size == 0, (arch, spec, leaf.shape)
+            n_sharded += 1
+    assert n_sharded > 0, f"{arch}: nothing sharded at all"
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "deepseek-v3-671b",
+                                  "rwkv6-3b"])
+def test_cache_specs_divisible(arch):
+    cfg = get_config(arch)
+    shape = SHAPES["decode_32k"]
+    cache = jax.eval_shape(
+        lambda: init_cache(cfg, shape.global_batch, shape.seq_len))
+    mesh = FakeMesh()
+    specs = cache_specs_tree(cfg, cache, mesh)
+    for leaf, spec in zip(
+            jax.tree_util.tree_leaves(cache),
+            jax.tree_util.tree_leaves(specs,
+                                      is_leaf=lambda x: isinstance(x, P))):
+        for dim, ax in zip(leaf.shape, tuple(spec)):
+            if ax is None:
+                continue
+            size = (np.prod([mesh.shape[a] for a in ax])
+                    if isinstance(ax, tuple) else mesh.shape[ax])
+            assert dim % size == 0, (arch, spec, leaf.shape)
+
+
+def test_pjit_train_step_host_mesh():
+    """The full pjit train step executes on the 1x1 host mesh."""
+    from repro.models import meshctx
+    from repro.train import AdamWConfig, make_train_step
+
+    cfg = get_config("llama3.2-1b", smoke=True)
+    mesh = make_host_mesh()
+    jax.set_mesh(mesh)
+    meshctx.set_mesh(mesh, ("data",), "model")
+    try:
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        opt = init_opt_state(params)
+        pspecs = param_specs(cfg, params, mesh)
+        batch = {
+            "tokens": jnp.zeros((2, 16), jnp.int32),
+            "targets": jnp.zeros((2, 16), jnp.int32),
+            "loss_mask": jnp.ones((2, 16), jnp.float32),
+            "seg_id": jnp.zeros((2, 16), jnp.int32),
+            "layer_id": jnp.zeros((2, 16), jnp.int32),
+            "pos_id": jnp.broadcast_to(jnp.arange(16, dtype=jnp.int32),
+                                       (2, 16)),
+        }
+        step = jax.jit(
+            make_train_step(cfg, AdamWConfig()),
+            in_shardings=(pspecs, {"mu": pspecs, "nu": pspecs, "step": P()},
+                          batch_specs(cfg, batch, mesh)),
+        )
+        params2, opt2, metrics = step(params, opt, batch)
+        assert np.isfinite(float(metrics["loss"]))
+    finally:
+        meshctx.set_mesh(None)
+
+
+def test_dryrun_subprocess_skip_and_real():
+    """The dry-run CLI: a skipped long_500k pair exits 0 with a skip
+    record; a real decode pair compiles and reports roofline terms."""
+    env = {**os.environ, "PYTHONPATH": "src"}
+    out = "results/dryrun_test"
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+         "llama3.2-1b", "--shape", "long_500k", "--out", out],
+        capture_output=True, text=True, env=env, timeout=300)
+    assert r.returncode == 0, r.stdout + r.stderr
+    with open(os.path.join(out, "llama3.2-1b__long_500k__16_16.json")) as f:
+        rec = json.load(f)
+    assert rec["status"] == "skipped"
+
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+         "llama3.2-1b", "--shape", "decode_32k", "--out", out],
+        capture_output=True, text=True, env=env, timeout=900)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    with open(os.path.join(out, "llama3.2-1b__decode_32k__16_16.json")) as f:
+        rec = json.load(f)
+    assert rec["status"] == "ok"
+    assert rec["roofline"]["dominant"] in ("compute", "memory", "collective")
+    assert rec["roofline"]["collective_bytes"] > 0
+
+
+def test_roofline_collective_parser():
+    from repro.launch.roofline import parse_collectives
+
+    hlo = """
+      %ar = f32[16,128] all-reduce(f32[16,128] %x), replica_groups={}
+      %ag.1 = bf16[8,256]{1,0} all-gather(bf16[4,256] %y), dimensions={0}
+      %done = f32[2] all-reduce-done(f32[2] %h)
+      %nothing = f32[4] add(f32[4] %a, f32[4] %b)
+    """
+    st = parse_collectives(hlo)
+    assert st.bytes_by_kind["all-reduce"] == 16 * 128 * 4
+    assert st.bytes_by_kind["all-gather"] == 8 * 256 * 2
+    assert st.count_by_kind["all-reduce"] == 1  # -done not double counted

@@ -1,0 +1,21 @@
+"""The sharded-CE (one-hot contraction) path must be numerically
+identical to the take_along_axis gather path (§Perf iteration)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.train import loss as loss_mod
+
+
+def test_onehot_ce_equals_gather_ce(monkeypatch):
+    key = jax.random.PRNGKey(0)
+    logits = jax.random.normal(key, (2, 8, 32))
+    targets = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, 32)
+    mask = (jax.random.uniform(jax.random.PRNGKey(2), (2, 8)) > 0.3
+            ).astype(jnp.float32)
+    monkeypatch.setattr(loss_mod, "_SHARDED_CE", False)
+    a = float(loss_mod.masked_ce(logits, targets, mask))
+    monkeypatch.setattr(loss_mod, "_SHARDED_CE", True)
+    b = float(loss_mod.masked_ce(logits, targets, mask))
+    np.testing.assert_allclose(a, b, rtol=1e-6)
