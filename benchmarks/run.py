@@ -2,14 +2,22 @@
 
 Prints ``name,us_per_call,derived`` CSV lines. Run as:
     PYTHONPATH=src python -m benchmarks.run [--only NAME] [--fast]
+or directly (the CI smoke gate does this):
+    PYTHONPATH=src python benchmarks/run.py --smoke
 """
 
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
 import traceback
+
+if __package__ in (None, ""):  # direct script execution
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    __package__ = "benchmarks"
 
 
 def main() -> None:
@@ -18,6 +26,9 @@ def main() -> None:
                     help="run a single benchmark by module name")
     ap.add_argument("--fast", action="store_true",
                     help="smaller eval subsets")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate: fig4a/fig4b on a tiny config for a few "
+                         "tokens; asserts completion, not numbers")
     args = ap.parse_args()
 
     from . import (
@@ -34,6 +45,26 @@ def main() -> None:
         table8_train_infer,
     )
     from .common import get_artifacts
+
+    if args.smoke:
+        art = get_artifacts(n_items=60, epochs=1, tag="smoke")
+        benches = {
+            "fig4a_latency": lambda a: fig4a_latency.run(a, n_per_class=1),
+            "fig4b_throughput": lambda a: fig4b_throughput.run(
+                a, lengths=(32,)),
+        }
+        failures = 0
+        for name, fn in benches.items():
+            print(f"# === {name} (smoke) ===", flush=True)
+            t0 = time.time()
+            try:
+                fn(art)
+            except Exception as e:
+                failures += 1
+                print(f"{name},0.0,ERROR={type(e).__name__}:{e}")
+                traceback.print_exc()
+            print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+        sys.exit(1 if failures else 0)
 
     benches = {
         "roofline": lambda a: roofline.run(),

@@ -119,6 +119,7 @@ class PetriScheduler:
         self.net = net
         self.marking = Marking.initial(net, ctx_token)
         self._fired: set = set()
+        self._claimed: set = set()
         self.history: List[List[int]] = []  # frontier tids per step k
 
     # -- Eq. 1: enabled-transition frontier ---------------------------------
@@ -132,6 +133,22 @@ class PetriScheduler:
             ):
                 out.append(t)
         return out
+
+    # -- per-transition marking advance (async-frontier engine path) --------
+    def ready(self) -> List[Transition]:
+        """Enabled transitions not yet claimed for execution.
+
+        The engine claims a transition when it spawns the decode stream
+        for it; the transition fires later, when the stream finishes.
+        The synchronized path claims whole frontiers at the barrier; the
+        async path calls ``ready()`` after every individual ``fire`` so a
+        step's successors launch as soon as their own predecessors are
+        done, without waiting for unrelated frontier siblings.
+        """
+        return [t for t in self.frontier() if t.tid not in self._claimed]
+
+    def claim(self, t: Transition) -> None:
+        self._claimed.add(t.tid)
 
     def classify_mode(self, t: Transition, frontier: Optional[Sequence[Transition]] = None) -> str:
         """Fork if it shares a predecessor place with another transition in

@@ -1,10 +1,14 @@
 from .engine import EngineConfig, GenResult, MedVerseEngine, SerialEngine
-from .kvcache import IndexChain, PageAllocator, PoolConfig, init_pool
-from .paged_model import paged_decode, prefill_forward, supports_paged
+from .kvcache import (IndexChain, OutOfPagesError, PageAllocator, PoolConfig,
+                      init_pool)
+from .paged_model import (paged_decode, prefill_forward, prefix_pool_write,
+                          supports_paged)
 from .radix import RadixTree
 
 __all__ = [
     "EngineConfig",
+    "OutOfPagesError",
+    "prefix_pool_write",
     "GenResult",
     "MedVerseEngine",
     "SerialEngine",

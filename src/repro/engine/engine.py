@@ -16,6 +16,34 @@ position of all completed work (fork alignment / join-max, Sec. 4.2).
 
 All active streams across all requests and phases decode together in one
 batched ``paged_decode`` call per iteration — continuous batching.
+
+Scheduler modes
+---------------
+
+* ``async_frontier=False`` (paper default): frontier-synchronized. The
+  marking only advances when the whole frontier F_k has finished; every
+  stream of F_{k+1} starts at the global join-max position.
+* ``async_frontier=True``: per-transition marking advance. Each firing
+  immediately spawns whichever successors just became enabled
+  (``PetriScheduler.ready``), so short branches stop gating long ones.
+  Spawn positions use the join-max over the transition's *own*
+  predecessors — on DAGs where every join covers its frontier (diamond,
+  fan-out) this is the same position the synchronized path uses, so
+  temperature-0 output text is identical; on mixed-depth DAGs the engine
+  finishes in strictly fewer decode iterations.
+* ``radix_cache=True``: cross-request prefix reuse. Prefill consults the
+  radix tree before allocating (cache hits adopt existing pool slots) and
+  inserts the prompt afterwards; cached pages are pinned in the
+  allocator (``PageAllocator.pin``) and evicted LRU under page pressure.
+* chain bucketing: every decode step pads chains to the smallest
+  power-of-two bucket (>= ``min_chain_bucket``, capped at
+  ``max_chain_len``) covering the batch, instead of always paying
+  ``max_chain_len``-wide attention; ``warmup()`` pre-compiles the bucket
+  ladder so no request hits XLA compilation mid-generation.
+
+Page lifetime: ``generate`` releases every chain a request held when it
+finishes, so ``PageAllocator.used`` returns to its pre-request level;
+only radix-pinned prompt pages persist, as reclaimable cache.
 """
 
 from __future__ import annotations
@@ -35,7 +63,8 @@ from ..core.plan import PlanParseError, parse_plan
 from ..data.tokenizer import EOS, Tokenizer
 from ..models.config import ModelConfig
 from .kvcache import IndexChain, PageAllocator, PoolConfig, init_pool
-from .paged_model import paged_decode, prefill_forward, supports_paged
+from .paged_model import (paged_decode, prefill_forward, prefix_pool_write,
+                          supports_paged)
 from .radix import RadixTree
 from .sampling import sample_token
 
@@ -46,12 +75,17 @@ class EngineConfig:
     page_size: int = 16
     n_pages: int = 4096
     max_chain_len: int = 640
+    min_chain_bucket: int = 64     # smallest power-of-two decode bucket
     max_plan_tokens: int = 256
     max_step_tokens: int = 64
     max_conclusion_tokens: int = 96
     max_serial_tokens: int = 512
     temperature: float = 0.0
-    async_frontier: bool = False   # paper: frontier-synchronized
+    # False: frontier-synchronized (paper default). True: per-transition
+    # marking advance — successors spawn as soon as their own
+    # predecessors fire (see module docstring, "Scheduler modes").
+    async_frontier: bool = False
+    radix_cache: bool = True       # cross-request prompt-prefix reuse
     seed: int = 0
     # Teacher-forced plan injection: skip LLM planning and force this
     # plan text (deterministic execution; also the Table-5 "Direct Petri
@@ -106,6 +140,7 @@ class _Request:
         self.sched: Optional[PetriScheduler] = None
         self.labels: Dict[int, str] = {}
         self.ctx_chain: Optional[IndexChain] = None
+        self.final_chain: Optional[IndexChain] = None
         self.ctx_end = 0
         self.max_end = 0
         self.step_results: Dict[int, Tuple[str, IndexChain, int]] = {}
@@ -139,7 +174,13 @@ class MedVerseEngine:
         self.pc = pc
         self.pool = init_pool(pc)
         self.alloc = PageAllocator(pc)
-        self.radix = RadixTree()
+        self.radix = RadixTree(page_size=pc.page_size,
+                               on_pin=self.alloc.pin,
+                               on_unpin=self.alloc.unpin)
+        # under page pressure, reclaim radix-pinned cache pages (LRU)
+        self.alloc.reclaim_cb = self.radix.evict_one
+        self.last_iters = 0                  # decode iterations, last generate()
+        self.bucket_hist: Dict[int, int] = {}  # chain bucket -> decode steps
         self.rng = np.random.default_rng(self.ecfg.seed)
         self.id_plan_end = tok.token_id("</Plan>")
         self.id_step_end = tok.token_id("</Step>")
@@ -154,8 +195,16 @@ class MedVerseEngine:
         ids = req.prompt_ids
         n = len(ids)
         chain = IndexChain.fresh(self.alloc)
-        slots = chain.reserve(n)
-        pos = np.arange(n, dtype=np.int32)
+        cached = np.zeros((0,), np.int32)
+        path: List = []
+        if self.ecfg.radix_cache:
+            # cross-request prefix reuse: adopt cached pool slots instead
+            # of allocating; always recompute >= 1 token for the logits
+            cached, path = self.radix.match_prefix(ids)
+            cached = cached[: n - 1]
+            chain.adopt(cached)
+        m = int(cached.size)
+        new_slots = chain.reserve(n - m)
         # bucket the prompt length so one compilation serves many prompts
         bucket = -(-n // self.PREFILL_BUCKET) * self.PREFILL_BUCKET
         ids_p = np.zeros((bucket,), np.int32)
@@ -164,11 +213,18 @@ class MedVerseEngine:
         logits, ks, vs = prefill_forward(
             self.params, jnp.asarray(ids_p)[None],
             jnp.asarray(pos_p)[None], self.cfg, jnp.int32(n))
-        self.pool["k"] = self.pool["k"].at[:, slots].set(
-            ks[:, :n].astype(self.pool["k"].dtype))
-        self.pool["v"] = self.pool["v"].at[:, slots].set(
-            vs[:, :n].astype(self.pool["v"].dtype))
-        self.pool["pos"] = self.pool["pos"].at[slots].set(jnp.asarray(pos))
+        # write only positions [m, n): the cached prefix already holds
+        # identical K/V; prefix and padding rows get the out-of-range
+        # sentinel slot and are dropped device-side
+        wslots = np.full((bucket,), self.pc.n_slots, np.int32)
+        wslots[m:n] = new_slots
+        self.pool["k"], self.pool["v"], self.pool["pos"] = prefix_pool_write(
+            self.pool["k"], self.pool["v"], self.pool["pos"],
+            ks, vs, jnp.asarray(wslots), jnp.asarray(pos_p))
+        if self.ecfg.radix_cache:
+            self.radix.insert(ids, chain.idx[:n])
+            # pages are pinned via the allocator; lookup refs can go
+            self.radix.release(path)
         st = _Stream(chain, q_pos=n, purpose="plan", rid=req.rid,
                      stop_id=self.id_plan_end,
                      max_new=self.ecfg.max_plan_tokens)
@@ -183,34 +239,55 @@ class MedVerseEngine:
         return st
 
     # --------------------------------------------------------- fork/join ---
-    def _spawn_frontier(self, req: _Request) -> List[_Stream]:
-        t0 = time.monotonic()
-        front = req.sched.frontier()
-        if not front:
-            return []
-        req.sched.history.append([t.tid for t in front])
-        start_pos = req.max_end  # frontier-synchronized adaptive start
-        streams = []
-        fj_before = req.timings["fork_join"]
-        for t in front:
-            tf = time.monotonic()
-            if len(t.pre) == 1:
-                src = (req.ctx_chain if t.pre[0] == req.sched.net.ctx_place
-                       else req.step_results[self._tid_of_place(req, t.pre[0])][1])
-                chain = src.fork()
+    def _start_pos(self, req: _Request, t) -> int:
+        """Join-max adaptive position over t's own predecessors (the
+        async per-transition advance); the sync path instead starts every
+        frontier stream at the global ``req.max_end``."""
+        ends = []
+        for p in t.pre:
+            if p == req.sched.net.ctx_place:
+                ends.append(req.ctx_end)
             else:
-                chains = [req.step_results[self._tid_of_place(req, p)][1]
-                          for p in t.pre]
-                chain = self._dedup_join(chains)
-            req.timings["fork_join"] += time.monotonic() - tf
-            header = self.tok.encode(
-                f"<Step> Transient Step {t.tid + 1}: {req.labels.get(t.tid, '')}")
-            st = _Stream(chain, q_pos=start_pos, purpose="step",
-                         rid=req.rid, tid=t.tid, stop_id=self.id_step_end,
-                         max_new=self.ecfg.max_step_tokens + len(header))
-            st.forced.extend(header)
-            streams.append(st)
-        req.pending_frontier = [s.tid for s in streams]
+                ends.append(req.step_results[self._tid_of_place(req, p)][2])
+        return max(ends)
+
+    def _spawn_transition(self, req: _Request, t, start_pos: int) -> _Stream:
+        tf = time.monotonic()
+        if len(t.pre) == 1:
+            src = (req.ctx_chain if t.pre[0] == req.sched.net.ctx_place
+                   else req.step_results[self._tid_of_place(req, t.pre[0])][1])
+            chain = src.fork()
+        else:
+            chains = [req.step_results[self._tid_of_place(req, p)][1]
+                      for p in t.pre]
+            chain = self._dedup_join(chains)
+        req.timings["fork_join"] += time.monotonic() - tf
+        header = self.tok.encode(
+            f"<Step> Transient Step {t.tid + 1}: {req.labels.get(t.tid, '')}")
+        st = _Stream(chain, q_pos=start_pos, purpose="step",
+                     rid=req.rid, tid=t.tid, stop_id=self.id_step_end,
+                     max_new=self.ecfg.max_step_tokens + len(header))
+        st.forced.extend(header)
+        return st
+
+    def _spawn_ready(self, req: _Request) -> List[_Stream]:
+        """Spawn every enabled-and-unclaimed transition. Sync mode calls
+        this only at frontier barriers (whole-frontier claim at the
+        global join-max position); async mode calls it after every
+        individual firing (per-transition join-max)."""
+        t0 = time.monotonic()
+        fj_before = req.timings["fork_join"]
+        ready = req.sched.ready()
+        if not ready:
+            return []
+        req.sched.history.append([t.tid for t in ready])
+        streams = []
+        for t in ready:
+            start = (self._start_pos(req, t) if self.ecfg.async_frontier
+                     else req.max_end)
+            req.sched.claim(t)
+            streams.append(self._spawn_transition(req, t, start))
+        req.pending_frontier.extend(s.tid for s in streams)
         fj_delta = req.timings["fork_join"] - fj_before
         req.timings["schedule_parse"] += time.monotonic() - t0 - fj_delta
         return streams
@@ -287,7 +364,7 @@ class MedVerseEngine:
                 req.step_results = {}
             req.timings["schedule_parse"] += time.monotonic() - t0
             if req.state == "executing":
-                new_streams.extend(self._spawn_frontier(req))
+                new_streams.extend(self._spawn_ready(req))
             else:
                 new_streams.append(self._spawn_conclusion(req))
         elif st.purpose == "step":
@@ -297,15 +374,17 @@ class MedVerseEngine:
             req.step_results[st.tid] = (text, st.chain, st.q_pos)
             req.max_end = max(req.max_end, st.q_pos)
             req.pending_frontier.remove(st.tid)
-            if not req.pending_frontier:  # frontier complete -> advance M_k
-                nxt = self._spawn_frontier(req)
-                if nxt:
-                    new_streams.extend(nxt)
-                else:
+            # sync: advance the marking only at the frontier barrier;
+            # async: every firing may enable successors immediately
+            if self.ecfg.async_frontier or not req.pending_frontier:
+                nxt = self._spawn_ready(req)
+                new_streams.extend(nxt)
+                if not nxt and not req.pending_frontier:
                     req.state = "concluding"
                     new_streams.append(self._spawn_conclusion(req))
         elif st.purpose in ("conclusion", "serial"):
             req.conclusion_text = text
+            req.final_chain = st.chain
             req.done = True
 
     # ------------------------------------------------------------- main ----
@@ -332,7 +411,7 @@ class MedVerseEngine:
                 active.append(self._prefill(req, plan_of.get(req.rid)))
             batch = active[: self.ecfg.max_slots]
             t_step0 = time.monotonic()
-            tokens, q_pos, slots, chains, lens = [], [], [], [], []
+            tokens, q_pos, slots, lens = [], [], [], []
             for st in batch:
                 tok_in = (st.forced.popleft() if st.forced
                           else st.next_input)
@@ -340,20 +419,29 @@ class MedVerseEngine:
                 tokens.append(tok_in)
                 q_pos.append(st.q_pos)
                 slots.append(slot)
-                chains.append(st.chain.padded(self.ecfg.max_chain_len))
                 lens.append(st.chain.length)
                 st.generated.append(tok_in)
                 st.q_pos += 1
                 st.n_generated += 1
                 if tok_in == st.stop_id or st.n_generated >= st.max_new:
                     st.finish_after = True
+            # power-of-two chain bucketing: short chains stop paying
+            # max_chain_len-wide attention
+            s_bucket = self._chain_bucket(max(lens))
+            self.bucket_hist[s_bucket] = self.bucket_hist.get(s_bucket, 0) + 1
+            chains = [st.chain.padded(s_bucket) for st in batch]
             n = len(batch)
             pad = self.ecfg.max_slots - n
             arr = lambda x, d=np.int32: jnp.asarray(
                 np.pad(np.asarray(x, d), [(0, pad)] + [(0, 0)] * (np.asarray(x).ndim - 1)))
+            # padding rows must not scatter into the pool: give them the
+            # out-of-range sentinel slot (dropped inside paged_decode)
+            slots_p = np.full((self.ecfg.max_slots,), self.pc.n_slots,
+                              np.int32)
+            slots_p[:n] = slots
             logits, self.pool["k"], self.pool["v"], self.pool["pos"] = paged_decode(
                 self.params, self.pool["k"], self.pool["v"], self.pool["pos"],
-                arr(tokens), arr(q_pos), arr(slots),
+                arr(tokens), arr(q_pos), jnp.asarray(slots_p),
                 jnp.asarray(np.pad(np.stack(chains), [(0, pad), (0, 0)])),
                 arr(lens), self.cfg)
             logits_np = np.asarray(logits[:n])
@@ -381,7 +469,63 @@ class MedVerseEngine:
             for req in reqs:
                 if req.done and req.rid not in results:
                     results[req.rid] = self._finish(req, t_global)
+                    self._release_request(req)
+        self.last_iters = n_iters
         return [results[r.rid] for r in reqs]
+
+    def _release_request(self, req: _Request) -> None:
+        """Explicit page reclamation: drop every chain the request held
+        so ``alloc.used`` returns to its pre-request level. Radix-pinned
+        prompt pages persist as reclaimable cache."""
+        for _txt, chain, _end in req.step_results.values():
+            chain.release()
+        if req.ctx_chain is not None:
+            req.ctx_chain.release()
+        if req.final_chain is not None:
+            req.final_chain.release()
+
+    # ------------------------------------------------------- bucketing ----
+    def _chain_bucket(self, n: int) -> int:
+        """Smallest power-of-two bucket (>= min_chain_bucket) covering a
+        chain of length ``n``, capped at max_chain_len. The bounded
+        ladder of bucket widths bounds decode recompilations."""
+        b = self.ecfg.min_chain_bucket
+        while b < n:
+            b <<= 1
+        b = min(b, self.ecfg.max_chain_len)
+        if n > b:
+            raise ValueError(
+                f"chain length {n} exceeds max_chain_len="
+                f"{self.ecfg.max_chain_len}")
+        return b
+
+    def bucket_ladder(self) -> List[int]:
+        out = []
+        b = self.ecfg.min_chain_bucket
+        while b < self.ecfg.max_chain_len:
+            out.append(b)
+            b <<= 1
+        out.append(self.ecfg.max_chain_len)
+        return out
+
+    def warmup(self, buckets: Optional[List[int]] = None) -> List[int]:
+        """Pre-compile the batched decode step for each chain bucket so
+        no request pays XLA compilation mid-generation. Returns the
+        warmed bucket widths."""
+        buckets = buckets or self.bucket_ladder()
+        pg = self.alloc.alloc_page()  # scratch page, freed afterwards
+        slot = pg * self.pc.page_size
+        n = self.ecfg.max_slots
+        for s in buckets:
+            chain = np.zeros((n, s), np.int32)
+            chain[:, 0] = slot
+            _, self.pool["k"], self.pool["v"], self.pool["pos"] = paged_decode(
+                self.params, self.pool["k"], self.pool["v"], self.pool["pos"],
+                jnp.zeros((n,), jnp.int32), jnp.zeros((n,), jnp.int32),
+                jnp.full((n,), slot, jnp.int32), jnp.asarray(chain),
+                jnp.ones((n,), jnp.int32), self.cfg)
+        self.alloc.decref(pg)
+        return buckets
 
     def _finish(self, req: _Request, t_global: float) -> GenResult:
         steps = {tid + 1: txt for tid, (txt, _, _) in
@@ -428,13 +572,17 @@ class SerialEngine:
             while not st.done:
                 tok_in = st.forced.popleft() if st.forced else st.next_input
                 slot = st.chain.next_slot()
+                s_bucket = eng._chain_bucket(st.chain.length)
+                eng.bucket_hist[s_bucket] = (
+                    eng.bucket_hist.get(s_bucket, 0) + 1)
                 logits, eng.pool["k"], eng.pool["v"], eng.pool["pos"] = paged_decode(
                     eng.params, eng.pool["k"], eng.pool["v"], eng.pool["pos"],
                     jnp.asarray(np.pad([tok_in], (0, eng.ecfg.max_slots - 1))),
                     jnp.asarray(np.pad([st.q_pos], (0, eng.ecfg.max_slots - 1))),
-                    jnp.asarray(np.pad([slot], (0, eng.ecfg.max_slots - 1))),
+                    jnp.asarray(np.pad([slot], (0, eng.ecfg.max_slots - 1),
+                                       constant_values=eng.pc.n_slots)),
                     jnp.asarray(np.pad(
-                        st.chain.padded(eng.ecfg.max_chain_len)[None],
+                        st.chain.padded(s_bucket)[None],
                         [(0, eng.ecfg.max_slots - 1), (0, 0)])),
                     jnp.asarray(np.pad([st.chain.length],
                                        (0, eng.ecfg.max_slots - 1))),
@@ -448,6 +596,7 @@ class SerialEngine:
                     st.done = True
                 else:
                     st.next_input = nxt
+            st.chain.release()  # reclaim the request's pages
             results.append(GenResult(
                 text=eng.tok.decode(st.generated), ok=True, n_tokens=n,
                 critical_path_tokens=st.q_pos,

@@ -58,19 +58,39 @@ def init_pool(pc: PoolConfig) -> Dict[str, jnp.ndarray]:
 
 
 class PageAllocator:
-    """Refcounted free-list allocator over pool pages (host-side)."""
+    """Refcounted free-list allocator over pool pages (host-side).
 
-    def __init__(self, pc: PoolConfig):
+    Two kinds of references:
+
+      * stream refs (``incref``/``decref``) — held by live index chains;
+      * cache pins (``pin``/``unpin``) — held by the radix prefix cache.
+
+    ``used`` counts only pages with at least one stream ref: after a
+    request finishes and its chains are released, ``used`` returns to the
+    pre-request level even though the radix cache may keep prompt pages
+    pinned. Pinned-only pages are reclaimable cache — ``reclaim_cb`` (the
+    engine wires it to radix eviction) is invoked when the free list runs
+    dry, before giving up with :class:`OutOfPagesError`.
+    """
+
+    def __init__(self, pc: PoolConfig, reclaim_cb=None):
         self.pc = pc
         self.free: List[int] = list(range(pc.n_pages))
         self.refs: Dict[int, int] = {}
+        self.pinned: Dict[int, int] = {}   # page -> cache pin count
+        self.total_allocated = 0           # lifetime alloc_page count
+        self.reclaim_cb = reclaim_cb       # () -> bool (freed something)
 
     def alloc_page(self) -> int:
+        if not self.free and self.reclaim_cb is not None:
+            while not self.free and self.reclaim_cb():
+                pass
         if not self.free:
             raise OutOfPagesError(
                 f"pool exhausted ({self.pc.n_pages} pages)")
         pg = self.free.pop()
         self.refs[pg] = 1
+        self.total_allocated += 1
         return pg
 
     def incref(self, page: int) -> None:
@@ -82,9 +102,30 @@ class PageAllocator:
             del self.refs[page]
             self.free.append(page)
 
+    # -- cache pins (radix prefix cache) ------------------------------------
+    def pin(self, page: int) -> None:
+        self.refs[page] += 1
+        self.pinned[page] = self.pinned.get(page, 0) + 1
+
+    def unpin(self, page: int) -> None:
+        self.pinned[page] -= 1
+        if self.pinned[page] == 0:
+            del self.pinned[page]
+        self.decref(page)
+
     @property
     def pages_in_use(self) -> int:
         return self.pc.n_pages - len(self.free)
+
+    @property
+    def used(self) -> int:
+        """Pages held by live streams (excludes pinned-only cache pages)."""
+        return sum(1 for pg, r in self.refs.items()
+                   if r > self.pinned.get(pg, 0))
+
+    @property
+    def pinned_pages(self) -> int:
+        return len(self.pinned)
 
 
 class IndexChain:
@@ -141,6 +182,21 @@ class IndexChain:
         for pg in pages:
             alloc.incref(pg)
         return out
+
+    def adopt(self, slots: np.ndarray) -> None:
+        """Reference existing pool slots (a radix prefix hit) without
+        owning them: increfs their pages once each; subsequent appends go
+        into this chain's own freshly allocated pages."""
+        slots = np.asarray(slots, np.int32)
+        if slots.size == 0:
+            return
+        pg_size = self.alloc.pc.page_size
+        self.idx = np.concatenate([self.idx[: self.length], slots])
+        self.length = int(self.idx.shape[0])
+        for pg in {int(s) // pg_size for s in slots}:
+            if pg not in self.pages:
+                self.alloc.incref(pg)
+                self.pages.add(pg)
 
     def release(self) -> None:
         for pg in self.pages:

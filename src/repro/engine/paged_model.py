@@ -129,6 +129,23 @@ def prefill_forward(params: dict, tokens: jnp.ndarray, pos: jnp.ndarray,
     return logits, jnp.stack(ks), jnp.stack(vs)
 
 
+@partial(jax.jit, donate_argnums=(0, 1, 2))
+def prefix_pool_write(pool_k, pool_v, pool_pos, ks, vs, slots, pos):
+    """Write a prefill K/V span into the pool with per-row drop support.
+
+    ks/vs: (L, B, nkv, hd) from ``prefill_forward`` (B = prefill bucket);
+    slots/pos: (B,). Rows whose slot is out of range (the engine uses
+    ``n_slots`` as the sentinel) are dropped — that covers both bucket
+    padding and radix-cached prefix positions, whose slots already hold
+    identical K/V. One compiled shape serves every prompt in a bucket
+    regardless of how much prefix the radix cache supplied.
+    """
+    pool_k = pool_k.at[:, slots].set(ks.astype(pool_k.dtype), mode="drop")
+    pool_v = pool_v.at[:, slots].set(vs.astype(pool_v.dtype), mode="drop")
+    pool_pos = pool_pos.at[slots].set(pos, mode="drop")
+    return pool_k, pool_v, pool_pos
+
+
 # -------------------------------------------------------------- decode -----
 @partial(jax.jit, static_argnames=("cfg",), donate_argnums=(1, 2, 3))
 def paged_decode(params: dict,
@@ -152,7 +169,9 @@ def paged_decode(params: dict,
     if cfg.pos_embedding == "learned":
         from ..models.layers import learned_pos
         x = x + learned_pos(params["pos"], q_pos)[:, None, :]
-    pool_pos = pool_pos.at[write_slots].set(q_pos)
+    # padding rows carry an out-of-range write slot (n_slots sentinel)
+    # and must not scatter into the pool
+    pool_pos = pool_pos.at[write_slots].set(q_pos, mode="drop")
     valid = jnp.arange(s_max)[None, :] < chain_len[:, None]   # (N, S_max)
     kv_pos = pool_pos[chain_idx]                              # (N, S_max)
     for li, layer in enumerate(flatten_params(params, cfg)):
@@ -160,9 +179,9 @@ def paged_decode(params: dict,
         h = apply_norm(p["norm1"], x, cfg.norm_type, cfg.norm_eps)
         q, k_t, v_t = _proj_qkv(p["mixer"], h, cfg, q_pos[:, None])
         pool_k = pool_k.at[li, write_slots].set(
-            k_t[:, 0].astype(pool_k.dtype))
+            k_t[:, 0].astype(pool_k.dtype), mode="drop")
         pool_v = pool_v.at[li, write_slots].set(
-            v_t[:, 0].astype(pool_v.dtype))
+            v_t[:, 0].astype(pool_v.dtype), mode="drop")
         k = pool_k[li][chain_idx]                             # (N,S,nkv,hd)
         v = pool_v[li][chain_idx]
         vis = valid & (kv_pos <= q_pos[:, None])

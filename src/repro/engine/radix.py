@@ -9,13 +9,20 @@ prefill.
 
 Host-side structure; nodes own spans of pool slot indices. Matching is
 token-exact. Eviction = LRU leaves with refcount 0.
+
+Page lifetime: when constructed with ``page_size`` and pin callbacks
+(the engine passes ``PageAllocator.pin``/``unpin``), every node holds
+one cache pin per distinct pool page its slots touch, so cached K/V
+survives the originating request's chain release. Evicting a node drops
+its pins; the engine wires ``evict_one`` in as the allocator's reclaim
+callback, so the cache shrinks automatically under page pressure.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Set, Tuple
 
 import numpy as np
 
@@ -34,11 +41,32 @@ class RadixNode:
 
 
 class RadixTree:
-    def __init__(self):
+    def __init__(self, page_size: Optional[int] = None,
+                 on_pin: Optional[Callable[[int], None]] = None,
+                 on_unpin: Optional[Callable[[int], None]] = None):
         self.root = RadixNode(tokens=[], slots=np.zeros((0,), np.int32),
                               children={}, parent=None, refcount=1)
+        self.page_size = page_size
+        self._on_pin = on_pin
+        self._on_unpin = on_unpin
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
+
+    def _pages(self, slots: np.ndarray) -> Set[int]:
+        if self.page_size is None:
+            return set()
+        return {int(s) // self.page_size for s in np.asarray(slots)}
+
+    def _pin(self, pages: Set[int]) -> None:
+        if self._on_pin is not None:
+            for pg in sorted(pages):
+                self._on_pin(pg)
+
+    def _unpin(self, pages: Set[int]) -> None:
+        if self._on_unpin is not None:
+            for pg in sorted(pages):
+                self._on_unpin(pg)
 
     # -- lookup -------------------------------------------------------------
     def match_prefix(self, tokens: List[int]) -> Tuple[np.ndarray, List[RadixNode]]:
@@ -101,6 +129,7 @@ class RadixTree:
                     last_used=time.monotonic(),
                 )
                 node.children[tokens[i]] = new
+                self._pin(self._pages(new.slots))
                 return
             el = len(child.tokens)
             j = 0
@@ -110,13 +139,15 @@ class RadixTree:
                 node = child
                 i += el
                 continue
-            # split the edge at j
+            # split the edge at j; outstanding match-path leases point at
+            # the child node object (the prefix half), so the new suffix
+            # starts unreferenced — otherwise it could never be evicted
             suffix = RadixNode(
                 tokens=child.tokens[j:],
                 slots=child.slots[j:],
                 children=child.children,
                 parent=child,
-                refcount=child.refcount,
+                refcount=0,
                 last_used=child.last_used,
             )
             for gn in suffix.children.values():
@@ -124,9 +155,38 @@ class RadixTree:
             child.tokens = child.tokens[:j]
             child.slots = child.slots[:j]
             child.children = {suffix.tokens[0]: suffix}
+            # invariant: each node holds one pin per distinct page of its
+            # own slots — a page straddling the split point now backs two
+            # nodes, so it needs one extra pin
+            self._pin(self._pages(child.slots) & self._pages(suffix.slots))
             node = child
             i += j
         # full match: nothing to add
+
+    # -- eviction -----------------------------------------------------------
+    def evict_one(self) -> bool:
+        """Evict the least-recently-used unreferenced leaf, dropping its
+        page pins. Returns True if a node was evicted — the allocator
+        calls this repeatedly as its reclaim hook when out of pages."""
+        best: Optional[RadixNode] = None
+        stack = [self.root]
+        while stack:
+            n = stack.pop()
+            stack.extend(n.children.values())
+            if n is self.root or n.children or n.refcount > 0:
+                continue
+            if best is None or n.last_used < best.last_used:
+                best = n
+        if best is None:
+            return False
+        parent = best.parent
+        if parent is not None:
+            for key, ch in list(parent.children.items()):
+                if ch is best:
+                    del parent.children[key]
+        self._unpin(self._pages(best.slots))
+        self.evictions += 1
+        return True
 
     def n_cached_tokens(self) -> int:
         total = 0

@@ -23,7 +23,8 @@ from ..configs.shapes import InputShape, train_input_specs
 from ..models import TopoBatch, decode_step, forward, init_cache, init_params
 from ..models import meshctx
 from ..train import AdamWConfig, init_opt_state, make_train_step
-from .mesh import make_production_mesh, mesh_axes
+from .mesh import (as_shardings, make_production_mesh, mesh_axes,
+                   set_global_mesh)
 from .roofline import model_flops, parse_collectives, roofline_from_compiled
 from .sharding import batch_specs, cache_specs_tree, opt_state_specs, param_specs
 
@@ -70,8 +71,8 @@ def lower_train(cfg, shape: InputShape, mesh):
 
     jitted = jax.jit(
         step,
-        in_shardings=(pspecs, ospecs, bspecs),
-        out_shardings=(pspecs, ospecs, None),
+        in_shardings=as_shardings(mesh, (pspecs, ospecs, bspecs)),
+        out_shardings=as_shardings(mesh, (pspecs, ospecs, None)),
         donate_argnums=(0, 1),
     )
     lowered = jitted.lower(params_sds, opt_sds, specs_in)
@@ -108,8 +109,10 @@ def lower_prefill(cfg, shape: InputShape, mesh):
     daxes_p, _ = mesh_axes(mesh)
     out_spec = (P(daxes_p, "model" if _SEQ_SHARD else None, "model")
                 if False else P(daxes_p, None, "model"))
-    jitted = jax.jit(prefill_step, in_shardings=(pspecs, bspecs),
-                     out_shardings=(out_spec if _SHARDED_OUT else None))
+    jitted = jax.jit(prefill_step,
+                     in_shardings=as_shardings(mesh, (pspecs, bspecs)),
+                     out_shardings=as_shardings(
+                         mesh, out_spec if _SHARDED_OUT else None))
     lowered = jitted.lower(params_sds, specs_in)
     arg_bytes = (estimate_device_bytes(params_sds, pspecs, mesh)
                  + estimate_device_bytes(specs_in, bspecs, mesh))
@@ -133,8 +136,9 @@ def lower_decode(cfg, shape: InputShape, mesh):
 
     jitted = jax.jit(
         serve_step,
-        in_shardings=(pspecs, cspecs, tok_spec, None, tok_spec),
-        out_shardings=(None, cspecs),
+        in_shardings=as_shardings(
+            mesh, (pspecs, cspecs, tok_spec, None, tok_spec)),
+        out_shardings=as_shardings(mesh, (None, cspecs)),
         donate_argnums=(1,),
     )
     tok_sds = jax.ShapeDtypeStruct((b,), jnp.int32)
@@ -155,7 +159,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
     cfg = get_config(arch)
     mesh = make_production_mesh(multi_pod=multi_pod)
     daxes, maxis = mesh_axes(mesh)
-    jax.set_mesh(mesh)
+    set_global_mesh(mesh)
     meshctx.set_mesh(mesh, daxes, maxis)
     n_chips = mesh.size
     rec: Dict[str, Any] = {

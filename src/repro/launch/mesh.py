@@ -15,6 +15,35 @@ from typing import Tuple
 import jax
 
 
+def _axis_type_kwargs(n: int) -> dict:
+    """jax.sharding.AxisType landed after 0.4.x; omit the kwarg on older
+    jax (meshes default to Auto axes there anyway)."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n}
+
+
+def set_global_mesh(mesh: jax.sharding.Mesh) -> None:
+    """``jax.set_mesh`` where available (>= 0.6); on older jax, enter the
+    legacy thread-global mesh context instead."""
+    if hasattr(jax, "set_mesh"):
+        jax.set_mesh(mesh)
+    else:
+        mesh.__enter__()
+
+
+def as_shardings(mesh: jax.sharding.Mesh, tree):
+    """Map a PartitionSpec pytree to NamedShardings. ``jax.jit`` on
+    jax < 0.6 only accepts ``Sharding`` leaves in in/out_shardings;
+    NamedSharding works on every version. ``None`` leaves (meaning
+    "infer") pass through."""
+    is_spec = lambda s: isinstance(s, jax.sharding.PartitionSpec)
+    return jax.tree_util.tree_map(
+        lambda s: jax.sharding.NamedSharding(mesh, s) if is_spec(s) else s,
+        tree, is_leaf=is_spec)
+
+
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
@@ -27,8 +56,7 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
             "before importing jax (dryrun.py does this)."
         )
     return jax.make_mesh(
-        shape, axes, devices=devices[:n],
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+        shape, axes, devices=devices[:n], **_axis_type_kwargs(len(axes)),
     )
 
 
@@ -36,7 +64,7 @@ def make_host_mesh() -> jax.sharding.Mesh:
     """Trivial 1x1 mesh for CPU tests of the pjit path."""
     return jax.make_mesh(
         (1, 1), ("data", "model"), devices=jax.devices()[:1],
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+        **_axis_type_kwargs(2),
     )
 
 

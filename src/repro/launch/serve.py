@@ -3,6 +3,11 @@
 KV cache under the production sharding, for any assigned architecture
 (incl. SSM/MLA archs the paged engine doesn't cover).
 
+``--engine`` switches to the MedVerse paged engine (attention archs
+only): DAG-scheduled decode with chain bucketing and the radix prompt
+cache, optionally ``--async-frontier`` for per-transition marking
+advance. ``--no-radix`` disables cross-request prefix reuse.
+
 On CPU use --host-mesh --smoke; the same entry point drives real pods.
 """
 
@@ -17,8 +22,47 @@ import numpy as np
 
 from ..configs import get_config
 from ..models import decode_step, init_cache, init_params, meshctx
-from .mesh import make_host_mesh, make_production_mesh, mesh_axes
+from .mesh import (as_shardings, make_host_mesh, make_production_mesh,
+                   mesh_axes, set_global_mesh)
 from .sharding import cache_specs_tree, param_specs
+
+_ENGINE_PLAN = (
+    "<Plan> "
+    "<Outline> Transient Step 1: assess history ; Dependency: [] </Outline> "
+    "<Outline> Transient Step 2: assess labs ; Dependency: [] </Outline> "
+    "<Outline> Transient Step 3: synthesize diagnosis ; Dependency: [1, 2] "
+    "</Outline> </Plan>")
+
+
+def run_engine(args) -> None:
+    """Serve through the paged MedVerse engine on the default device."""
+    from ..data.tokenizer import Tokenizer
+    from ..engine import EngineConfig, MedVerseEngine
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    tok = Tokenizer.train(
+        ["patient case history labs assess synthesize diagnosis "
+         "Transient Step 1: 2: 3: Dependency: [] [1] [2] [1, 2]"])
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    ecfg = EngineConfig(
+        max_slots=args.batch, page_size=16, n_pages=2048,
+        max_chain_len=512, max_step_tokens=8, max_conclusion_tokens=8,
+        async_frontier=args.async_frontier,
+        radix_cache=not args.no_radix, plan_override=_ENGINE_PLAN)
+    eng = MedVerseEngine(params, cfg, tok, ecfg)
+    buckets = eng.warmup()
+    print(f"arch={cfg.name} engine async_frontier={ecfg.async_frontier} "
+          f"radix={ecfg.radix_cache} warmed buckets={buckets}")
+    prompts = [f"patient case {i} history labs" for i in range(args.batch)]
+    t0 = time.time()
+    res = eng.generate(prompts)
+    dt = time.time() - t0
+    n_tok = sum(r.n_tokens for r in res)
+    print(f"{len(res)} requests, {n_tok} tokens in {dt:.2f}s "
+          f"({n_tok/dt:.1f} tok/s, {eng.last_iters} decode iters); "
+          f"radix hits={eng.radix.hits} misses={eng.radix.misses}; "
+          f"pages used={eng.alloc.used} pinned={eng.alloc.pinned_pages}; "
+          f"buckets={dict(sorted(eng.bucket_hist.items()))}")
 
 
 def main():
@@ -30,13 +74,23 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--steps", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--engine", action="store_true",
+                    help="serve via the paged MedVerse engine")
+    ap.add_argument("--async-frontier", action="store_true",
+                    help="engine mode: per-transition marking advance")
+    ap.add_argument("--no-radix", action="store_true",
+                    help="engine mode: disable radix prompt cache")
     args = ap.parse_args()
+
+    if args.engine:
+        run_engine(args)
+        return
 
     cfg = get_config(args.arch, smoke=args.smoke)
     mesh = (make_host_mesh() if args.host_mesh
             else make_production_mesh(multi_pod=args.multi_pod))
     daxes, maxis = mesh_axes(mesh)
-    jax.set_mesh(mesh)
+    set_global_mesh(mesh)
     meshctx.set_mesh(mesh, daxes, maxis)
     print(f"mesh={dict(mesh.shape)} arch={cfg.name}")
 
@@ -46,8 +100,8 @@ def main():
     cspecs = cache_specs_tree(cfg, cache, mesh)
     step = jax.jit(
         lambda p, c, t, wi, qp: decode_step(p, c, t, wi, qp, cfg),
-        in_shardings=(pspecs, cspecs, None, None, None),
-        out_shardings=(None, cspecs),
+        in_shardings=as_shardings(mesh, (pspecs, cspecs, None, None, None)),
+        out_shardings=as_shardings(mesh, (None, cspecs)),
         donate_argnums=(1,),
     )
     tok = jnp.zeros((args.batch,), jnp.int32)

@@ -20,7 +20,8 @@ from ..configs import SHAPES, get_config
 from ..data import Corpus, encode_example, make_batches
 from ..models import init_params, meshctx
 from ..train import AdamWConfig, init_opt_state, make_train_step
-from .mesh import make_host_mesh, make_production_mesh, mesh_axes
+from .mesh import (as_shardings, make_host_mesh, make_production_mesh,
+                   mesh_axes, set_global_mesh)
 from .sharding import batch_specs, opt_state_specs, param_specs
 
 
@@ -41,7 +42,7 @@ def main():
     mesh = (make_host_mesh() if args.host_mesh
             else make_production_mesh(multi_pod=args.multi_pod))
     daxes, maxis = mesh_axes(mesh)
-    jax.set_mesh(mesh)
+    set_global_mesh(mesh)
     meshctx.set_mesh(mesh, daxes, maxis)
     print(f"mesh={dict(mesh.shape)} arch={cfg.name} "
           f"params~{cfg.param_count()/1e6:.1f}M")
@@ -61,8 +62,8 @@ def main():
     step = jax.jit(
         make_train_step(cfg, AdamWConfig(learning_rate=args.lr,
                                          total_steps=args.steps)),
-        in_shardings=(pspecs, ospecs, bspecs),
-        out_shardings=(pspecs, ospecs, None),
+        in_shardings=as_shardings(mesh, (pspecs, ospecs, bspecs)),
+        out_shardings=as_shardings(mesh, (pspecs, ospecs, None)),
         donate_argnums=(0, 1),
     )
     t0 = time.time()

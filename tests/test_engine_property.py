@@ -3,6 +3,9 @@ algebra over random DAG executions (no model needed — pure kvcache and
 scheduler machinery)."""
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import ColoredToken, PetriNet, PetriScheduler, ReasoningDAG

@@ -1,0 +1,223 @@
+"""Scheduler-path tests: async-frontier vs synchronized equivalence,
+chain bucketing, explicit page reclamation, ordered-dedup join
+refcounts, and cross-request radix prefix reuse."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data.tokenizer import Tokenizer
+from repro.engine import (
+    EngineConfig,
+    IndexChain,
+    MedVerseEngine,
+    PageAllocator,
+    PoolConfig,
+    SerialEngine,
+)
+from repro.models import init_params
+
+CFG = get_config("medverse-7b", smoke=True)
+
+DIAMOND = ("<Think> 1. q -> A -> C. 2. q -> B -> C. </Think> <Plan> "
+           "<Outline> Transient Step 1: q -> A ; Dependency: [] </Outline> "
+           "<Outline> Transient Step 2: q -> B ; Dependency: [] </Outline> "
+           "<Outline> Transient Step 3: A , B -> C ; Dependency: [1, 2] "
+           "</Outline> </Plan>")
+
+FANOUT = ("<Plan> "
+          "<Outline> Transient Step 1: alpha ; Dependency: [] </Outline> "
+          "<Outline> Transient Step 2: beta ; Dependency: [] </Outline> "
+          "<Outline> Transient Step 3: gamma ; Dependency: [] </Outline> "
+          "</Plan>")
+
+# one long independent branch (verbose label => long forced header) plus
+# a two-step chain: the synchronized path gates step 2 on step 3
+_LONG = " ".join(["gamma delta epsilon zeta eta theta iota kappa"] * 3)
+MIXED_DEPTH = (
+    "<Plan> "
+    "<Outline> Transient Step 1: alpha ; Dependency: [] </Outline> "
+    "<Outline> Transient Step 2: beta ; Dependency: [1] </Outline> "
+    f"<Outline> Transient Step 3: {_LONG} ; Dependency: [] </Outline> "
+    "</Plan>")
+
+
+def make_tok():
+    corpus = ["alpha beta gamma delta epsilon zeta eta theta iota kappa "
+              "Transient Step 1: 2: 3: Dependency: [] [1] [2] [1, 2] "
+              "A -> B ; C D q x y z"]
+    return Tokenizer.train(corpus)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    tok = make_tok()
+    params = init_params(jax.random.PRNGKey(0), CFG)
+    return tok, params
+
+
+def make_engine(params, tok, **kw):
+    base = dict(max_slots=4, page_size=4, n_pages=512, max_chain_len=256,
+                max_step_tokens=6, max_conclusion_tokens=6)
+    base.update(kw)
+    return MedVerseEngine(params, CFG, tok, EngineConfig(**base))
+
+
+@pytest.mark.parametrize("plan", [DIAMOND, FANOUT], ids=["diamond", "fanout"])
+def test_async_matches_sync_text(setup, plan):
+    """Temperature-0 output is identical across scheduler modes on DAGs
+    where every join covers its frontier (the per-transition join-max
+    equals the global frontier max)."""
+    tok, params = setup
+    e_sync = make_engine(params, tok, plan_override=plan)
+    e_async = make_engine(params, tok, plan_override=plan,
+                          async_frontier=True)
+    rs = e_sync.generate(["q alpha beta"])[0]
+    ra = e_async.generate(["q alpha beta"])[0]
+    assert rs.text == ra.text
+    assert rs.step_texts == ra.step_texts
+    assert rs.conclusion == ra.conclusion
+    assert e_sync.last_iters == e_async.last_iters
+
+
+def test_async_fewer_iters_on_mixed_depth(setup):
+    """With one long independent branch, the synchronized path stalls the
+    short chain's successor at the frontier barrier; the async path
+    overlaps it and finishes in strictly fewer decode iterations."""
+    tok, params = setup
+    e_sync = make_engine(params, tok, plan_override=MIXED_DEPTH,
+                         max_step_tokens=4, max_conclusion_tokens=4)
+    e_async = make_engine(params, tok, plan_override=MIXED_DEPTH,
+                          max_step_tokens=4, max_conclusion_tokens=4,
+                          async_frontier=True)
+    rs = e_sync.generate(["q alpha"])[0]
+    ra = e_async.generate(["q alpha"])[0]
+    assert rs.ok and ra.ok
+    assert len(rs.step_texts) == len(ra.step_texts) == 3
+    assert e_async.last_iters < e_sync.last_iters
+
+
+@pytest.mark.parametrize("async_frontier", [False, True])
+def test_pages_reclaimed_after_generate(setup, async_frontier):
+    """alloc.used returns to its pre-request level after every generate()
+    — request chains are released; only radix cache pins persist, and
+    those are excluded from ``used`` (and fully accounted)."""
+    tok, params = setup
+    eng = make_engine(params, tok, plan_override=DIAMOND,
+                      async_frontier=async_frontier)
+    used_before = eng.alloc.used
+    eng.generate(["q alpha beta"])
+    assert eng.alloc.used == used_before
+    # every in-use page is explained by a radix pin
+    assert eng.alloc.pages_in_use == eng.alloc.used + eng.alloc.pinned_pages
+    # and again, on a second call (warm radix)
+    eng.generate(["q alpha beta"])
+    assert eng.alloc.used == used_before
+
+
+def test_serial_engine_reclaims_pages(setup):
+    tok, params = setup
+    eng = SerialEngine(params, CFG, tok,
+                       EngineConfig(max_slots=2, page_size=4, n_pages=256,
+                                    max_chain_len=128))
+    used_before = eng.inner.alloc.used
+    eng.generate(["alpha beta"], max_tokens=8)
+    assert eng.inner.alloc.used == used_before
+
+
+def test_radix_hit_allocates_fewer_pages(setup):
+    """A repeated prompt adopts cached prefix slots instead of
+    re-allocating prompt pages (cross-request reuse)."""
+    tok, params = setup
+    eng = make_engine(params, tok, plan_override=DIAMOND)
+    prompt = "q alpha beta gamma delta epsilon zeta eta theta iota kappa"
+    eng.generate([prompt])
+    cold = eng.alloc.total_allocated
+    eng.generate([prompt])
+    warm = eng.alloc.total_allocated - cold
+    assert eng.radix.hits >= 1
+    assert warm < cold
+    # and the cached prefix produces the same K/V context: text matches
+    cold_eng = make_engine(params, tok, plan_override=DIAMOND,
+                           radix_cache=False)
+    r_cold = cold_eng.generate([prompt])[0]
+    r_warm = eng.generate([prompt])[0]
+    assert r_cold.text == r_warm.text
+
+
+def test_radix_disabled_no_pins(setup):
+    tok, params = setup
+    eng = make_engine(params, tok, plan_override=DIAMOND, radix_cache=False)
+    eng.generate(["q alpha beta"])
+    assert eng.alloc.pinned_pages == 0
+    assert eng.alloc.pages_in_use == 0
+
+
+def test_radix_split_suffix_evictable():
+    """Splitting an edge must leave the suffix node unreferenced —
+    outstanding match leases belong to the prefix half — so eviction can
+    fully drain the tree once all leases are released."""
+    from repro.engine import RadixTree
+    tree = RadixTree(page_size=4)
+    tree.insert(list(range(8)), np.arange(8, dtype=np.int32))
+    m, path = tree.match_prefix([0, 1, 2, 99])
+    assert m.tolist() == [0, 1, 2]
+    tree.insert([0, 1, 2, 99], np.asarray([0, 1, 2, 50], np.int32))
+    tree.release(path)
+    n_evicted = 0
+    while tree.evict_one():
+        n_evicted += 1
+    assert n_evicted == 3          # both leaves, then the bare prefix
+    assert tree.n_cached_tokens() == 0
+
+
+def test_dedup_join_refcounts():
+    """_dedup_join counts shared ancestor pages once and holds one ref
+    per page; sources can be released under it."""
+    pc = PoolConfig(n_layers=1, n_pages=32, page_size=4, n_kv_heads=1,
+                    head_dim=8)
+    alloc = PageAllocator(pc)
+    ctx = IndexChain.fresh(alloc)
+    ctx.reserve(5)
+    a = ctx.fork(); a.reserve(3)
+    b = ctx.fork(); b.reserve(2)
+    merged = MedVerseEngine._dedup_join(None, [a, b])
+    # ordered dedup: ctx prefix once, then each branch suffix
+    assert merged.length == 5 + 3 + 2
+    assert len(set(merged.idx.tolist())) == merged.length
+    for pg in merged.pages:
+        assert alloc.refs[pg] >= 2  # merged + at least one source
+    ctx.release(); a.release(); b.release()
+    assert alloc.pages_in_use > 0  # merged still holds everything
+    merged.release()
+    assert alloc.pages_in_use == 0
+
+
+def test_chain_bucketing_bounds_pad_width(setup):
+    """Short chains decode in small power-of-two buckets instead of the
+    max_chain_len-wide pad, and the ladder is bounded."""
+    tok, params = setup
+    eng = make_engine(params, tok, plan_override=DIAMOND)
+    assert eng.bucket_ladder() == [64, 128, 256]
+    eng.generate(["q alpha beta"])
+    assert eng.bucket_hist  # buckets recorded
+    assert all(b <= 256 for b in eng.bucket_hist)
+    assert min(eng.bucket_hist) < 256  # short chains paid a narrow pad
+    # bucket arithmetic
+    assert eng._chain_bucket(1) == 64
+    assert eng._chain_bucket(64) == 64
+    assert eng._chain_bucket(65) == 128
+    assert eng._chain_bucket(256) == 256
+    with pytest.raises(ValueError):
+        eng._chain_bucket(257)
+
+
+def test_warmup_precompiles_and_frees_scratch(setup):
+    tok, params = setup
+    eng = make_engine(params, tok, plan_override=DIAMOND)
+    warmed = eng.warmup()
+    assert warmed == [64, 128, 256]
+    assert eng.alloc.pages_in_use == 0  # scratch page returned
+    res = eng.generate(["q alpha beta"])[0]
+    assert res.ok

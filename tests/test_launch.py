@@ -15,7 +15,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs import ARCH_IDS, get_config
 from repro.configs.shapes import SHAPES, train_input_specs
-from repro.launch.mesh import make_host_mesh
+from repro.launch.mesh import as_shardings, make_host_mesh, set_global_mesh
 from repro.launch.sharding import batch_specs, cache_specs_tree, param_specs
 from repro.models import init_cache, init_params
 from repro.train import init_opt_state
@@ -80,7 +80,7 @@ def test_pjit_train_step_host_mesh():
 
     cfg = get_config("llama3.2-1b", smoke=True)
     mesh = make_host_mesh()
-    jax.set_mesh(mesh)
+    set_global_mesh(mesh)
     meshctx.set_mesh(mesh, ("data",), "model")
     try:
         params = init_params(jax.random.PRNGKey(0), cfg)
@@ -97,8 +97,9 @@ def test_pjit_train_step_host_mesh():
         }
         step = jax.jit(
             make_train_step(cfg, AdamWConfig()),
-            in_shardings=(pspecs, {"mu": pspecs, "nu": pspecs, "step": P()},
-                          batch_specs(cfg, batch, mesh)),
+            in_shardings=as_shardings(
+                mesh, (pspecs, {"mu": pspecs, "nu": pspecs, "step": P()},
+                       batch_specs(cfg, batch, mesh))),
         )
         params2, opt2, metrics = step(params, opt, batch)
         assert np.isfinite(float(metrics["loss"]))
