@@ -37,6 +37,7 @@ def main() -> None:
         fig4b_throughput,
         kernel_bench,
         roofline,
+        serving_bench,
         table2_cost_decomp,
         table3_topology,
         table4_reliability,
@@ -52,6 +53,7 @@ def main() -> None:
             "fig4a_latency": lambda a: fig4a_latency.run(a, n_per_class=1),
             "fig4b_throughput": lambda a: fig4b_throughput.run(
                 a, lengths=(32,)),
+            "serving_bench": lambda a: serving_bench.run(a, smoke=True),
         }
         failures = 0
         for name, fn in benches.items():
@@ -72,6 +74,8 @@ def main() -> None:
         "fig4a_latency": lambda a: fig4a_latency.run(a, n_per_class=2 if args.fast else 4),
         "fig4b_throughput": lambda a: fig4b_throughput.run(
             a, lengths=(64, 128) if args.fast else (64, 128, 256, 512)),
+        "serving_bench": lambda a: serving_bench.run(
+            a, n_requests=8 if args.fast else 16),
         "table1_accuracy": lambda a: table1_accuracy.run(a, n=12 if args.fast else 24),
         "table2_cost_decomp": lambda a: table2_cost_decomp.run(a, n=4 if args.fast else 8),
         "table3_topology": lambda a: table3_topology.run(a, n_per_class=2 if args.fast else 4),

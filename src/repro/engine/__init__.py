@@ -1,12 +1,17 @@
-from .engine import EngineConfig, GenResult, MedVerseEngine, SerialEngine
+from .engine import (EngineConfig, GenResult, MedVerseEngine, SerialEngine,
+                     StepEvent)
 from .kvcache import (IndexChain, OutOfPagesError, PageAllocator, PoolConfig,
                       init_pool)
 from .paged_model import (paged_decode, prefill_forward, prefix_pool_write,
                           supports_paged)
 from .radix import RadixTree
+from .sampling import SamplingParams, sample_token
 
 __all__ = [
     "EngineConfig",
+    "StepEvent",
+    "SamplingParams",
+    "sample_token",
     "OutOfPagesError",
     "prefix_pool_write",
     "GenResult",

@@ -17,6 +17,37 @@ position of all completed work (fork alignment / join-max, Sec. 4.2).
 All active streams across all requests and phases decode together in one
 batched ``paged_decode`` call per iteration — continuous batching.
 
+Step-level API
+--------------
+
+The engine itself is an open system: requests enter and leave mid-flight.
+
+* ``add_request(prompt, plan, sampling) -> rid`` — prefill and admit one
+  request into the running batch (raises :class:`OutOfPagesError` if the
+  prompt cannot be prefilled even after cache eviction).
+* ``step() -> list[StepEvent]`` — one batched decode iteration over all
+  active streams; emits ``token`` events (per stream token), ``done``
+  events (request finished, carries the :class:`GenResult`) and
+  ``preempted`` events (see below).
+* ``abort(rid)`` / ``has_capacity()`` / ``n_free_slots()``.
+
+``generate()`` is a thin closed-batch wrapper over this API (admit while
+slots are free, step until drained) — temperature-0 output is
+bit-identical to the historical closed-batch loop.
+
+Preemption: when the page pool runs dry mid-step (after radix-cache
+eviction — pinned cache pages always go first), the step rolls back its
+partial slot reservations, releases the *youngest* live request's chains
+and emits a ``preempted`` event instead of crashing. The caller (the
+serving scheduler, or ``generate`` itself) re-queues the victim for
+re-prefill — cheap, because its prompt usually still sits in the radix
+cache.
+
+Reproducible sampling: each request draws from its own
+``np.random.Generator`` seeded from ``(engine_seed, rid)``, so
+temperature>0 output is independent of batch composition and admission
+order; per-request :class:`SamplingParams` add top-k / top-p filtering.
+
 Scheduler modes
 ---------------
 
@@ -41,9 +72,10 @@ Scheduler modes
   ``max_chain_len``-wide attention; ``warmup()`` pre-compiles the bucket
   ladder so no request hits XLA compilation mid-generation.
 
-Page lifetime: ``generate`` releases every chain a request held when it
-finishes, so ``PageAllocator.used`` returns to its pre-request level;
-only radix-pinned prompt pages persist, as reclaimable cache.
+Page lifetime: the engine releases every chain a request held when it
+finishes (or is aborted / preempted), so ``PageAllocator.used`` returns
+to its pre-request level; only radix-pinned prompt pages persist, as
+reclaimable cache.
 """
 
 from __future__ import annotations
@@ -62,11 +94,12 @@ from ..core.petri import ColoredToken, PetriNet, PetriScheduler
 from ..core.plan import PlanParseError, parse_plan
 from ..data.tokenizer import EOS, Tokenizer
 from ..models.config import ModelConfig
-from .kvcache import IndexChain, PageAllocator, PoolConfig, init_pool
+from .kvcache import (IndexChain, OutOfPagesError, PageAllocator, PoolConfig,
+                      init_pool)
 from .paged_model import (paged_decode, prefill_forward, prefix_pool_write,
                           supports_paged)
 from .radix import RadixTree
-from .sampling import sample_token
+from .sampling import SamplingParams, sample_token
 
 
 @dataclasses.dataclass
@@ -87,6 +120,9 @@ class EngineConfig:
     async_frontier: bool = False
     radix_cache: bool = True       # cross-request prompt-prefix reuse
     seed: int = 0
+    # safety valve: a request evicted this many times is genuinely too
+    # large for the pool — step() raises instead of thrashing
+    max_preemptions: int = 16
     # Teacher-forced plan injection: skip LLM planning and force this
     # plan text (deterministic execution; also the Table-5 "Direct Petri
     # Net" ablation hook and the debugging surface).
@@ -105,6 +141,26 @@ class GenResult:
     timings: Dict[str, float]
     step_texts: Dict[int, str] = dataclasses.field(default_factory=dict)
     conclusion: str = ""
+
+
+@dataclasses.dataclass
+class StepEvent:
+    """One observable outcome of an engine ``step()``.
+
+    ``token``: a stream of request ``rid`` consumed one token (``forced``
+    marks teacher-forced / header tokens). ``done``: the request
+    finished; ``result`` carries its :class:`GenResult` and its pages are
+    already released. ``preempted``: the request was evicted under page
+    pressure and must be re-queued for re-prefill by the caller.
+    """
+
+    kind: str                 # "token" | "done" | "preempted"
+    rid: int
+    token: int = -1
+    purpose: str = ""         # "plan" | "step" | "conclusion" | "serial"
+    tid: int = -1             # DAG transition id for step streams
+    forced: bool = False
+    result: Optional[GenResult] = None
 
 
 class _Stream:
@@ -131,11 +187,19 @@ class _Stream:
 
 
 class _Request:
-    def __init__(self, rid: int, prompt_ids: List[int]):
+    def __init__(self, rid: int, prompt: str, prompt_ids: List[int],
+                 seed: int = 0, sampling: Optional[SamplingParams] = None,
+                 plan: Optional[str] = None):
         self.rid = rid
+        self.prompt = prompt
         self.prompt_ids = prompt_ids
+        self.sampling = sampling or SamplingParams()
+        # per-request generator: output depends on (engine_seed, rid)
+        # only, never on batch composition or admission order
+        self.rng = np.random.default_rng((seed, rid))
+        self.plan_spec = plan      # teacher-forced plan text, if any
+        self.plan = None           # parsed ReasoningPlan, set after Phase I
         self.state = "planning"
-        self.plan = None
         self.dag: Optional[ReasoningDAG] = None
         self.sched: Optional[PetriScheduler] = None
         self.labels: Dict[int, str] = {}
@@ -180,8 +244,14 @@ class MedVerseEngine:
         # under page pressure, reclaim radix-pinned cache pages (LRU)
         self.alloc.reclaim_cb = self.radix.evict_one
         self.last_iters = 0                  # decode iterations, last generate()
+        self.total_iters = 0                 # decode iterations, lifetime
+        self.preemptions = 0                 # page-pressure evictions, lifetime
         self.bucket_hist: Dict[int, int] = {}  # chain bucket -> decode steps
-        self.rng = np.random.default_rng(self.ecfg.seed)
+        # open-system state: live requests and their decode streams
+        self._reqs: Dict[int, _Request] = {}
+        self._active: List[_Stream] = []
+        self._next_rid = 0
+        self._preempt_count: Dict[int, int] = {}
         self.id_plan_end = tok.token_id("</Plan>")
         self.id_step_end = tok.token_id("</Step>")
         self.id_conc_end = tok.token_id("</Conclusion>")
@@ -191,7 +261,7 @@ class MedVerseEngine:
     # ------------------------------------------------------------ prefill --
     PREFILL_BUCKET = 64
 
-    def _prefill(self, req: _Request, plan_override=None) -> _Stream:
+    def _prefill(self, req: _Request) -> _Stream:
         ids = req.prompt_ids
         n = len(ids)
         chain = IndexChain.fresh(self.alloc)
@@ -204,7 +274,15 @@ class MedVerseEngine:
             cached = cached[: n - 1]
             chain.adopt(cached)
         m = int(cached.size)
-        new_slots = chain.reserve(n - m)
+        try:
+            new_slots = chain.reserve(n - m)
+        except OutOfPagesError:
+            # admission failure must not leak: drop the partial chain and
+            # the radix lookup leases before surfacing the pressure
+            if self.ecfg.radix_cache:
+                self.radix.release(path)
+            chain.release()
+            raise
         # bucket the prompt length so one compilation serves many prompts
         bucket = -(-n // self.PREFILL_BUCKET) * self.PREFILL_BUCKET
         ids_p = np.zeros((bucket,), np.int32)
@@ -228,14 +306,13 @@ class MedVerseEngine:
         st = _Stream(chain, q_pos=n, purpose="plan", rid=req.rid,
                      stop_id=self.id_plan_end,
                      max_new=self.ecfg.max_plan_tokens)
-        plan = (plan_override if plan_override is not None
-                else self.ecfg.plan_override)
-        if plan is not None:
-            forced = self.tok.encode(plan)
+        if req.plan_spec is not None:
+            forced = self.tok.encode(req.plan_spec)
             st.forced.extend(forced)
             st.max_new = len(forced) + 2
+        sp = req.sampling
         st.next_input = int(sample_token(
-            np.asarray(logits), self.ecfg.temperature, self.rng))
+            np.asarray(logits), sp.temperature, req.rng, sp.top_k, sp.top_p))
         return st
 
     # --------------------------------------------------------- fork/join ---
@@ -387,91 +464,228 @@ class MedVerseEngine:
             req.final_chain = st.chain
             req.done = True
 
+    # ------------------------------------------------- step-level API ------
+    def has_capacity(self) -> bool:
+        """True if one more request can start decoding immediately."""
+        return len(self._active) < self.ecfg.max_slots
+
+    def n_free_slots(self) -> int:
+        return max(self.ecfg.max_slots - len(self._active), 0)
+
+    def n_requests(self) -> int:
+        return len(self._reqs)
+
+    @property
+    def active_rids(self) -> List[int]:
+        return sorted(self._reqs)
+
+    def add_request(self, prompt: str, plan: Optional[str] = None,
+                    sampling: Optional[SamplingParams] = None,
+                    rid: Optional[int] = None) -> int:
+        """Prefill and admit one request into the running batch.
+
+        ``plan`` teacher-forces the planning phase (defaults to
+        ``EngineConfig.plan_override``). ``rid`` pins the request id —
+        used when re-admitting a preempted request so its sampling seed
+        (and radix-cached prompt) are reused. Raises
+        :class:`OutOfPagesError` when the prompt cannot be prefilled even
+        after cache eviction; the engine state is unchanged in that case.
+        """
+        if rid is None:
+            rid = self._next_rid
+        if rid in self._reqs:
+            raise ValueError(f"request id {rid} is already live")
+        self._next_rid = max(self._next_rid, rid + 1)
+        req = _Request(
+            rid, prompt, self.tok.encode(prompt, bos=True),
+            seed=self.ecfg.seed,
+            sampling=sampling or SamplingParams(
+                temperature=self.ecfg.temperature),
+            plan=plan if plan is not None else self.ecfg.plan_override)
+        req.t_start = time.monotonic()
+        st = self._prefill(req)          # may raise OutOfPagesError
+        self._reqs[rid] = req
+        self._active.append(st)
+        return rid
+
+    def abort(self, rid: int) -> bool:
+        """Drop a live request and release every page it holds."""
+        req = self._reqs.pop(rid, None)
+        if req is None:
+            return False
+        self._drop_streams(rid)
+        self._release_request(req)
+        return True
+
+    def step(self) -> List[StepEvent]:
+        """One continuous-batching iteration: batched ``paged_decode``
+        over (up to ``max_slots``) active streams, then stream/request
+        completion handling. Returns the step's events; an empty list
+        means the engine is idle."""
+        batch = self._active[: self.ecfg.max_slots]
+        if not batch:
+            return []
+        # Reserve pool slots first — the only fallible part of the step —
+        # so OutOfPagesError can roll back cleanly and preempt a victim
+        # instead of corrupting half-committed streams.
+        slots: List[int] = []
+        try:
+            for st in batch:
+                slots.append(st.chain.next_slot())
+        except OutOfPagesError:
+            for st in batch[: len(slots)]:
+                st.chain.pop_slot()
+            victim = self._pick_victim()
+            if victim is None:
+                raise
+            self._preempt(victim)
+            return [StepEvent(kind="preempted", rid=victim)]
+        t_step0 = time.monotonic()
+        events: List[StepEvent] = []
+        tokens, q_pos, lens = [], [], []
+        for st in batch:
+            was_forced = bool(st.forced)
+            tok_in = (st.forced.popleft() if st.forced
+                      else st.next_input)
+            tokens.append(tok_in)
+            q_pos.append(st.q_pos)
+            lens.append(st.chain.length)
+            st.generated.append(tok_in)
+            st.q_pos += 1
+            st.n_generated += 1
+            if tok_in == st.stop_id or st.n_generated >= st.max_new:
+                st.finish_after = True
+            events.append(StepEvent(
+                kind="token", rid=st.rid, token=tok_in,
+                purpose=st.purpose, tid=st.tid, forced=was_forced))
+        # power-of-two chain bucketing: short chains stop paying
+        # max_chain_len-wide attention
+        s_bucket = self._chain_bucket(max(lens))
+        self.bucket_hist[s_bucket] = self.bucket_hist.get(s_bucket, 0) + 1
+        chains = [st.chain.padded(s_bucket) for st in batch]
+        n = len(batch)
+        pad = self.ecfg.max_slots - n
+        arr = lambda x, d=np.int32: jnp.asarray(
+            np.pad(np.asarray(x, d), [(0, pad)] + [(0, 0)] * (np.asarray(x).ndim - 1)))
+        # padding rows must not scatter into the pool: give them the
+        # out-of-range sentinel slot (dropped inside paged_decode)
+        slots_p = np.full((self.ecfg.max_slots,), self.pc.n_slots,
+                          np.int32)
+        slots_p[:n] = slots
+        logits, self.pool["k"], self.pool["v"], self.pool["pos"] = paged_decode(
+            self.params, self.pool["k"], self.pool["v"], self.pool["pos"],
+            arr(tokens), arr(q_pos), jnp.asarray(slots_p),
+            jnp.asarray(np.pad(np.stack(chains), [(0, pad), (0, 0)])),
+            arr(lens), self.cfg)
+        logits_np = np.asarray(logits[:n])
+        step_dt = time.monotonic() - t_step0
+        new_streams: List[_Stream] = []
+        finished: List[_Stream] = []
+        for i, st in enumerate(batch):
+            req = self._reqs[st.rid]
+            phase = {"plan": "planning", "step": "execution",
+                     "conclusion": "conclusion",
+                     "serial": "planning"}[st.purpose]
+            req.timings[phase] += step_dt / n
+            req.n_tokens += 1
+            if not st.forced and not st.finish_after:
+                sp = req.sampling
+                st.next_input = int(sample_token(
+                    logits_np[i], sp.temperature, req.rng,
+                    sp.top_k, sp.top_p))
+            if st.finish_after:
+                st.done = True
+                finished.append(st)
+        for st in finished:
+            self._active.remove(st)
+            self._on_stream_done(self._reqs[st.rid], st, new_streams)
+        self._active.extend(new_streams)
+        self.total_iters += 1
+        for st in finished:
+            req = self._reqs.get(st.rid)
+            if req is not None and req.done:
+                result = self._finish(req)
+                self._release_request(req)
+                del self._reqs[req.rid]
+                self._preempt_count.pop(req.rid, None)
+                events.append(StepEvent(kind="done", rid=req.rid,
+                                        result=result))
+        return events
+
+    # ------------------------------------------------------- preemption ----
+    def _pick_victim(self) -> Optional[int]:
+        """Youngest live request (highest rid — preempted requests keep
+        their original id, so they count as old and get to finish).
+        ``None`` when fewer than two requests are live: evicting the only
+        request cannot free pages it will not immediately need again."""
+        rids = {st.rid for st in self._active}
+        if len(rids) < 2:
+            return None
+        victim = max(rids)
+        if self._preempt_count.get(victim, 0) >= self.ecfg.max_preemptions:
+            return None
+        return victim
+
+    def _preempt(self, rid: int) -> None:
+        """Release every chain the victim holds and forget its state; the
+        caller re-queues it for re-prefill (cheap when the prompt is
+        still radix-cached)."""
+        req = self._reqs.pop(rid)
+        self._drop_streams(rid)
+        self._release_request(req)
+        self.preemptions += 1
+        self._preempt_count[rid] = self._preempt_count.get(rid, 0) + 1
+
+    def _drop_streams(self, rid: int) -> None:
+        for st in [s for s in self._active if s.rid == rid]:
+            self._active.remove(st)
+            st.chain.release()
+
     # ------------------------------------------------------------- main ----
     def generate(self, prompts: List[str],
-                 plans: Optional[List[Optional[str]]] = None
+                 plans: Optional[List[Optional[str]]] = None,
+                 samplings: Optional[List[Optional[SamplingParams]]] = None
                  ) -> List[GenResult]:
-        """``plans[i]`` (optional) teacher-forces request i's plan —
-        per-request version of EngineConfig.plan_override."""
-        reqs = [_Request(rid, self.tok.encode(p, bos=True))
-                for rid, p in enumerate(prompts)]
-        plan_of = {r.rid: (plans[i] if plans else None)
-                   for i, r in enumerate(reqs)}
-        waiting = deque(reqs)
-        active: List[_Stream] = []
-        t_global = time.monotonic()
-        for r in reqs:
-            r.t_start = t_global
+        """Closed-batch wrapper over the step-level API: admit while
+        slots are free, step until every request drains. ``plans[i]``
+        (optional) teacher-forces request i's plan — per-request version
+        of EngineConfig.plan_override; ``samplings[i]`` overrides its
+        sampling parameters."""
+        waiting: deque = deque(
+            (None, p,
+             plans[i] if plans else None,
+             samplings[i] if samplings else None)
+            for i, p in enumerate(prompts))
+        spec_of: Dict[int, Tuple] = {}
+        order: List[int] = []
         results: Dict[int, GenResult] = {}
-        n_iters = 0
-        while waiting or active:
-            # admit requests while slots free
-            while waiting and len(active) < self.ecfg.max_slots:
-                req = waiting.popleft()
-                active.append(self._prefill(req, plan_of.get(req.rid)))
-            batch = active[: self.ecfg.max_slots]
-            t_step0 = time.monotonic()
-            tokens, q_pos, slots, lens = [], [], [], []
-            for st in batch:
-                tok_in = (st.forced.popleft() if st.forced
-                          else st.next_input)
-                slot = st.chain.next_slot()
-                tokens.append(tok_in)
-                q_pos.append(st.q_pos)
-                slots.append(slot)
-                lens.append(st.chain.length)
-                st.generated.append(tok_in)
-                st.q_pos += 1
-                st.n_generated += 1
-                if tok_in == st.stop_id or st.n_generated >= st.max_new:
-                    st.finish_after = True
-            # power-of-two chain bucketing: short chains stop paying
-            # max_chain_len-wide attention
-            s_bucket = self._chain_bucket(max(lens))
-            self.bucket_hist[s_bucket] = self.bucket_hist.get(s_bucket, 0) + 1
-            chains = [st.chain.padded(s_bucket) for st in batch]
-            n = len(batch)
-            pad = self.ecfg.max_slots - n
-            arr = lambda x, d=np.int32: jnp.asarray(
-                np.pad(np.asarray(x, d), [(0, pad)] + [(0, 0)] * (np.asarray(x).ndim - 1)))
-            # padding rows must not scatter into the pool: give them the
-            # out-of-range sentinel slot (dropped inside paged_decode)
-            slots_p = np.full((self.ecfg.max_slots,), self.pc.n_slots,
-                              np.int32)
-            slots_p[:n] = slots
-            logits, self.pool["k"], self.pool["v"], self.pool["pos"] = paged_decode(
-                self.params, self.pool["k"], self.pool["v"], self.pool["pos"],
-                arr(tokens), arr(q_pos), jnp.asarray(slots_p),
-                jnp.asarray(np.pad(np.stack(chains), [(0, pad), (0, 0)])),
-                arr(lens), self.cfg)
-            logits_np = np.asarray(logits[:n])
-            step_dt = time.monotonic() - t_step0
-            new_streams: List[_Stream] = []
-            finished: List[_Stream] = []
-            for i, st in enumerate(batch):
-                req = reqs[st.rid]
-                phase = {"plan": "planning", "step": "execution",
-                         "conclusion": "conclusion",
-                         "serial": "planning"}[st.purpose]
-                req.timings[phase] += step_dt / n
-                req.n_tokens += 1
-                if not st.forced and not st.finish_after:
-                    st.next_input = int(sample_token(
-                        logits_np[i], self.ecfg.temperature, self.rng))
-                if st.finish_after:
-                    st.done = True
-                    finished.append(st)
-            for st in finished:
-                active.remove(st)
-                self._on_stream_done(reqs[st.rid], st, new_streams)
-            active.extend(new_streams)
-            n_iters += 1
-            for req in reqs:
-                if req.done and req.rid not in results:
-                    results[req.rid] = self._finish(req, t_global)
-                    self._release_request(req)
-        self.last_iters = n_iters
-        return [results[r.rid] for r in reqs]
+        iters0 = self.total_iters
+        while waiting or self._reqs:
+            # admit requests while slots free (mid-flight, every step)
+            while waiting and self.has_capacity():
+                rid0, p, plan, sp = waiting[0]
+                try:
+                    rid = self.add_request(p, plan=plan, sampling=sp,
+                                           rid=rid0)
+                except OutOfPagesError:
+                    if not self._reqs:
+                        raise   # nothing to preempt: pool truly too small
+                    break       # retry once running requests free pages
+                waiting.popleft()
+                spec_of[rid] = (p, plan, sp)
+                if rid0 is None:
+                    order.append(rid)
+            for ev in self.step():
+                if ev.kind == "done":
+                    results[ev.rid] = ev.result
+                elif ev.kind == "preempted" and ev.rid in spec_of:
+                    # victim re-queued at the front: it is re-admitted as
+                    # soon as pages free up, keeping its rid (and seed).
+                    # Requests added via add_request() before this call
+                    # are not ours to re-queue — their owner re-admits.
+                    waiting.appendleft((ev.rid,) + spec_of[ev.rid])
+        self.last_iters = self.total_iters - iters0
+        return [results[rid] for rid in order]
 
     def _release_request(self, req: _Request) -> None:
         """Explicit page reclamation: drop every chain the request held
@@ -527,7 +741,7 @@ class MedVerseEngine:
         self.alloc.decref(pg)
         return buckets
 
-    def _finish(self, req: _Request, t_global: float) -> GenResult:
+    def _finish(self, req: _Request) -> GenResult:
         steps = {tid + 1: txt for tid, (txt, _, _) in
                  sorted(req.step_results.items())}
         parts = [req.plan_text]
@@ -541,7 +755,7 @@ class MedVerseEngine:
         return GenResult(
             text=" ".join(parts), ok=True, n_tokens=req.n_tokens,
             critical_path_tokens=crit,
-            wall_s=time.monotonic() - t_global,
+            wall_s=time.monotonic() - req.t_start,
             plan_ok=req.plan_ok, topology=topo,
             timings=dict(req.timings),
             step_texts=steps, conclusion=req.conclusion_text,
@@ -560,9 +774,12 @@ class SerialEngine:
                  ) -> List[GenResult]:
         eng = self.inner
         results = []
-        t0 = time.monotonic()
         for rid, p in enumerate(prompts):
-            req = _Request(rid, eng.tok.encode(p, bos=True))
+            req = _Request(rid, p, eng.tok.encode(p, bos=True),
+                           seed=eng.ecfg.seed,
+                           sampling=SamplingParams(
+                               temperature=eng.ecfg.temperature),
+                           plan=eng.ecfg.plan_override)
             st = eng._prefill(req)
             st.purpose = "serial"
             st.stop_id = EOS
@@ -590,8 +807,10 @@ class SerialEngine:
                 st.generated.append(tok_in)
                 st.q_pos += 1
                 n += 1
+                sp = req.sampling
                 nxt = int(sample_token(np.asarray(logits[0]),
-                                       eng.ecfg.temperature, eng.rng))
+                                       sp.temperature, req.rng,
+                                       sp.top_k, sp.top_p))
                 if tok_in == EOS or n >= st.max_new:
                     st.done = True
                 else:

@@ -220,6 +220,17 @@ class IndexChain:
         self.length += 1
         return slot
 
+    def pop_slot(self) -> None:
+        """Undo the most recent ``next_slot`` (preemption rollback: a
+        batched step reserves one slot per stream before committing any
+        tokens, and unwinds the reservations if the pool runs dry
+        mid-batch). The write page stays owned by the chain — the
+        popped slot is simply handed out again on the next append."""
+        assert self.length > 0 and self.write_off > 0, "nothing to pop"
+        self.write_off -= 1
+        self.idx = self.idx[:-1]
+        self.length -= 1
+
     def reserve(self, n: int) -> np.ndarray:
         return np.asarray([self.next_slot() for _ in range(n)], np.int32)
 

@@ -1,16 +1,84 @@
-"""Token sampling: greedy / temperature (host-side numpy on small logits)."""
+"""Token sampling: greedy / temperature with top-k and top-p (nucleus)
+filtering — host-side numpy on small logits.
+
+Each request carries its own :class:`SamplingParams` and its own
+``np.random.Generator`` seeded from ``(engine_seed, rid)``, so sampled
+output is a function of the request alone — independent of batch
+composition and admission order under continuous batching.
+"""
 
 from __future__ import annotations
+
+import dataclasses
 
 import numpy as np
 
 
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling configuration, threaded through the engine's
+    decode streams.
+
+    ``top_k``: keep only the k highest logits (0 disables). ``top_p``:
+    nucleus sampling — keep the smallest set of tokens whose cumulative
+    probability reaches p (1.0 disables). Filters apply to the
+    temperature-scaled distribution (vLLM/HF processor order, so
+    configs port across); greedy decoding (``temperature <= 0``)
+    ignores them.
+    """
+
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+
+    def __post_init__(self):
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+
+
+def top_k_filter(logits: np.ndarray, k: int) -> np.ndarray:
+    """Mask all but the k highest logits to -inf (ties at the k-th value
+    are all kept, matching the usual threshold formulation)."""
+    if k <= 0 or k >= logits.size:
+        return logits
+    kth = np.partition(logits, -k)[-k]
+    return np.where(logits >= kth, logits, -np.inf)
+
+
+def top_p_filter(logits: np.ndarray, p: float) -> np.ndarray:
+    """Nucleus filter: keep the smallest descending-probability prefix
+    whose cumulative mass reaches ``p`` (the first token always
+    survives); everything else goes to -inf."""
+    if p >= 1.0:
+        return logits
+    order = np.argsort(logits)[::-1]
+    z = logits[order].astype(np.float64)
+    z = z - z.max()
+    probs = np.exp(z)
+    probs /= probs.sum()
+    cum = np.cumsum(probs)
+    keep = (cum - probs) < p  # cumulative mass *before* this token
+    out = np.full_like(logits, -np.inf, dtype=np.float64)
+    out[order[keep]] = logits[order[keep]]
+    return out
+
+
 def sample_token(logits: np.ndarray, temperature: float,
-                 rng: np.random.Generator) -> int:
+                 rng: np.random.Generator, top_k: int = 0,
+                 top_p: float = 1.0) -> int:
     if temperature <= 0.0:
         return int(np.argmax(logits))
-    z = logits.astype(np.float64) / temperature
-    z = z - z.max()
+    # temperature first, then filters: the nucleus must be chosen on the
+    # distribution actually sampled from (top-k is scale-invariant, but
+    # a flat high-temperature distribution has a wider nucleus)
+    z = np.asarray(logits, np.float64) / temperature
+    if top_k > 0:
+        z = top_k_filter(z, top_k)
+    if top_p < 1.0:
+        z = top_p_filter(z, top_p)
+    z = z - z[np.isfinite(z)].max()
     p = np.exp(z)
     p /= p.sum()
     return int(rng.choice(len(p), p=p))

@@ -7,6 +7,11 @@ KV cache under the production sharding, for any assigned architecture
 only): DAG-scheduled decode with chain bucketing and the radix prompt
 cache, optionally ``--async-frontier`` for per-transition marking
 advance. ``--no-radix`` disables cross-request prefix reuse.
+``--plan-file`` / ``--prompts-file`` replace the built-in toy plan and
+prompts (the tokenizer trains on whatever corpus is served).
+``--continuous`` serves the workload through the continuous-batching
+scheduler with Poisson arrivals at ``--arrival-rate`` req/s instead of
+one closed batch.
 
 On CPU use --host-mesh --smoke; the same entry point drives real pods.
 """
@@ -33,6 +38,27 @@ _ENGINE_PLAN = (
     "<Outline> Transient Step 3: synthesize diagnosis ; Dependency: [1, 2] "
     "</Outline> </Plan>")
 
+_TOY_CORPUS = ("patient case history labs assess synthesize diagnosis "
+               "Transient Step 1: 2: 3: Dependency: [] [1] [2] [1, 2]")
+
+
+def _load_workload(args):
+    """(prompts, plan) from --prompts-file/--plan-file, falling back to
+    the built-in toy workload."""
+    plan = _ENGINE_PLAN
+    if args.plan_file:
+        with open(args.plan_file) as f:
+            plan = f.read().strip()
+    if args.prompts_file:
+        with open(args.prompts_file) as f:
+            prompts = [ln.strip() for ln in f if ln.strip()]
+        if not prompts:
+            raise SystemExit(f"--prompts-file {args.prompts_file}: empty")
+    else:
+        prompts = [f"patient case {i} history labs"
+                   for i in range(args.requests or args.batch)]
+    return prompts, plan
+
 
 def run_engine(args) -> None:
     """Serve through the paged MedVerse engine on the default device."""
@@ -40,20 +66,23 @@ def run_engine(args) -> None:
     from ..engine import EngineConfig, MedVerseEngine
 
     cfg = get_config(args.arch, smoke=args.smoke)
-    tok = Tokenizer.train(
-        ["patient case history labs assess synthesize diagnosis "
-         "Transient Step 1: 2: 3: Dependency: [] [1] [2] [1, 2]"])
+    prompts, plan = _load_workload(args)
+    # the tokenizer trains on the actual served corpus (prompts + plan),
+    # not a hardcoded toy string, so real workloads round-trip
+    tok = Tokenizer.train([_TOY_CORPUS, plan] + prompts)
     params = init_params(jax.random.PRNGKey(0), cfg)
     ecfg = EngineConfig(
         max_slots=args.batch, page_size=16, n_pages=2048,
         max_chain_len=512, max_step_tokens=8, max_conclusion_tokens=8,
         async_frontier=args.async_frontier,
-        radix_cache=not args.no_radix, plan_override=_ENGINE_PLAN)
+        radix_cache=not args.no_radix, plan_override=plan)
     eng = MedVerseEngine(params, cfg, tok, ecfg)
     buckets = eng.warmup()
     print(f"arch={cfg.name} engine async_frontier={ecfg.async_frontier} "
           f"radix={ecfg.radix_cache} warmed buckets={buckets}")
-    prompts = [f"patient case {i} history labs" for i in range(args.batch)]
+    if args.continuous:
+        _run_continuous(args, eng, prompts, plan)
+        return
     t0 = time.time()
     res = eng.generate(prompts)
     dt = time.time() - t0
@@ -63,6 +92,25 @@ def run_engine(args) -> None:
           f"radix hits={eng.radix.hits} misses={eng.radix.misses}; "
           f"pages used={eng.alloc.used} pinned={eng.alloc.pinned_pages}; "
           f"buckets={dict(sorted(eng.bucket_hist.items()))}")
+
+
+def _run_continuous(args, eng, prompts, plan) -> None:
+    """Open-system serving: Poisson arrivals through the continuous
+    scheduler, SLA report at the end."""
+    from ..serving import ContinuousScheduler, ServeRequest
+
+    rng = np.random.default_rng(0)
+    gaps = rng.exponential(1.0 / args.arrival_rate, size=len(prompts))
+    arrivals = np.cumsum(gaps)
+    workload = [ServeRequest(prompt=p, plan=plan, arrival=float(a))
+                for p, a in zip(prompts, arrivals)]
+    sched = ContinuousScheduler(eng, policy=args.policy, clock="wall")
+    rep = sched.run(workload)
+    print(f"continuous policy={args.policy} "
+          f"arrival_rate={args.arrival_rate}/s: {rep.summary()}")
+    print(f"radix hits={eng.radix.hits} misses={eng.radix.misses}; "
+          f"pages used={eng.alloc.used} pinned={eng.alloc.pinned_pages}; "
+          f"preemptions={eng.preemptions}")
 
 
 def main():
@@ -80,6 +128,23 @@ def main():
                     help="engine mode: per-transition marking advance")
     ap.add_argument("--no-radix", action="store_true",
                     help="engine mode: disable radix prompt cache")
+    ap.add_argument("--continuous", action="store_true",
+                    help="engine mode: open-system continuous batching "
+                         "with Poisson arrivals (vs one closed batch)")
+    ap.add_argument("--arrival-rate", type=float, default=4.0,
+                    help="continuous mode: Poisson arrival rate, req/s")
+    ap.add_argument("--policy", default="fcfs",
+                    choices=["fcfs", "chain-aware"],
+                    help="continuous mode: admission policy")
+    ap.add_argument("--requests", type=int, default=0,
+                    help="engine mode: number of requests (default: "
+                         "--batch, or every line of --prompts-file)")
+    ap.add_argument("--plan-file", default=None,
+                    help="engine mode: file with plan text to "
+                         "teacher-force (replaces the built-in toy plan)")
+    ap.add_argument("--prompts-file", default=None,
+                    help="engine mode: file with one prompt per line "
+                         "(replaces the built-in toy prompts)")
     args = ap.parse_args()
 
     if args.engine:

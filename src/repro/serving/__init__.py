@@ -1,0 +1,21 @@
+"""Continuous-batching serving subsystem: open request streams over the
+engine's step-level API, pluggable admission policies, preemption
+recovery, and per-request SLA metrics (TTFT / TPOT / e2e / goodput)."""
+
+from .metrics import RequestMetrics, ServingReport
+from .queue import (ChainAwarePolicy, FCFSPolicy, RequestQueue,
+                    SchedulingPolicy, estimate_frontier_width, make_policy)
+from .scheduler import ContinuousScheduler, ServeRequest
+
+__all__ = [
+    "ChainAwarePolicy",
+    "ContinuousScheduler",
+    "FCFSPolicy",
+    "RequestMetrics",
+    "RequestQueue",
+    "SchedulingPolicy",
+    "ServeRequest",
+    "ServingReport",
+    "estimate_frontier_width",
+    "make_policy",
+]

@@ -1,0 +1,129 @@
+"""Per-request SLA metrics and fleet-level aggregation for the
+continuous-batching serving subsystem.
+
+Every request records two clocks: wall time (seconds — the numbers an
+operator cares about) and engine decode steps (deterministic — the
+numbers tests and cross-machine comparisons care about). TTFT is
+measured from *arrival*, not admission, so queueing delay under closed
+batching shows up where it hurts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional
+
+import numpy as np
+
+NAN = float("nan")
+
+
+@dataclasses.dataclass
+class RequestMetrics:
+    t_arrival_s: float = NAN      # wall clock at arrival (eligibility)
+    t_admit_s: float = NAN        # wall clock at engine admission
+    t_first_token_s: float = NAN
+    t_done_s: float = NAN
+    arrival_step: int = -1        # scheduler step count at arrival
+    admit_step: int = -1
+    first_token_step: int = -1
+    done_step: int = -1
+    n_tokens: int = 0             # decoded tokens across all DAG streams
+    n_preemptions: int = 0
+
+    @property
+    def ttft_s(self) -> float:
+        return self.t_first_token_s - self.t_arrival_s
+
+    @property
+    def ttft_steps(self) -> int:
+        if self.first_token_step < 0 or self.arrival_step < 0:
+            return -1
+        return self.first_token_step - self.arrival_step
+
+    @property
+    def tpot_s(self) -> float:
+        """Time per output token after the first (the streaming cadence)."""
+        if self.n_tokens <= 1:
+            return NAN
+        return (self.t_done_s - self.t_first_token_s) / (self.n_tokens - 1)
+
+    @property
+    def e2e_s(self) -> float:
+        return self.t_done_s - self.t_arrival_s
+
+    def meets_deadline(self, deadline_s: Optional[float]) -> bool:
+        if deadline_s is None:
+            return not math.isnan(self.e2e_s)
+        return self.e2e_s <= deadline_s
+
+
+def _stats(xs: List[float]) -> Dict[str, float]:
+    xs = [x for x in xs if not math.isnan(x)]
+    if not xs:
+        return {"mean": NAN, "p50": NAN, "p95": NAN}
+    a = np.asarray(xs, np.float64)
+    return {"mean": float(a.mean()),
+            "p50": float(np.percentile(a, 50)),
+            "p95": float(np.percentile(a, 95))}
+
+
+@dataclasses.dataclass
+class ServingReport:
+    """Aggregate SLA view of one serving run (one policy, one workload)."""
+
+    policy: str
+    closed_batch: bool
+    n_requests: int
+    n_completed: int
+    duration_s: float
+    n_steps: int
+    total_tokens: int
+    throughput_tok_s: float
+    throughput_req_s: float
+    ttft_s: Dict[str, float]
+    ttft_steps: Dict[str, float]
+    tpot_s: Dict[str, float]
+    e2e_s: Dict[str, float]
+    goodput: float                # fraction finishing within the deadline
+    deadline_s: Optional[float]
+    n_preemptions: int
+
+    @staticmethod
+    def build(metrics: List[RequestMetrics], duration_s: float,
+              n_steps: int, policy: str, closed_batch: bool = False,
+              deadline_s: Optional[float] = None) -> "ServingReport":
+        done = [m for m in metrics if not math.isnan(m.t_done_s)]
+        total_tokens = sum(m.n_tokens for m in metrics)
+        good = sum(1 for m in done if m.meets_deadline(deadline_s))
+        return ServingReport(
+            policy=policy, closed_batch=closed_batch,
+            n_requests=len(metrics), n_completed=len(done),
+            duration_s=duration_s, n_steps=n_steps,
+            total_tokens=total_tokens,
+            throughput_tok_s=total_tokens / max(duration_s, 1e-9),
+            throughput_req_s=len(done) / max(duration_s, 1e-9),
+            ttft_s=_stats([m.ttft_s for m in done]),
+            ttft_steps=_stats([float(m.ttft_steps) for m in done
+                               if m.ttft_steps >= 0]),
+            tpot_s=_stats([m.tpot_s for m in done]),
+            e2e_s=_stats([m.e2e_s for m in done]),
+            goodput=good / max(len(metrics), 1),
+            deadline_s=deadline_s,
+            n_preemptions=sum(m.n_preemptions for m in metrics),
+        )
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def summary(self) -> str:
+        return (f"policy={self.policy}{'(closed)' if self.closed_batch else ''} "
+                f"reqs={self.n_completed}/{self.n_requests} "
+                f"steps={self.n_steps} "
+                f"tput={self.throughput_tok_s:.1f}tok/s "
+                f"ttft={self.ttft_s['mean']*1e3:.0f}ms"
+                f"({self.ttft_steps['mean']:.1f}st) "
+                f"tpot={self.tpot_s['mean']*1e3:.1f}ms "
+                f"goodput={self.goodput:.2f} "
+                f"preempt={self.n_preemptions}")

@@ -1,0 +1,215 @@
+"""Continuous-batching scheduler over the engine's step-level API.
+
+vLLM-style open-system serving: requests arrive over time (Poisson in
+the benchmark, scripted in tests), wait in a :class:`RequestQueue`, and
+are admitted into the engine *every step* as slots free up — a late
+arrival never waits for an in-flight batch to drain. The scheduler also
+owns the failure path: when the engine preempts a request under page
+pressure, the victim re-enters the queue's priority lane and is
+re-prefilled (cheap via the radix cache) once pages free up.
+
+Two clocks:
+
+* ``clock="wall"`` — arrivals in seconds; what a real deployment uses.
+* ``clock="step"`` — arrivals in engine decode steps; fully
+  deterministic, what tests and cross-machine comparisons use.
+
+``closed_batch=True`` turns the same machinery into the historical
+baseline (admit only into an idle engine, i.e. ``generate()`` called
+batch after batch) so continuous-vs-closed is measured on identical
+code paths.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+from ..engine import MedVerseEngine, OutOfPagesError, SamplingParams
+from ..engine.engine import GenResult, StepEvent
+from .metrics import RequestMetrics, ServingReport
+from .queue import RequestQueue, estimate_frontier_width, make_policy
+
+
+@dataclasses.dataclass
+class ServeRequest:
+    """One open request stream flowing through the serving subsystem."""
+
+    prompt: str
+    plan: Optional[str] = None
+    sampling: Optional[SamplingParams] = None
+    arrival: float = 0.0          # scheduler-clock units (steps or secs)
+    deadline_s: Optional[float] = None
+    # streaming callback: (rid, token_id, text_piece) per decoded token
+    on_token: Optional[Callable[[int, int, str], None]] = None
+    rid: int = -1
+    # pending|queued|running|preempted|done|failed (failed = could never
+    # fit the page pool, even with nothing else running)
+    state: str = "pending"
+    result: Optional[GenResult] = None
+    metrics: RequestMetrics = dataclasses.field(default_factory=RequestMetrics)
+
+    @property
+    def frontier_width(self) -> int:
+        if not hasattr(self, "_width"):
+            self._width = estimate_frontier_width(self.plan)
+        return self._width
+
+
+class ContinuousScheduler:
+    def __init__(self, engine: MedVerseEngine, policy="fcfs",
+                 clock: str = "wall", closed_batch: bool = False,
+                 deadline_s: Optional[float] = None):
+        assert clock in ("wall", "step"), clock
+        self.engine = engine
+        self.policy = make_policy(policy)
+        self.queue = RequestQueue(self.policy)
+        self.clock = clock
+        self.closed_batch = closed_batch
+        self.deadline_s = deadline_s
+        self.step_count = 0
+        self.finished: List[ServeRequest] = []
+        self._pending: List[ServeRequest] = []   # submitted, not arrived
+        self._running: Dict[int, ServeRequest] = {}
+        self._t0: Optional[float] = None
+
+    # ---------------------------------------------------------- clock ------
+    def now(self) -> float:
+        if self.clock == "step":
+            return float(self.step_count)
+        if self._t0 is None:
+            return 0.0
+        return time.monotonic() - self._t0
+
+    # ------------------------------------------------------- submission ----
+    def submit(self, req: ServeRequest) -> ServeRequest:
+        """Register a request; it enters the queue at ``req.arrival``."""
+        self._pending.append(req)
+        self._pending.sort(key=lambda r: r.arrival)
+        return req
+
+    def _release_arrivals(self) -> None:
+        now = self.now()
+        while self._pending and self._pending[0].arrival <= now:
+            req = self._pending.pop(0)
+            req.state = "queued"
+            req.metrics.t_arrival_s = time.monotonic() - (self._t0 or 0.0)
+            req.metrics.arrival_step = self.step_count
+            self.queue.push(req)
+
+    # -------------------------------------------------------- admission ----
+    def _admit(self) -> None:
+        if self.closed_batch and self.engine.n_requests() > 0:
+            return   # baseline semantics: drain the whole batch first
+        while len(self.queue) and self.engine.has_capacity():
+            req = self.queue.pop(self.engine.n_free_slots())
+            if req is None:
+                break
+            try:
+                rid = self.engine.add_request(
+                    req.prompt, plan=req.plan, sampling=req.sampling,
+                    rid=req.rid if req.rid >= 0 else None)
+            except OutOfPagesError:
+                if self.engine.n_requests() == 0:
+                    # even an idle engine cannot prefill it: the prompt
+                    # can never run — fail it, keep serving the rest
+                    req.state = "failed"
+                    self.finished.append(req)
+                    continue
+                # pool too tight for prefill right now; hold the request
+                # at the head of the line and retry once pages free up
+                self.queue.push_front(req)
+                break
+            req.rid = rid
+            req.state = "running"
+            req.metrics.t_admit_s = time.monotonic() - (self._t0 or 0.0)
+            req.metrics.admit_step = self.step_count
+            self._running[rid] = req
+
+    # ------------------------------------------------------------ events ---
+    def _dispatch(self, ev: StepEvent) -> None:
+        req = self._running.get(ev.rid)
+        if req is None:
+            return
+        m = req.metrics
+        if ev.kind == "token":
+            if m.first_token_step < 0:
+                m.first_token_step = self.step_count
+                m.t_first_token_s = time.monotonic() - (self._t0 or 0.0)
+            m.n_tokens += 1
+            if req.on_token is not None:
+                req.on_token(ev.rid, ev.token,
+                             self.engine.tok.decode([ev.token]))
+        elif ev.kind == "done":
+            m.t_done_s = time.monotonic() - (self._t0 or 0.0)
+            m.done_step = self.step_count
+            req.result = ev.result
+            req.state = "done"
+            self.finished.append(req)
+            del self._running[ev.rid]
+        elif ev.kind == "preempted":
+            # victim keeps its rid (sampling seed + radix-cached prompt);
+            # priority lane re-admits it as soon as pages free up
+            m.n_preemptions += 1
+            req.state = "preempted"
+            del self._running[ev.rid]
+            self.queue.requeue(req)
+
+    # -------------------------------------------------------------- loop ---
+    def tick(self) -> bool:
+        """One scheduling cycle: release arrivals, admit into free slots,
+        run one engine step, dispatch its events. Returns True while any
+        request is pending, queued, or running."""
+        if self._t0 is None:
+            self._t0 = time.monotonic()
+        self._release_arrivals()
+        self._admit()
+        try:
+            events = self.engine.step()
+        except OutOfPagesError:
+            # no preemption victim left (a lone request that cannot fit,
+            # or one past max_preemptions): fail just that request so the
+            # rest of the fleet keeps serving
+            events = []
+            victim = max(self.engine.active_rids, default=-1)
+            req = self._running.pop(victim, None)
+            self.engine.abort(victim)
+            if req is not None:
+                req.state = "failed"
+                self.finished.append(req)
+        # the step counter is the deterministic clock: it advances even
+        # on idle ticks so future arrivals still become due
+        self.step_count += 1
+        for ev in events:
+            self._dispatch(ev)
+        if (not events and self.clock == "wall" and self._pending
+                and not self._running and not len(self.queue)):
+            time.sleep(0.001)   # idle gap before the next wall arrival
+        return bool(self._pending or len(self.queue) or self._running)
+
+    def run(self, workload: Optional[List[ServeRequest]] = None,
+            max_steps: int = 1_000_000) -> ServingReport:
+        """Drive a workload to completion and return its SLA report."""
+        for req in workload or []:
+            self.submit(req)
+        self._t0 = time.monotonic()
+        steps0 = self.step_count
+        while self.tick():
+            if self.step_count - steps0 > max_steps:
+                raise RuntimeError(
+                    f"serving run exceeded {max_steps} steps "
+                    f"({len(self.finished)} finished, "
+                    f"{len(self._running)} running, "
+                    f"{len(self.queue)} queued)")
+        return self.report()
+
+    def report(self) -> ServingReport:
+        reqs = (self.finished + list(self._running.values())
+                + self.queue.pending() + self._pending)
+        duration = time.monotonic() - (self._t0 or time.monotonic())
+        return ServingReport.build(
+            [r.metrics for r in reqs], duration_s=duration,
+            n_steps=self.step_count,
+            policy=self.policy.name, closed_batch=self.closed_batch,
+            deadline_s=self.deadline_s)

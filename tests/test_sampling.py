@@ -1,0 +1,153 @@
+"""Sampling unit tests: top-k / top-p filtering against a numpy
+reference, SamplingParams validation, and per-request RNG
+reproducibility (output independent of batch composition)."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data.tokenizer import Tokenizer
+from repro.engine import EngineConfig, MedVerseEngine, SamplingParams
+from repro.engine.sampling import sample_token, top_k_filter, top_p_filter
+from repro.models import init_params
+
+CFG = get_config("medverse-7b", smoke=True)
+
+DIAMOND = ("<Plan> "
+           "<Outline> Transient Step 1: q -> A ; Dependency: [] </Outline> "
+           "<Outline> Transient Step 2: q -> B ; Dependency: [] </Outline> "
+           "<Outline> Transient Step 3: A , B -> C ; Dependency: [1, 2] "
+           "</Outline> </Plan>")
+
+
+def make_tok():
+    corpus = ["alpha beta gamma delta epsilon zeta eta theta iota kappa "
+              "Transient Step 1: 2: 3: Dependency: [] [1] [2] [1, 2] "
+              "A -> B ; C D q x y z"]
+    return Tokenizer.train(corpus)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    tok = make_tok()
+    params = init_params(jax.random.PRNGKey(0), CFG)
+    return tok, params
+
+
+def make_engine(params, tok, **kw):
+    base = dict(max_slots=4, page_size=4, n_pages=512, max_chain_len=256,
+                max_step_tokens=6, max_conclusion_tokens=6)
+    base.update(kw)
+    return MedVerseEngine(params, CFG, tok, EngineConfig(**base))
+
+
+# ------------------------------------------------------ filter math --------
+def _softmax(z):
+    z = np.asarray(z, np.float64)
+    z = z - z.max()
+    p = np.exp(z)
+    return p / p.sum()
+
+
+def test_top_k_keeps_k_highest():
+    rng = np.random.default_rng(0)
+    logits = rng.normal(size=50)
+    for k in (1, 5, 17):
+        out = top_k_filter(logits, k)
+        kept = np.isfinite(out)
+        # reference: the k largest logits survive, all others are -inf
+        ref_idx = np.argsort(logits)[-k:]
+        assert kept.sum() == k
+        assert set(np.where(kept)[0]) == set(ref_idx)
+        assert np.array_equal(out[kept], logits[kept])
+
+
+def test_top_k_disabled_and_oversized():
+    logits = np.asarray([1.0, 2.0, 3.0])
+    assert np.array_equal(top_k_filter(logits, 0), logits)
+    assert np.array_equal(top_k_filter(logits, 10), logits)
+
+
+def test_top_p_nucleus_mass():
+    rng = np.random.default_rng(1)
+    logits = rng.normal(size=40) * 3
+    for p in (0.1, 0.5, 0.9):
+        out = top_p_filter(logits, p)
+        kept = np.isfinite(out)
+        probs = _softmax(logits)
+        # reference: smallest descending-prob prefix reaching mass p
+        order = np.argsort(probs)[::-1]
+        cum = np.cumsum(probs[order])
+        n_keep = int(np.searchsorted(cum, p) + 1)
+        assert set(np.where(kept)[0]) == set(order[:n_keep])
+        # the kept set's mass reaches p; dropping its last member wouldn't
+        assert probs[kept].sum() >= p - 1e-12
+        if n_keep > 1:
+            assert probs[order[: n_keep - 1]].sum() < p
+
+
+def test_top_p_always_keeps_argmax():
+    logits = np.asarray([0.0, 10.0, 0.0])
+    out = top_p_filter(logits, 1e-9)
+    assert np.isfinite(out[1]) and not np.isfinite(out[0])
+
+
+def test_sample_token_greedy_and_filters():
+    rng = np.random.default_rng(2)
+    logits = np.asarray([0.1, 3.0, 1.0, 2.0])
+    assert sample_token(logits, 0.0, rng) == 1          # greedy
+    # top_k=1 at any temperature collapses to argmax
+    for _ in range(10):
+        assert sample_token(logits, 5.0, rng, top_k=1) == 1
+    # tiny nucleus likewise
+    for _ in range(10):
+        assert sample_token(logits, 5.0, rng, top_p=1e-9) == 1
+    # filters restrict support: top_k=2 only ever yields the top two
+    draws = {sample_token(logits, 2.0, rng, top_k=2) for _ in range(200)}
+    assert draws <= {1, 3}
+
+
+def test_sampling_params_validation():
+    with pytest.raises(ValueError):
+        SamplingParams(top_k=-1)
+    with pytest.raises(ValueError):
+        SamplingParams(top_p=0.0)
+    with pytest.raises(ValueError):
+        SamplingParams(top_p=1.5)
+    SamplingParams(temperature=0.7, top_k=5, top_p=0.9)  # valid
+
+
+# ------------------------------------------- per-request reproducibility ---
+def test_sampled_output_independent_of_batch_composition(setup):
+    """Each request draws from its own Generator seeded (engine_seed,
+    rid): a temperature>0 request produces identical text whether it
+    shares the batch with other requests or runs alone under the same
+    rid — the property continuous batching needs."""
+    tok, params = setup
+    sp = SamplingParams(temperature=0.8, top_k=8)
+    prompt = "q alpha beta"
+    eng_batch = make_engine(params, tok, plan_override=DIAMOND)
+    r_batch = eng_batch.generate(
+        ["q gamma delta", prompt], samplings=[sp, sp])[1]   # rid 1
+    eng_solo = make_engine(params, tok, plan_override=DIAMOND)
+    eng_solo.add_request(prompt, sampling=sp, rid=1)        # same rid
+    solo_result = None
+    while eng_solo.n_requests():
+        for ev in eng_solo.step():
+            if ev.kind == "done":
+                solo_result = ev.result
+    assert solo_result is not None
+    assert solo_result.text == r_batch.text
+    assert solo_result.step_texts == r_batch.step_texts
+
+
+def test_sampled_output_differs_across_rids(setup):
+    """Different rids seed different generators: identical prompts in
+    one batch do not produce lock-step samples."""
+    tok, params = setup
+    sp = SamplingParams(temperature=1.2)
+    eng = make_engine(params, tok, plan_override=DIAMOND)
+    ra, rb = eng.generate(["q alpha beta", "q alpha beta"],
+                          samplings=[sp, sp])
+    assert ra.text != rb.text
