@@ -1,0 +1,237 @@
+"""CI bench-regression gate: diff ``results/BENCH_*.json`` against the
+committed baselines in ``benchmarks/baselines/`` with per-metric
+tolerances.
+
+Usage (after ``PYTHONPATH=src python benchmarks/run.py --smoke``)::
+
+    python benchmarks/check_regression.py              # gate (exit 1 on fail)
+    python benchmarks/check_regression.py --update-baselines
+
+Metric selection policy: only machine-independent quantities are
+gated — deterministic step/count metrics (tight tolerances) and
+same-machine *ratios* (e.g. the paged vs dense decode speedup), which
+cancel machine speed. Raw wall-clock numbers are recorded and uploaded
+as artifacts but never gated: CI runners are noisy and heterogeneous.
+Refreshing after an intentional perf change: re-run the smoke suite,
+then commit the files ``--update-baselines`` copies over (see README
+"CI").
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+from dataclasses import dataclass
+from typing import List
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+RESULTS = os.path.join(HERE, "..", "results")
+BASELINES = os.path.join(HERE, "baselines")
+
+
+@dataclass
+class Metric:
+    path: str          # dotted path into the JSON document
+    higher_better: bool
+    rel_tol: float     # fraction of regression tolerated vs baseline
+    # lower-is-better only: absolute slack added to the limit so a 0.0
+    # baseline (e.g. max_abs_err on the authoring machine) doesn't
+    # collapse the relative tolerance to an exact-zero requirement —
+    # reduction order differs by ulps across BLAS/XLA versions
+    abs_floor: float = 0.0
+
+    def check(self, base: float, new: float):
+        """(ok, threshold) — fail only on regression beyond rel_tol;
+        improvements never fail."""
+        if self.higher_better:
+            thr = base * (1.0 - self.rel_tol)
+            return new >= thr, thr
+        thr = max(base * (1.0 + self.rel_tol), self.abs_floor)
+        return new <= thr, thr
+
+
+# file -> gated metrics. Only machine-independent quantities are gated:
+# step/count metrics are deterministic on a given commit, and the
+# paged-vs-dense speedup is a same-machine ratio (both tiers timed in
+# the same process, so runner speed cancels). Raw wall-clock (us,
+# tok/s) is recorded in the JSON and uploaded as an artifact but never
+# gated — CI runners are noisy and heterogeneous.
+SPECS = {
+    "BENCH_kernel.json": [
+        # wide tolerance: the ratio cancels uniform runner speed but not
+        # machine *class* (core count, cache, BLAS threading), so it
+        # gates gross inversions (paged collapsing to ~half of dense),
+        # not the margin. If CI's runner class disagrees with a locally
+        # authored baseline, refresh from the bench-regression artifact
+        # of a green main run (README "CI").
+        Metric("paged_decode.speedup_xla_vs_dense", True, 0.50),
+        Metric("paged_decode.max_abs_err", False, 9.0, abs_floor=1e-5),
+    ],
+    "BENCH_serving.json": [
+        Metric("runs.fcfs.n_completed", True, 0.0),
+        Metric("runs.fcfs.goodput", True, 0.0),
+        Metric("runs.fcfs.ttft_steps.mean", False, 0.60),
+        Metric("runs.chain-aware.ttft_steps.mean", False, 0.60),
+        # deterministic throughput proxy: total scheduler steps to
+        # drain the fixed smoke workload (more steps = fewer tokens
+        # retired per step). Deterministic because the smoke serving
+        # bench runs on the scheduler's *step* clock (seeded arrivals
+        # in decode steps, no wall time in the schedule); the slack
+        # absorbs token-level drift across jax/BLAS versions only.
+        Metric("runs.fcfs.n_steps", False, 0.10),
+    ],
+}
+
+# file -> dotted paths that must be *equal* between baseline and
+# results before any metric is diffed: catches comparing a full-shape
+# run (`kernel_bench.py` without --smoke) against the committed smoke
+# baseline, or a changed serving workload.
+GUARDS = {
+    "BENCH_kernel.json": ["config.smoke", "paged_decode.shape"],
+    "BENCH_serving.json": ["config.n_requests", "config.rate",
+                           "config.clock", "config.max_slots"],
+}
+
+
+def _lookup_raw(doc: dict, path: str):
+    cur = doc
+    for part in path.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            raise KeyError(path)
+        cur = cur[part]
+    return cur
+
+
+def _lookup(doc: dict, path: str) -> float:
+    return float(_lookup_raw(doc, path))
+
+
+# intrinsic workload requirements a committed baseline must satisfy —
+# the configuration CI's smoke run produces. update_baselines refuses
+# anything else, so a full-shape or wall-clock local run can't be
+# installed as a baseline the gate would then reject on every CI run.
+EXPECTED = {
+    "BENCH_kernel.json": {"config.smoke": True},
+    "BENCH_serving.json": {"config.clock": "step"},
+}
+
+
+def update_baselines() -> int:
+    os.makedirs(BASELINES, exist_ok=True)
+    errors = []
+    for fname in SPECS:
+        src = os.path.join(RESULTS, fname)
+        if not os.path.exists(src):
+            errors.append(f"{fname}: missing — run the smoke bench first "
+                          f"(`PYTHONPATH=src python benchmarks/run.py "
+                          f"--smoke`)")
+            continue
+        with open(src) as f:
+            doc = json.load(f)
+        bad = []
+        for path, want in EXPECTED.get(fname, {}).items():
+            try:
+                got = _lookup_raw(doc, path)
+            except KeyError:
+                got = "<missing>"
+            if got != want:
+                bad.append(f"{path}={got!r} (want {want!r})")
+        if bad:
+            errors.append(f"{fname}: not a smoke-workload result — "
+                          f"{'; '.join(bad)} — re-run the *smoke* bench "
+                          f"before refreshing baselines")
+            continue
+        shutil.copyfile(src, os.path.join(BASELINES, fname))
+        print(f"baseline updated: benchmarks/baselines/{fname}")
+    if errors:
+        print("ERROR:")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    return 0
+
+
+def check() -> int:
+    failures: List[str] = []
+    rows = []
+    for fname, metrics in SPECS.items():
+        bpath = os.path.join(BASELINES, fname)
+        rpath = os.path.join(RESULTS, fname)
+        if not os.path.exists(bpath):
+            failures.append(
+                f"{fname}: no committed baseline — run the smoke bench and "
+                f"`python benchmarks/check_regression.py --update-baselines`")
+            continue
+        if not os.path.exists(rpath):
+            failures.append(f"{fname}: results/{fname} missing — did the "
+                            f"bench run?")
+            continue
+        with open(bpath) as f:
+            base_doc = json.load(f)
+        with open(rpath) as f:
+            new_doc = json.load(f)
+        mismatched = False
+        for g in GUARDS.get(fname, []):
+            try:
+                bv, nv = _lookup_raw(base_doc, g), _lookup_raw(new_doc, g)
+            except KeyError as e:
+                failures.append(f"{fname}: config guard {e.args[0]} missing")
+                mismatched = True
+                continue
+            if bv != nv:
+                failures.append(
+                    f"{fname}:{g}: results were produced with a different "
+                    f"workload than the baseline ({nv!r} vs {bv!r}) — run "
+                    f"the *smoke* bench (`benchmarks/run.py --smoke`) "
+                    f"before gating or refreshing baselines")
+                mismatched = True
+        if mismatched:
+            continue
+        for m in metrics:
+            try:
+                base = _lookup(base_doc, m.path)
+            except KeyError:
+                failures.append(f"{fname}:{m.path}: not in baseline — "
+                                f"refresh baselines")
+                continue
+            try:
+                new = _lookup(new_doc, m.path)
+            except KeyError:
+                failures.append(f"{fname}:{m.path}: missing from results")
+                continue
+            ok, thr = m.check(base, new)
+            arrow = "↑" if m.higher_better else "↓"
+            status = "ok" if ok else "REGRESSION"
+            rows.append(f"  {status:>10}  {fname}:{m.path} {arrow} "
+                        f"base={base:.4g} new={new:.4g} "
+                        f"(tol {m.rel_tol:.0%}, limit {thr:.4g})")
+            if not ok:
+                failures.append(
+                    f"{fname}:{m.path}: {new:.4g} vs baseline {base:.4g} "
+                    f"(worse than {m.rel_tol:.0%} tolerance, limit {thr:.4g})")
+    print("bench-regression report:")
+    for r in rows:
+        print(r)
+    if failures:
+        print("\nFAILED:")
+        for f_ in failures:
+            print(f"  {f_}")
+        return 1
+    print("\nall gated metrics within tolerance")
+    return 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--update-baselines", action="store_true",
+                    help="copy current results/BENCH_*.json into "
+                         "benchmarks/baselines/ (commit the result)")
+    args = ap.parse_args()
+    sys.exit(update_baselines() if args.update_baselines else check())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,30 +1,186 @@
-"""Microbenchmarks: Pallas kernels (interpret mode on CPU — structural
-check + relative cost only; real perf numbers require a TPU) and the
-pure-JAX reference paths that dominate the dry-run roofline."""
+"""Microbenchmarks for the Pallas kernel layer, CI-gated.
+
+Three tiers per kernel workload on CPU:
+
+* **dense** — the engine's reference path (``attention_backend="dense"``):
+  per-token slot gather out of the flat pool + masked jnp SDPA.
+* **paged XLA** — the paged-attention *schedule* executed as pure XLA
+  (``paged_decode_attention_xla``): identical math and page-table
+  contract as the Mosaic kernel, gathering whole pages instead of
+  individual slots. On CPU its advantage is modest (~1.1-1.2x on the
+  smoke shape) and confined to gather-bound regimes — many streams,
+  small GQA KV rows, large pool — where the dense path pays per-token
+  row-read overhead; at compute-bound shapes the tiers converge, and
+  the schedule's large wins need the compiled Mosaic kernel on TPU.
+  This dense/paged *ratio* is the row the CI regression gate tracks
+  (same-machine, so runner speed cancels).
+* **pallas interpret** — the actual kernel body through the Pallas
+  interpreter: a *correctness emulation* with no performance meaning
+  (orders of magnitude slower than anything compiled); timed on a tiny
+  shape purely so CI notices if the kernel stops running at all. Real
+  kernel perf numbers require a TPU (``interpret=False``).
+
+Writes ``results/BENCH_kernel.json`` for ``benchmarks/check_regression.py``.
+"""
 
 from __future__ import annotations
 
+import json
+import os
+import sys
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+if __package__ in (None, ""):  # direct script execution
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    __package__ = "benchmarks"
+
 from .common import emit
-from repro.kernels.dag_attention.ref import dag_attention_ref
 from repro.core import ReasoningDAG, topology_from_dag
+from repro.engine.paged_model import decode_attention_dense
+from repro.kernels.dag_attention.ref import dag_attention_ref
+from repro.kernels.decode_attention.ops import (paged_decode_attention_flat,
+                                                paged_decode_attention_xla)
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
 
 
-def _time(f, *args, n=3):
-    f(*args)  # compile
-    t0 = time.perf_counter()
-    for _ in range(n):
-        jax.block_until_ready(f(*args))
-    return (time.perf_counter() - t0) / n
+def _time(f, *args, n=3, trials=3):
+    """Best-of-``trials`` mean over ``n`` synchronized calls. The
+    warm-up call blocks so neither async compilation nor dispatch tail
+    leaks into the timed loop, and the min-over-trials discards
+    scheduler noise — both matter because these numbers feed the CI
+    regression gate."""
+    return _time_pair([(f, args)], n=n, trials=trials)[0]
 
 
-def run():
-    b, s, nh, nkv, hd = 1, 256, 4, 2, 64
+def _time_pair(fs, n=3, trials=3):
+    """Time several (f, args) thunks with *interleaved* trials (one
+    trial of each per round, best-of-trials per thunk). Interleaving
+    matters when the gated quantity is a ratio of two timings: timing
+    tier A's trials back-to-back and then tier B's lets machine-state
+    drift (frequency scaling, a co-tenant waking up) land entirely on
+    one side and corrupt the ratio."""
+    for f, args in fs:
+        jax.block_until_ready(f(*args))  # compile + drain async dispatch
+    best = [float("inf")] * len(fs)
+    for _ in range(trials):
+        for i, (f, args) in enumerate(fs):
+            t0 = time.perf_counter()
+            for _ in range(n):
+                jax.block_until_ready(f(*args))
+            best[i] = min(best[i], (time.perf_counter() - t0) / n)
+    return best
+
+
+# ------------------------------------------------- paged decode tiers ------
+def _dense_gather_sdpa(q, k_slots, v_slots, pool_pos, chain_idx, chain_len,
+                       q_pos):
+    """The engine dense backend's per-layer decode attention — the
+    *shipped* code (``paged_model.decode_attention_dense``), so the
+    CI-gated dense-vs-paged ratio can't drift from the engine path."""
+    b, nh, hd = q.shape
+    out = decode_attention_dense(q[:, None], k_slots, v_slots, pool_pos,
+                                 chain_idx, chain_len, q_pos)
+    return out[:, 0].reshape(b, nh, hd)
+
+
+def _paged_workload(b, nkv, g, hd, page_size, n_pages, live, seed=0):
+    """One decode-step workload: b streams, each a scattered chain of
+    ``live`` tokens (fork/join allocation order — pages are not
+    contiguous in the pool)."""
+    rng = np.random.default_rng(seed)
+    nh = nkv * g
+    n_slots = n_pages * page_size
+    lp = live // page_size
+    q = jax.random.normal(jax.random.PRNGKey(seed), (b, nh, hd))
+    ks = jax.random.normal(jax.random.PRNGKey(seed + 1), (n_slots, nkv, hd))
+    vs = jax.random.normal(jax.random.PRNGKey(seed + 2), (n_slots, nkv, hd))
+    pos = jnp.asarray(np.arange(n_slots) % live, jnp.int32)
+    pt = np.stack([rng.permutation(n_pages)[:lp] for _ in range(b)])
+    pt = pt.astype(np.int32)
+    # the token chain is the page table expanded slot-wise (full pages)
+    chain = (pt[:, :, None] * page_size
+             + np.arange(page_size)[None, None, :]).reshape(b, live)
+    chain = chain.astype(np.int32)
+    return dict(
+        q=q, ks=ks, vs=vs, pos=pos,
+        chain=jnp.asarray(chain),
+        clen=jnp.full((b,), live, jnp.int32),
+        qpos=jnp.full((b,), live, jnp.int32),
+        pt=jnp.asarray(pt),
+        pv=jnp.full((b, lp), page_size, jnp.int32),
+        page_size=page_size, n_pages=n_pages,
+    )
+
+
+def bench_paged_decode(b=64, nkv=2, g=2, hd=64, page_size=16, n_pages=8192,
+                       live=64, n=10, trials=5):
+    """Dense per-slot gather vs the paged schedule, one decode step.
+
+    The default shape is the serving-relevant regime where the paged
+    schedule's CPU advantage lives: many concurrent streams with small
+    GQA KV rows over a large pool, so the dense path's per-token gather
+    overhead (b*live tiny row reads) dominates, while the paged path
+    reads whole pages. At compute-bound shapes the two tiers converge —
+    the page-table schedule's large wins need the Mosaic kernel on TPU.
+    """
+    w = _paged_workload(b, nkv, g, hd, page_size, n_pages, live)
+    dense = jax.jit(_dense_gather_sdpa)
+    kp = w["ks"].reshape(n_pages, page_size, nkv, hd)
+    vp = w["vs"].reshape(n_pages, page_size, nkv, hd)
+    pp = w["pos"].reshape(n_pages, page_size)
+    xla = lambda *a: paged_decode_attention_xla(*a)
+    dt_dense, dt_xla = _time_pair(
+        [(dense, (w["q"], w["ks"], w["vs"], w["pos"], w["chain"],
+                  w["clen"], w["qpos"])),
+         (xla, (w["q"], kp, vp, pp, w["pt"], w["pv"], w["qpos"]))],
+        n=n, trials=trials)
+    # numeric agreement between the two paths (same math, different
+    # schedule): the backend-parity contract at the kernel level
+    o_dense = dense(w["q"], w["ks"], w["vs"], w["pos"], w["chain"],
+                    w["clen"], w["qpos"])
+    o_xla = xla(w["q"], kp, vp, pp, w["pt"], w["pv"], w["qpos"])
+    max_err = float(jnp.max(jnp.abs(o_dense - o_xla)))
+    speedup = dt_dense / dt_xla
+    shape = f"b{b}kv{nkv}g{g}d{hd}ps{page_size}live{live}"
+    emit("kernel_paged_decode_dense_sdpa", dt_dense * 1e6, f"shape={shape}")
+    emit("kernel_paged_decode_paged_xla", dt_xla * 1e6,
+         f"speedup_vs_dense={speedup:.2f}x;max_abs_err={max_err:.2e}")
+    return {
+        "shape": shape, "dense_us": dt_dense * 1e6, "paged_xla_us": dt_xla * 1e6,
+        "speedup_xla_vs_dense": speedup, "max_abs_err": max_err,
+    }
+
+
+def bench_pallas_interpret(b=2, nkv=2, g=2, hd=64, page_size=8, n_pages=32,
+                           live=32, n=2):
+    """Tiny-shape liveness probe of the real kernel via the interpreter
+    (structural only — interpret timing is meaningless as perf)."""
+    w = _paged_workload(b, nkv, g, hd, page_size, n_pages, live, seed=3)
+    f = lambda *a: paged_decode_attention_flat(
+        *a, page_size=page_size, interpret=True)
+    dt = _time(f, w["q"], w["ks"], w["vs"], w["pos"], w["pt"], w["pv"],
+               w["qpos"], n=n)
+    o_kernel = f(w["q"], w["ks"], w["vs"], w["pos"], w["pt"], w["pv"],
+                 w["qpos"])
+    kp = w["ks"].reshape(n_pages, page_size, nkv, hd)
+    vp = w["vs"].reshape(n_pages, page_size, nkv, hd)
+    pp = w["pos"].reshape(n_pages, page_size)
+    o_xla = paged_decode_attention_xla(w["q"], kp, vp, pp, w["pt"], w["pv"],
+                                       w["qpos"])
+    max_err = float(jnp.max(jnp.abs(o_kernel - o_xla)))
+    emit("kernel_paged_decode_pallas_interpret", dt * 1e6,
+         f"structural_only=1;max_abs_err_vs_xla={max_err:.2e}")
+    return {"interpret_us": dt * 1e6, "max_abs_err_vs_xla": max_err}
+
+
+# ----------------------------------------------------- dag attention -------
+def bench_dag_attention(b=1, s=256, nh=4, nkv=2, hd=64, n=3):
     ks = jax.random.split(jax.random.PRNGKey(0), 3)
     q = jax.random.normal(ks[0], (b, nh, s, hd))
     k = jax.random.normal(ks[1], (b, nkv, s, hd))
@@ -35,22 +191,48 @@ def run():
     seg = jnp.asarray(topo.seg_id)[None]
     lay = jnp.asarray(topo.layer_id)[None]
     pos = jnp.asarray(topo.pos_id)[None]
-
     ref = jax.jit(lambda *a: dag_attention_ref(*a))
-    dt = _time(ref, q, k, v, seg, lay, pos)
+    dt = _time(ref, q, k, v, seg, lay, pos, n=n)
     flops = 4 * b * nh * s * s * hd
     emit("kernel_dag_attention_ref_jit", dt * 1e6,
          f"gflops_s={flops/dt/1e9:.1f};shape=b{b}s{s}h{nh}d{hd}")
+    return {"ref_jit_us": dt * 1e6}
 
+
+def bench_rglru(n=3):
     from repro.models.rglru import rglru_scan_ref
+    ks = jax.random.split(jax.random.PRNGKey(1), 2)
     a = jax.nn.sigmoid(jax.random.normal(ks[0], (2, 512, 256)))
     bb = jax.random.normal(ks[1], (2, 512, 256))
     scan = jax.jit(lambda a, b: rglru_scan_ref(a, b))
-    dt = _time(scan, a, bb)
+    dt = _time(scan, a, bb, n=n)
     emit("kernel_rglru_assoc_scan_jit", dt * 1e6,
          f"elems_s={a.size/dt/1e6:.1f}M")
-    return True
+    return {"jit_us": dt * 1e6}
+
+
+def run(smoke: bool = False):
+    out = {"config": {"smoke": smoke}}
+    out["paged_decode"] = bench_paged_decode()   # the CI-gated shape
+    out["pallas_interpret"] = bench_pallas_interpret()
+    if not smoke:
+        out["paged_decode_long"] = bench_paged_decode(
+            b=8, nkv=2, g=2, hd=64, page_size=64, n_pages=4096, live=2048)
+        out["dag_attention"] = bench_dag_attention()
+        out["rglru"] = bench_rglru()
+    if not out["paged_decode"]["max_abs_err"] < 1e-4:
+        raise ValueError(f"dense/paged parity broken: {out['paged_decode']}")
+    os.makedirs(RESULTS, exist_ok=True)
+    path = os.path.join(RESULTS, "BENCH_kernel.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"# wrote {os.path.relpath(path)}")
+    return out
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+    run(smoke=args.smoke)

@@ -50,6 +50,7 @@ def main() -> None:
     if args.smoke:
         art = get_artifacts(n_items=60, epochs=1, tag="smoke")
         benches = {
+            "kernel_bench": lambda a: kernel_bench.run(smoke=True),
             "fig4a_latency": lambda a: fig4a_latency.run(a, n_per_class=1),
             "fig4b_throughput": lambda a: fig4b_throughput.run(
                 a, lengths=(32,)),

@@ -2,8 +2,9 @@ from .engine import (EngineConfig, GenResult, MedVerseEngine, SerialEngine,
                      StepEvent)
 from .kvcache import (IndexChain, OutOfPagesError, PageAllocator, PoolConfig,
                       init_pool)
-from .paged_model import (paged_decode, prefill_forward, prefix_pool_write,
-                          supports_paged)
+from .paged_model import (ATTENTION_BACKENDS, check_backend,
+                          decode_attention_dense, paged_decode,
+                          prefill_forward, prefix_pool_write, supports_paged)
 from .radix import RadixTree
 from .sampling import SamplingParams, sample_token
 
@@ -21,6 +22,9 @@ __all__ = [
     "PageAllocator",
     "PoolConfig",
     "init_pool",
+    "ATTENTION_BACKENDS",
+    "check_backend",
+    "decode_attention_dense",
     "paged_decode",
     "prefill_forward",
     "supports_paged",

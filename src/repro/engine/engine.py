@@ -81,6 +81,7 @@ reclaimable cache.
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 from collections import deque
 from typing import Dict, List, Optional, Tuple
@@ -96,8 +97,8 @@ from ..data.tokenizer import EOS, Tokenizer
 from ..models.config import ModelConfig
 from .kvcache import (IndexChain, OutOfPagesError, PageAllocator, PoolConfig,
                       init_pool)
-from .paged_model import (paged_decode, prefill_forward, prefix_pool_write,
-                          supports_paged)
+from .paged_model import (check_backend, paged_decode, prefill_forward,
+                          prefix_pool_write, supports_paged)
 from .radix import RadixTree
 from .sampling import SamplingParams, sample_token
 
@@ -119,6 +120,18 @@ class EngineConfig:
     # predecessors fire (see module docstring, "Scheduler modes").
     async_frontier: bool = False
     radix_cache: bool = True       # cross-request prompt-prefix reuse
+    # "dense": gather chains + masked jnp SDPA (reference semantics).
+    # "pallas": paged flash decode kernel + chunked DAG prefill kernel
+    # (the TPU hot path; see paged_model docstring for the parity
+    # contract). Defaults from $ENGINE_ATTENTION_BACKEND so the full
+    # test/bench surface runs under either backend unmodified (the CI
+    # matrix sets it).
+    attention_backend: str = dataclasses.field(
+        default_factory=lambda: os.environ.get(
+            "ENGINE_ATTENTION_BACKEND", "dense"))
+    # run Pallas kernels in interpret mode (CPU-executable emulation);
+    # set False on real TPU hardware for compiled Mosaic kernels
+    kernel_interpret: bool = True
     seed: int = 0
     # safety valve: a request evicted this many times is genuinely too
     # large for the pool — step() raises instead of thrashing
@@ -230,6 +243,7 @@ class MedVerseEngine:
         self.cfg = cfg
         self.tok = tok
         self.ecfg = ecfg or EngineConfig()
+        check_backend(cfg, self.ecfg.attention_backend)
         pc = PoolConfig(
             n_layers=cfg.n_layers, n_pages=self.ecfg.n_pages,
             page_size=self.ecfg.page_size, n_kv_heads=cfg.n_kv_heads,
@@ -247,6 +261,7 @@ class MedVerseEngine:
         self.total_iters = 0                 # decode iterations, lifetime
         self.preemptions = 0                 # page-pressure evictions, lifetime
         self.bucket_hist: Dict[int, int] = {}  # chain bucket -> decode steps
+        self.page_bucket_hist: Dict[int, int] = {}  # pallas: P_max -> steps
         # open-system state: live requests and their decode streams
         self._reqs: Dict[int, _Request] = {}
         self._active: List[_Stream] = []
@@ -290,7 +305,9 @@ class MedVerseEngine:
         pos_p = np.arange(bucket, dtype=np.int32)
         logits, ks, vs = prefill_forward(
             self.params, jnp.asarray(ids_p)[None],
-            jnp.asarray(pos_p)[None], self.cfg, jnp.int32(n))
+            jnp.asarray(pos_p)[None], self.cfg, jnp.int32(n),
+            backend=self.ecfg.attention_backend,
+            interpret=self.ecfg.kernel_interpret)
         # write only positions [m, n): the cached prefix already holds
         # identical K/V; prefix and padding rows get the out-of-range
         # sentinel slot and are dropped device-side
@@ -558,26 +575,9 @@ class MedVerseEngine:
             events.append(StepEvent(
                 kind="token", rid=st.rid, token=tok_in,
                 purpose=st.purpose, tid=st.tid, forced=was_forced))
-        # power-of-two chain bucketing: short chains stop paying
-        # max_chain_len-wide attention
-        s_bucket = self._chain_bucket(max(lens))
-        self.bucket_hist[s_bucket] = self.bucket_hist.get(s_bucket, 0) + 1
-        chains = [st.chain.padded(s_bucket) for st in batch]
+        logits_np = self._decode(tokens, q_pos, slots,
+                                 [st.chain for st in batch], lens)
         n = len(batch)
-        pad = self.ecfg.max_slots - n
-        arr = lambda x, d=np.int32: jnp.asarray(
-            np.pad(np.asarray(x, d), [(0, pad)] + [(0, 0)] * (np.asarray(x).ndim - 1)))
-        # padding rows must not scatter into the pool: give them the
-        # out-of-range sentinel slot (dropped inside paged_decode)
-        slots_p = np.full((self.ecfg.max_slots,), self.pc.n_slots,
-                          np.int32)
-        slots_p[:n] = slots
-        logits, self.pool["k"], self.pool["v"], self.pool["pos"] = paged_decode(
-            self.params, self.pool["k"], self.pool["v"], self.pool["pos"],
-            arr(tokens), arr(q_pos), jnp.asarray(slots_p),
-            jnp.asarray(np.pad(np.stack(chains), [(0, pad), (0, 0)])),
-            arr(lens), self.cfg)
-        logits_np = np.asarray(logits[:n])
         step_dt = time.monotonic() - t_step0
         new_streams: List[_Stream] = []
         finished: List[_Stream] = []
@@ -611,6 +611,70 @@ class MedVerseEngine:
                 events.append(StepEvent(kind="done", rid=req.rid,
                                         result=result))
         return events
+
+    # ---------------------------------------------------- batched decode ---
+    def _decode(self, tokens: List[int], q_pos: List[int],
+                slots: List[int], chains: List[IndexChain],
+                lens: List[int]) -> np.ndarray:
+        """One batched decode call over ``n <= max_slots`` streams,
+        dispatched to the configured attention backend. Handles
+        power-of-two bucketing (chain width for dense, page count for
+        pallas — the kernel's shapes depend only on the page table
+        width), batch-row padding with the out-of-range write-slot
+        sentinel, and the bucket histograms. Returns host logits (n, V).
+        """
+        n = len(tokens)
+        pad = self.ecfg.max_slots - n
+        # power-of-two chain bucketing: short chains stop paying
+        # max_chain_len-wide attention (and the cap is enforced for both
+        # backends — chains must fit the compiled ladder)
+        s_bucket = self._chain_bucket(max(lens))
+        self.bucket_hist[s_bucket] = self.bucket_hist.get(s_bucket, 0) + 1
+        arr = lambda x, d=np.int32: jnp.asarray(
+            np.pad(np.asarray(x, d), [(0, pad)] + [(0, 0)] * (np.asarray(x).ndim - 1)))
+        # padding rows must not scatter into the pool: give them the
+        # out-of-range sentinel slot (dropped inside the decode step)
+        slots_p = np.full((self.ecfg.max_slots,), self.pc.n_slots,
+                          np.int32)
+        slots_p[:n] = slots
+        if self.ecfg.attention_backend == "pallas":
+            runs = [ch.page_runs() for ch in chains]
+            p_bucket = self._page_bucket(max(r[0].size for r in runs))
+            self.page_bucket_hist[p_bucket] = (
+                self.page_bucket_hist.get(p_bucket, 0) + 1)
+            pt = np.zeros((self.ecfg.max_slots, p_bucket), np.int32)
+            pv = np.zeros((self.ecfg.max_slots, p_bucket), np.int32)
+            for i, (pgs, cnt) in enumerate(runs):
+                pt[i, : pgs.size] = pgs
+                pv[i, : pgs.size] = cnt
+            logits, self.pool["k"], self.pool["v"], self.pool["pos"] = (
+                paged_decode(
+                    self.params, self.pool["k"], self.pool["v"],
+                    self.pool["pos"], arr(tokens), arr(q_pos),
+                    jnp.asarray(slots_p), None, None, self.cfg,
+                    backend="pallas", page_table=jnp.asarray(pt),
+                    page_valid=jnp.asarray(pv),
+                    page_size=self.pc.page_size,
+                    interpret=self.ecfg.kernel_interpret))
+        else:
+            padded = [ch.padded(s_bucket) for ch in chains]
+            logits, self.pool["k"], self.pool["v"], self.pool["pos"] = (
+                paged_decode(
+                    self.params, self.pool["k"], self.pool["v"],
+                    self.pool["pos"], arr(tokens), arr(q_pos),
+                    jnp.asarray(slots_p),
+                    jnp.asarray(np.pad(np.stack(padded), [(0, pad), (0, 0)])),
+                    arr(lens), self.cfg))
+        return np.asarray(logits[:n])
+
+    def _page_bucket(self, n: int) -> int:
+        """Smallest power-of-two page-table width covering ``n`` pages,
+        floored at the page count of a ``min_chain_bucket``-token chain
+        so the compiled ladder mirrors the dense chain buckets."""
+        b = max(self.ecfg.min_chain_bucket // self.pc.page_size, 1)
+        while b < n:
+            b <<= 1
+        return b
 
     # ------------------------------------------------------- preemption ----
     def _pick_victim(self) -> Optional[int]:
@@ -724,20 +788,41 @@ class MedVerseEngine:
 
     def warmup(self, buckets: Optional[List[int]] = None) -> List[int]:
         """Pre-compile the batched decode step for each chain bucket so
-        no request pays XLA compilation mid-generation. Returns the
-        warmed bucket widths."""
+        no request pays XLA compilation mid-generation. Under the pallas
+        backend the compiled shapes depend on the page-table width, so
+        each chain bucket warms its corresponding page bucket (chains
+        with many partial pages — deep joins — may still compile one
+        wider table at runtime). Returns the warmed bucket widths."""
         buckets = buckets or self.bucket_ladder()
         pg = self.alloc.alloc_page()  # scratch page, freed afterwards
         slot = pg * self.pc.page_size
         n = self.ecfg.max_slots
         for s in buckets:
-            chain = np.zeros((n, s), np.int32)
-            chain[:, 0] = slot
-            _, self.pool["k"], self.pool["v"], self.pool["pos"] = paged_decode(
-                self.params, self.pool["k"], self.pool["v"], self.pool["pos"],
-                jnp.zeros((n,), jnp.int32), jnp.zeros((n,), jnp.int32),
-                jnp.full((n,), slot, jnp.int32), jnp.asarray(chain),
-                jnp.ones((n,), jnp.int32), self.cfg)
+            if self.ecfg.attention_backend == "pallas":
+                pb = self._page_bucket(-(-s // self.pc.page_size))
+                pt = np.zeros((n, pb), np.int32)
+                pv = np.zeros((n, pb), np.int32)
+                pt[:, 0] = pg
+                pv[:, 0] = 1
+                _, self.pool["k"], self.pool["v"], self.pool["pos"] = (
+                    paged_decode(
+                        self.params, self.pool["k"], self.pool["v"],
+                        self.pool["pos"], jnp.zeros((n,), jnp.int32),
+                        jnp.zeros((n,), jnp.int32),
+                        jnp.full((n,), slot, jnp.int32), None, None,
+                        self.cfg, backend="pallas",
+                        page_table=jnp.asarray(pt),
+                        page_valid=jnp.asarray(pv),
+                        page_size=self.pc.page_size,
+                        interpret=self.ecfg.kernel_interpret))
+            else:
+                chain = np.zeros((n, s), np.int32)
+                chain[:, 0] = slot
+                _, self.pool["k"], self.pool["v"], self.pool["pos"] = paged_decode(
+                    self.params, self.pool["k"], self.pool["v"], self.pool["pos"],
+                    jnp.zeros((n,), jnp.int32), jnp.zeros((n,), jnp.int32),
+                    jnp.full((n,), slot, jnp.int32), jnp.asarray(chain),
+                    jnp.ones((n,), jnp.int32), self.cfg)
         self.alloc.decref(pg)
         return buckets
 
@@ -789,26 +874,13 @@ class SerialEngine:
             while not st.done:
                 tok_in = st.forced.popleft() if st.forced else st.next_input
                 slot = st.chain.next_slot()
-                s_bucket = eng._chain_bucket(st.chain.length)
-                eng.bucket_hist[s_bucket] = (
-                    eng.bucket_hist.get(s_bucket, 0) + 1)
-                logits, eng.pool["k"], eng.pool["v"], eng.pool["pos"] = paged_decode(
-                    eng.params, eng.pool["k"], eng.pool["v"], eng.pool["pos"],
-                    jnp.asarray(np.pad([tok_in], (0, eng.ecfg.max_slots - 1))),
-                    jnp.asarray(np.pad([st.q_pos], (0, eng.ecfg.max_slots - 1))),
-                    jnp.asarray(np.pad([slot], (0, eng.ecfg.max_slots - 1),
-                                       constant_values=eng.pc.n_slots)),
-                    jnp.asarray(np.pad(
-                        st.chain.padded(s_bucket)[None],
-                        [(0, eng.ecfg.max_slots - 1), (0, 0)])),
-                    jnp.asarray(np.pad([st.chain.length],
-                                       (0, eng.ecfg.max_slots - 1))),
-                    eng.cfg)
+                logits = eng._decode([tok_in], [st.q_pos], [slot],
+                                     [st.chain], [st.chain.length])
                 st.generated.append(tok_in)
                 st.q_pos += 1
                 n += 1
                 sp = req.sampling
-                nxt = int(sample_token(np.asarray(logits[0]),
+                nxt = int(sample_token(logits[0],
                                        sp.temperature, req.rng,
                                        sp.top_k, sp.top_p))
                 if tok_in == EOS or n >= st.max_new:

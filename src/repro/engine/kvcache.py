@@ -239,6 +239,30 @@ class IndexChain:
         out[: self.length] = self.idx[: self.length]
         return out
 
+    def page_runs(self) -> Tuple[np.ndarray, np.ndarray]:
+        """``(pages, valid)``: the chain's pages in first-appearance
+        order and how many slots of each the chain references.
+
+        This is the chain expressed in the Pallas decode kernel's native
+        page-table structure. It relies on an invariant the pool
+        maintains by construction: every page a chain references is
+        referenced on a *contiguous prefix* of that page's slots. Pages
+        are single-writer (``next_slot`` fills the owned write page
+        sequentially; forks and radix adoptions never append into an
+        inherited page) and every inheritance path — fork, ordered-dedup
+        join, radix prefix adoption — truncates or copies a sequential
+        run, so per-page references stay ``{0 .. count-1}``. Attention
+        over ``valid[i]`` leading slots of each page therefore covers
+        exactly the chain's slot set.
+        """
+        if self.length == 0:
+            return (np.zeros((0,), np.int32), np.zeros((0,), np.int32))
+        pg = self.idx[: self.length] // self.alloc.pc.page_size
+        uniq, first, counts = np.unique(pg, return_index=True,
+                                        return_counts=True)
+        order = np.argsort(first, kind="stable")
+        return uniq[order].astype(np.int32), counts[order].astype(np.int32)
+
 
 # ----------------------------------------------------- device pool writes --
 @jax.jit

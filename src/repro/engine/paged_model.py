@@ -6,6 +6,24 @@ Engine-supported layer kinds: ATTN and LOCAL_ATTN (the paper's engine
 targets decoder LLMs; MoE FFNs work; MLA/SSM decode goes through the
 dense ``models.decode_step`` path — see DESIGN.md §4).
 
+Attention backends (``EngineConfig.attention_backend``):
+
+* ``"dense"`` — gather the chain's K/V out of the pool and run a masked
+  jnp SDPA. Reference semantics; what every XLA backend supports.
+* ``"pallas"`` — the hot path. Decode goes through the paged GQA flash
+  kernel (``kernels.decode_attention``): the page table built from each
+  stream's index chain is scalar-prefetched and the kernel streams
+  exactly the chain's live pages, no gather materialization. Prefill
+  goes through the chunked DAG flash kernel (``kernels.dag_attention``)
+  in its degenerate linear topology. Both kernels accumulate the softmax
+  in float32 exactly like ``_sdpa``; outputs agree to float32 rounding
+  (~1e-6 relative — flash renormalization reorders the reduction), which
+  is atol-bounded, not bit-identical. Temp-0 decoding is stable against
+  that at the argmax, and every scheduling path (sync/async frontier,
+  radix hits, preemption/re-prefill) is backend-agnostic host logic.
+  ``attn_logit_softcap`` is not implemented in the kernels and is
+  rejected at engine construction.
+
 All functions are functional: the pool arrays flow in and out of jitted
 steps; index chains and positions are built host-side (scheduling is
 <0.01% of wall-clock — paper Table 2 — and ours is too, see
@@ -23,11 +41,28 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.masks import NEG_INF
+from ..kernels.dag_attention.ops import causal_prefill_attention
+from ..kernels.decode_attention.ops import paged_decode_attention_flat
 from ..models.attention import TopoBatch
 from ..models.config import ATTN, LOCAL_ATTN, ModelConfig
 from ..models.layers import apply_mlp, apply_norm, apply_rope, embed_tokens, unembed
 from ..models.moe import moe_ffn
 from ..models.transformer import compute_stages
+
+ATTENTION_BACKENDS = ("dense", "pallas")
+
+
+def check_backend(cfg: ModelConfig, backend: str) -> None:
+    """Validate an attention-backend choice against the model config."""
+    if backend not in ATTENTION_BACKENDS:
+        raise ValueError(
+            f"attention_backend={backend!r}: expected one of "
+            f"{ATTENTION_BACKENDS}")
+    if backend == "pallas" and cfg.attn_logit_softcap > 0:
+        raise NotImplementedError(
+            f"{cfg.name}: attn_logit_softcap={cfg.attn_logit_softcap} is "
+            "not implemented in the Pallas attention kernels; use "
+            "attention_backend='dense'")
 
 
 def _layer_list(cfg: ModelConfig):
@@ -67,7 +102,7 @@ def _proj_qkv(p, h, cfg, pos):
     return q, k, v
 
 
-def _sdpa(q, k, v, bias, cfg):
+def _sdpa(q, k, v, bias, softcap=0.0):
     """q:(B,Sq,nh,hd) k,v:(B,Sk,nkv,hd) bias broadcastable to
     (B,1,1,Sq,Sk). Returns (B,Sq,nh*hd) f32->x dtype."""
     b, sq, nh, hd = q.shape
@@ -76,22 +111,51 @@ def _sdpa(q, k, v, bias, cfg):
     qg = q.reshape(b, sq, nkv, g, hd)
     sc = jnp.einsum("bqkgh,bskh->bkgqs", qg.astype(jnp.float32),
                     k.astype(jnp.float32)) / math.sqrt(hd)
-    if cfg.attn_logit_softcap > 0:
-        sc = jnp.tanh(sc / cfg.attn_logit_softcap) * cfg.attn_logit_softcap
+    if softcap > 0:
+        sc = jnp.tanh(sc / softcap) * softcap
     sc = sc + bias
     w = jax.nn.softmax(sc, axis=-1)
     out = jnp.einsum("bkgqs,bskh->bqkgh", w, v.astype(jnp.float32))
     return out.reshape(b, sq, nh * hd)
 
 
+def decode_attention_dense(q, k_slots, v_slots, pool_pos, chain_idx,
+                           chain_len, q_pos, *, window: int = 0,
+                           softcap: float = 0.0):
+    """Per-layer decode attention of the ``"dense"`` backend: gather each
+    stream's index chain out of the flat slot pool and run the masked
+    SDPA. Visibility is the length mask composed with the adaptive-
+    position mask ``kv_pos <= q_pos`` (join-max semantics) and, when
+    ``window`` is set, the sliding window on stored positions.
+
+    q: (N, 1, NH, HD); k_slots/v_slots: (n_slots, NKV, HD) — one layer
+    of the pool; chain_idx: (N, S_max); returns (N, 1, NH*HD) float32.
+    This is also the reference tier ``benchmarks/kernel_bench.py`` times
+    the paged schedule against — keep it the shipped dense path.
+    """
+    s_max = chain_idx.shape[1]
+    valid = jnp.arange(s_max)[None, :] < chain_len[:, None]  # (N, S_max)
+    kv_pos = pool_pos[chain_idx]                             # (N, S_max)
+    vis = valid & (kv_pos <= q_pos[:, None])
+    if window:
+        diff = q_pos[:, None] - kv_pos
+        vis = vis & (diff >= 0) & (diff < window)
+    bias = jnp.where(vis, 0.0, NEG_INF)[:, None, None, None, :]
+    return _sdpa(q, k_slots[chain_idx], v_slots[chain_idx], bias, softcap)
+
+
 # ------------------------------------------------------------- prefill -----
-@partial(jax.jit, static_argnames=("cfg",))
+@partial(jax.jit, static_argnames=("cfg", "backend", "interpret"))
 def prefill_forward(params: dict, tokens: jnp.ndarray, pos: jnp.ndarray,
-                    cfg: ModelConfig, true_len: jnp.ndarray = None):
+                    cfg: ModelConfig, true_len: jnp.ndarray = None,
+                    *, backend: str = "dense", interpret: bool = True):
     """Linear (causal) prefill of (1, S) tokens (S may be padded to a
     bucket size — the engine buckets prompt lengths so one compilation
-    serves many prompts). Returns (logits at true_len-1 (V,),
-    kvs {k,v}: (L, S, nkv, hd) post-RoPE)."""
+    serves many prompts). ``backend="pallas"`` runs each layer's
+    attention through the chunked DAG flash kernel (linear topology)
+    instead of the dense masked SDPA. Returns (logits at true_len-1
+    (V,), kvs {k,v}: (L, S, nkv, hd) post-RoPE)."""
+    check_backend(cfg, backend)  # trace-time: softcap is dense-only
     b, s = tokens.shape
     if true_len is None:
         true_len = jnp.int32(s)
@@ -107,12 +171,23 @@ def prefill_forward(params: dict, tokens: jnp.ndarray, pos: jnp.ndarray,
         p, kind = layer["params"], layer["kind"]
         h = apply_norm(p["norm1"], x, cfg.norm_type, cfg.norm_eps)
         q, k, v = _proj_qkv(p["mixer"], h, cfg, pos)
-        lbias = bias
-        if kind == LOCAL_ATTN:
-            diff = pos[:, :, None] - pos[:, None, :]
-            win = (diff >= 0) & (diff < cfg.sliding_window)
-            lbias = bias + jnp.where(win, 0.0, NEG_INF)[:, None, None]
-        att = _sdpa(q, k, v, lbias, cfg).astype(x.dtype) @ p["mixer"]["wo"]
+        win = cfg.sliding_window if kind == LOCAL_ATTN else 0
+        if backend == "pallas":
+            # positions are the engine's adaptive positions: inside one
+            # linear prefill they are the packed order, so the kernel's
+            # causal mask matches the dense path and the window composes
+            # on positions exactly as below
+            att = causal_prefill_attention(
+                q, k, v, pos, window=win,
+                interpret=interpret).reshape(b, s, -1)
+        else:
+            lbias = bias
+            if kind == LOCAL_ATTN:
+                diff = pos[:, :, None] - pos[:, None, :]
+                winm = (diff >= 0) & (diff < win)
+                lbias = bias + jnp.where(winm, 0.0, NEG_INF)[:, None, None]
+            att = _sdpa(q, k, v, lbias, cfg.attn_logit_softcap)
+        att = att.astype(x.dtype) @ p["mixer"]["wo"]
         x = x + att
         h2 = apply_norm(p["norm2"], x, cfg.norm_type, cfg.norm_eps)
         if layer["moe"]:
@@ -147,7 +222,9 @@ def prefix_pool_write(pool_k, pool_v, pool_pos, ks, vs, slots, pos):
 
 
 # -------------------------------------------------------------- decode -----
-@partial(jax.jit, static_argnames=("cfg",), donate_argnums=(1, 2, 3))
+@partial(jax.jit,
+         static_argnames=("cfg", "backend", "page_size", "interpret"),
+         donate_argnums=(1, 2, 3))
 def paged_decode(params: dict,
                  pool_k: jnp.ndarray,     # (L, n_slots, nkv, hd)
                  pool_v: jnp.ndarray,
@@ -157,23 +234,41 @@ def paged_decode(params: dict,
                  write_slots: jnp.ndarray,  # (N,) flat pool slot per stream
                  chain_idx: jnp.ndarray,  # (N, S_max) flat slot chains
                  chain_len: jnp.ndarray,  # (N,) incl. the new token
-                 cfg: ModelConfig):
+                 cfg: ModelConfig, *,
+                 backend: str = "dense",
+                 page_table: jnp.ndarray = None,  # (N, P_max) chain pages
+                 page_valid: jnp.ndarray = None,  # (N, P_max) slots per page
+                 page_size: int = 0,
+                 interpret: bool = True):
     """One decode step for all active streams against their index chains.
 
     Visibility needs no DAG mask here: a chain *is* the stream's ancestor
     history by construction (Petri-net token semantics) — only the length
-    mask (and sliding window, from stored positions) applies.
+    mask, the adaptive-position mask ``kv_pos <= q_pos`` (join-max
+    semantics), and the sliding window on LOCAL_ATTN layers apply. One
+    transformer body serves both backends; only the per-layer attention
+    call dispatches on the static ``backend``:
+
+    * ``"dense"`` — gather each chain (``chain_idx``/``chain_len``) out
+      of the flat pool and run the masked SDPA
+      (:func:`decode_attention_dense`).
+    * ``"pallas"`` — the paged flash kernel. The ancestor set is
+      expressed as ``(page_table, page_valid)`` rows built host-side
+      from the chains (``IndexChain.page_runs``): the kernel
+      scalar-prefetches the table and streams exactly the chain's pages,
+      no gather materialization. Padding rows carry ``page_valid == 0``
+      (every page skipped).
+
+    Batch padding rows carry an out-of-range write slot (the ``n_slots``
+    sentinel) and must not scatter into the pool (``mode="drop"``).
     """
-    n, s_max = chain_idx.shape
+    check_backend(cfg, backend)  # trace-time: softcap is dense-only
+    n = token_ids.shape[0]
     x = embed_tokens(params["embed"], token_ids)[:, None, :]
     if cfg.pos_embedding == "learned":
         from ..models.layers import learned_pos
         x = x + learned_pos(params["pos"], q_pos)[:, None, :]
-    # padding rows carry an out-of-range write slot (n_slots sentinel)
-    # and must not scatter into the pool
     pool_pos = pool_pos.at[write_slots].set(q_pos, mode="drop")
-    valid = jnp.arange(s_max)[None, :] < chain_len[:, None]   # (N, S_max)
-    kv_pos = pool_pos[chain_idx]                              # (N, S_max)
     for li, layer in enumerate(flatten_params(params, cfg)):
         p, kind = layer["params"], layer["kind"]
         h = apply_norm(p["norm1"], x, cfg.norm_type, cfg.norm_eps)
@@ -182,15 +277,18 @@ def paged_decode(params: dict,
             k_t[:, 0].astype(pool_k.dtype), mode="drop")
         pool_v = pool_v.at[li, write_slots].set(
             v_t[:, 0].astype(pool_v.dtype), mode="drop")
-        k = pool_k[li][chain_idx]                             # (N,S,nkv,hd)
-        v = pool_v[li][chain_idx]
-        vis = valid & (kv_pos <= q_pos[:, None])
-        if kind == LOCAL_ATTN:
-            diff = q_pos[:, None] - kv_pos
-            vis = vis & (diff >= 0) & (diff < cfg.sliding_window)
-        bias = jnp.where(vis, 0.0, NEG_INF)[:, None, None, None, :]
-        att = _sdpa(q, k, v, bias, cfg).astype(x.dtype) @ p["mixer"]["wo"]
-        x = x + att
+        win = cfg.sliding_window if kind == LOCAL_ATTN else 0
+        if backend == "pallas":
+            att = paged_decode_attention_flat(
+                q[:, 0], pool_k[li], pool_v[li], pool_pos,
+                page_table, page_valid, q_pos,
+                page_size=page_size, window=win,
+                interpret=interpret).reshape(n, 1, -1)
+        else:
+            att = decode_attention_dense(
+                q, pool_k[li], pool_v[li], pool_pos, chain_idx, chain_len,
+                q_pos, window=win, softcap=cfg.attn_logit_softcap)
+        x = x + att.astype(x.dtype) @ p["mixer"]["wo"]
         h2 = apply_norm(p["norm2"], x, cfg.norm_type, cfg.norm_eps)
         if layer["moe"]:
             y, _ = moe_ffn(p["ffn"], h2, cfg)

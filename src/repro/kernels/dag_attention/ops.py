@@ -62,3 +62,29 @@ def dag_attention(
     if pad:
         out = out[:, :s]
     return out
+
+
+@partial(jax.jit, static_argnames=("window", "interpret"))
+def causal_prefill_attention(
+    q: jnp.ndarray,        # (B, S, NH, HD) — model layout
+    k: jnp.ndarray,        # (B, S, NKV, HD)
+    v: jnp.ndarray,
+    pos: jnp.ndarray,      # (B, S) adaptive positions (engine prefill)
+    *,
+    window: int = 0,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Linear (causal) prefill through the DAG flash kernel.
+
+    The engine's Phase-I prefill is a single linear segment, i.e. the
+    degenerate DAG topology: one segment, one frontier layer. Eq. 3 then
+    reduces to plain causal masking (plus the optional sliding window on
+    the *adaptive* positions), so the same chunked flash kernel serves
+    both the engine prefill hot path and full DAG-masked training.
+    Returns (B, S, NH, HD).
+    """
+    b, s = q.shape[:2]
+    seg = jnp.zeros((b, s), jnp.int32)
+    lay = jnp.zeros((b, s), jnp.int32)
+    return dag_attention(q, k, v, seg, lay, pos.astype(jnp.int32),
+                         window=window, interpret=interpret)

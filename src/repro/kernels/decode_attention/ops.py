@@ -1,4 +1,16 @@
-"""Jitted wrapper for paged decode attention."""
+"""Jitted wrappers for paged decode attention.
+
+Two entry points:
+
+* :func:`paged_decode_attention` — kernel-native paged layout
+  ``(n_pages, page_size, NKV, HD)``.
+* :func:`paged_decode_attention_flat` — engine-native layout: one layer
+  of the engine's flat slot pool ``(n_slots, NKV, HD)`` plus the shared
+  ``pool_pos`` vector. The flat pool is reinterpreted as pages with a
+  free reshape (``n_slots = n_pages * page_size`` by construction), so
+  the engine's index chains drive the kernel without any gather or
+  copy — the page table rows are built host-side from the chains.
+"""
 
 from __future__ import annotations
 
@@ -8,6 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from .kernel import paged_decode_attention_kernel
+from .ref import paged_decode_attention_ref
 
 
 @partial(jax.jit, static_argnames=("window", "interpret"))
@@ -30,3 +43,65 @@ def paged_decode_attention(
         qg, k_pool, v_pool, pool_pos, page_table, page_valid, q_pos,
         window=window, interpret=interpret)
     return out.reshape(b, nh, hd)
+
+
+@partial(jax.jit, static_argnames=("window",))
+def paged_decode_attention_xla(
+    q: jnp.ndarray,           # (B, NH, HD) model layout
+    k_pool: jnp.ndarray,      # (n_pages, page_size, NKV, HD)
+    v_pool: jnp.ndarray,
+    pool_pos: jnp.ndarray,    # (n_pages, page_size)
+    page_table: jnp.ndarray,  # (B, P_max)
+    page_valid: jnp.ndarray,  # (B, P_max)
+    q_pos: jnp.ndarray,       # (B,)
+    *, window: int = 0,
+) -> jnp.ndarray:
+    """Pure-XLA execution of the paged-attention schedule (no Pallas).
+
+    Same contract and same math as the Mosaic kernel: gather whole
+    *pages* via the page table (contiguous block reads — this is the
+    schedule's memory-access advantage over a per-token slot gather,
+    and it is measurable even on CPU), then masked softmax over the
+    per-page valid prefixes. This is the portable fallback tier for
+    backends without Mosaic, and what ``benchmarks/kernel_bench.py``
+    times on CPU, where ``interpret=True`` is a correctness emulation
+    with no performance meaning. Returns (B, NH, HD) in float32.
+    """
+    b, nh, hd = q.shape
+    nkv = k_pool.shape[2]
+    out = paged_decode_attention_ref(
+        q.reshape(b, nkv, nh // nkv, hd), k_pool, v_pool, pool_pos,
+        page_table, page_valid, q_pos, window=window)
+    return out.reshape(b, nh, hd)
+
+
+@partial(jax.jit, static_argnames=("page_size", "window", "interpret"))
+def paged_decode_attention_flat(
+    q: jnp.ndarray,           # (B, NH, HD) model layout
+    k_slots: jnp.ndarray,     # (n_slots, NKV, HD) one layer of the pool
+    v_slots: jnp.ndarray,
+    pool_pos: jnp.ndarray,    # (n_slots,)
+    page_table: jnp.ndarray,  # (B, P_max) page ids per stream chain
+    page_valid: jnp.ndarray,  # (B, P_max) referenced slots per page
+    q_pos: jnp.ndarray,       # (B,)
+    *, page_size: int, window: int = 0, interpret: bool = True,
+) -> jnp.ndarray:
+    """Paged decode attention over the engine's flat slot pool.
+
+    ``k_slots``/``v_slots`` are one layer of the engine pool (flat slot
+    axis); the reshape to ``(n_pages, page_size, ...)`` is metadata-only.
+    ``page_table[b]`` lists the pages of stream b's index chain in
+    first-appearance order and ``page_valid[b]`` how many leading slots
+    of each page the chain references (engine chains always reference a
+    contiguous slot prefix of every page they touch — pages are
+    single-writer and append-only). Returns (B, NH, HD).
+    """
+    n_slots = k_slots.shape[0]
+    assert n_slots % page_size == 0, (n_slots, page_size)
+    n_pages = n_slots // page_size
+    kp = k_slots.reshape(n_pages, page_size, *k_slots.shape[1:])
+    vp = v_slots.reshape(n_pages, page_size, *v_slots.shape[1:])
+    pp = pool_pos.reshape(n_pages, page_size)
+    return paged_decode_attention(
+        q, kp, vp, pp, page_table, page_valid, q_pos,
+        window=window, interpret=interpret)

@@ -7,6 +7,9 @@ KV cache under the production sharding, for any assigned architecture
 only): DAG-scheduled decode with chain bucketing and the radix prompt
 cache, optionally ``--async-frontier`` for per-transition marking
 advance. ``--no-radix`` disables cross-request prefix reuse.
+``--attention-backend dense|pallas`` selects the attention hot path
+(dense gather+SDPA vs the Pallas paged-decode / DAG-prefill kernels);
+``--compiled-kernels`` disables interpret mode on real TPUs.
 ``--plan-file`` / ``--prompts-file`` replace the built-in toy plan and
 prompts (the tokenizer trains on whatever corpus is served).
 ``--continuous`` serves the workload through the continuous-batching
@@ -76,10 +79,16 @@ def run_engine(args) -> None:
         max_chain_len=512, max_step_tokens=8, max_conclusion_tokens=8,
         async_frontier=args.async_frontier,
         radix_cache=not args.no_radix, plan_override=plan)
+    if args.attention_backend:
+        ecfg.attention_backend = args.attention_backend
+    ecfg.kernel_interpret = not args.compiled_kernels
     eng = MedVerseEngine(params, cfg, tok, ecfg)
     buckets = eng.warmup()
     print(f"arch={cfg.name} engine async_frontier={ecfg.async_frontier} "
-          f"radix={ecfg.radix_cache} warmed buckets={buckets}")
+          f"radix={ecfg.radix_cache} "
+          f"attention={ecfg.attention_backend}"
+          f"{'' if ecfg.kernel_interpret else ' (compiled)'} "
+          f"warmed buckets={buckets}")
     if args.continuous:
         _run_continuous(args, eng, prompts, plan)
         return
@@ -128,6 +137,14 @@ def main():
                     help="engine mode: per-transition marking advance")
     ap.add_argument("--no-radix", action="store_true",
                     help="engine mode: disable radix prompt cache")
+    ap.add_argument("--attention-backend", default=None,
+                    choices=["dense", "pallas"],
+                    help="engine mode: attention hot path — dense "
+                         "gather+SDPA or the Pallas paged/DAG kernels "
+                         "(default: $ENGINE_ATTENTION_BACKEND or dense)")
+    ap.add_argument("--compiled-kernels", action="store_true",
+                    help="engine mode: run Pallas kernels compiled "
+                         "(Mosaic, real TPU) instead of interpret mode")
     ap.add_argument("--continuous", action="store_true",
                     help="engine mode: open-system continuous batching "
                          "with Poisson arrivals (vs one closed batch)")

@@ -1,0 +1,234 @@
+"""Dense-vs-Pallas attention-backend parity.
+
+The engine's ``attention_backend`` switch must not change observable
+behaviour: temperature-0 generated text is identical across backends on
+every DAG shape (wide fan-out, deep chain, diamond join, serial), with
+local-attention windows, GQA head layouts (the test config has
+``n_kv_heads < n_heads``), and radix-cache prefill hits. Logit-level
+agreement is atol-bounded (flash renormalization reorders the float32
+reduction — documented in ``paged_model``), and the pallas backend must
+release pages exactly like the dense one.
+
+Also pins the structural invariant the pallas decode path relies on:
+every page an index chain references is referenced on a contiguous slot
+prefix (``IndexChain.page_runs``), across fork, dedup-join, and radix
+adoption.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data.tokenizer import Tokenizer
+from repro.engine import (EngineConfig, IndexChain, MedVerseEngine,
+                          PageAllocator, PoolConfig, check_backend,
+                          prefill_forward)
+from repro.models import init_params
+from repro.models.config import ATTN, LOCAL_ATTN, ModelConfig
+
+CFG = get_config("medverse-7b", smoke=True)   # GQA: n_kv_heads < n_heads
+
+WIDE = ("<Plan> "
+        "<Outline> Transient Step 1: alpha ; Dependency: [] </Outline> "
+        "<Outline> Transient Step 2: beta ; Dependency: [] </Outline> "
+        "<Outline> Transient Step 3: gamma ; Dependency: [] </Outline> "
+        "<Outline> Transient Step 4: delta ; Dependency: [] </Outline> "
+        "</Plan>")
+DEEP = ("<Plan> "
+        "<Outline> Transient Step 1: alpha ; Dependency: [] </Outline> "
+        "<Outline> Transient Step 2: beta ; Dependency: [1] </Outline> "
+        "<Outline> Transient Step 3: gamma ; Dependency: [2] </Outline> "
+        "</Plan>")
+DIAMOND = ("<Plan> "
+           "<Outline> Transient Step 1: q -> A ; Dependency: [] </Outline> "
+           "<Outline> Transient Step 2: q -> B ; Dependency: [] </Outline> "
+           "<Outline> Transient Step 3: A , B -> C ; Dependency: [1, 2] "
+           "</Outline> </Plan>")
+SERIAL = ("<Plan> "
+          "<Outline> Transient Step 1: alpha ; Dependency: [] </Outline> "
+          "</Plan>")
+
+PLANS = {"wide": WIDE, "deep": DEEP, "diamond": DIAMOND, "serial": SERIAL}
+
+
+def make_tok():
+    corpus = ["alpha beta gamma delta epsilon zeta eta theta iota kappa "
+              "Transient Step 1: 2: 3: 4: Dependency: [] [1] [2] [1, 2] "
+              "A -> B ; C D q x y z"]
+    return Tokenizer.train(corpus)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    tok = make_tok()
+    params = init_params(jax.random.PRNGKey(0), CFG)
+    return tok, params
+
+
+def make_engine(params, tok, backend, cfg=CFG, **kw):
+    base = dict(max_slots=4, page_size=4, n_pages=512, max_chain_len=256,
+                max_step_tokens=6, max_conclusion_tokens=6,
+                attention_backend=backend)
+    base.update(kw)
+    return MedVerseEngine(params, cfg, tok, EngineConfig(**base))
+
+
+# ------------------------------------------------------ engine parity ------
+@pytest.mark.parametrize("shape", sorted(PLANS))
+def test_backend_parity_across_dag_shapes(setup, shape):
+    """Temp-0 text (plan, every step, conclusion) is identical between
+    backends on each DAG topology, and the pallas backend leaks no
+    pages."""
+    tok, params = setup
+    plan = PLANS[shape]
+    e_dense = make_engine(params, tok, "dense", plan_override=plan)
+    e_pallas = make_engine(params, tok, "pallas", plan_override=plan)
+    used0 = e_pallas.alloc.used
+    rd = e_dense.generate(["q alpha beta"])[0]
+    rp = e_pallas.generate(["q alpha beta"])[0]
+    assert rd.text == rp.text
+    assert rd.step_texts == rp.step_texts
+    assert rd.conclusion == rp.conclusion
+    # no page leak under the pallas decode path; pinned radix pages are
+    # cache, fully accounted
+    assert e_pallas.alloc.used == used0
+    assert (e_pallas.alloc.pages_in_use
+            == e_pallas.alloc.used + e_pallas.alloc.pinned_pages)
+    assert e_pallas.page_bucket_hist  # the kernel path actually ran
+
+
+@pytest.mark.parametrize("async_frontier", [False, True])
+def test_backend_parity_scheduler_modes(setup, async_frontier):
+    """Backends agree under both sync and async-frontier scheduling."""
+    tok, params = setup
+    kw = dict(plan_override=DIAMOND, async_frontier=async_frontier)
+    rd = make_engine(params, tok, "dense", **kw).generate(["q alpha"])[0]
+    rp = make_engine(params, tok, "pallas", **kw).generate(["q alpha"])[0]
+    assert rd.text == rp.text
+
+
+def test_backend_parity_radix_hit(setup):
+    """A radix-cached re-prefill (chain adopts cached pool slots, prefill
+    recomputes only the tail) yields the same text under pallas."""
+    tok, params = setup
+    prompt = "q alpha beta gamma delta epsilon zeta eta theta"
+    e_pallas = make_engine(params, tok, "pallas", plan_override=DIAMOND)
+    cold = e_pallas.generate([prompt])[0]
+    assert e_pallas.radix.misses >= 1
+    warm = e_pallas.generate([prompt])[0]
+    assert e_pallas.radix.hits >= 1
+    assert warm.text == cold.text
+    e_dense = make_engine(params, tok, "dense", plan_override=DIAMOND)
+    assert e_dense.generate([prompt])[0].text == warm.text
+
+
+def test_backend_parity_preemption(setup):
+    """Preemption + re-prefill under page pressure is backend-agnostic:
+    both backends finish every request with identical text."""
+    tok, params = setup
+    prompts = ["q alpha beta", "q beta gamma", "q gamma delta"]
+    kw = dict(plan_override=DIAMOND, n_pages=56, radix_cache=False)
+    e_dense = make_engine(params, tok, "dense", **kw)
+    e_pallas = make_engine(params, tok, "pallas", **kw)
+    rd = e_dense.generate(prompts)
+    rp = e_pallas.generate(prompts)
+    assert [r.text for r in rd] == [r.text for r in rp]
+    assert e_pallas.alloc.used == 0
+
+
+def test_local_attention_window_parity(setup):
+    """LOCAL_ATTN layers (sliding window on adaptive positions) agree
+    across backends through prefill and paged decode."""
+    tok, _ = setup
+    cfg = ModelConfig(
+        name="local-mix", arch_type="dense",
+        vocab_size=CFG.vocab_size, d_model=64, n_layers=2,
+        n_heads=4, n_kv_heads=2, d_ff=128, head_dim=16,
+        pattern_unit=(ATTN, LOCAL_ATTN), sliding_window=8,
+        dtype="float32", scan_layers=False, remat=False, max_seq_len=512)
+    params = init_params(jax.random.PRNGKey(1), cfg)
+    kw = dict(plan_override=DIAMOND)
+    rd = make_engine(params, tok, "dense", cfg=cfg, **kw).generate(["q a"])[0]
+    rp = make_engine(params, tok, "pallas", cfg=cfg, **kw).generate(["q a"])[0]
+    assert rd.text == rp.text
+
+
+# ------------------------------------------------------ logit parity -------
+def test_prefill_logits_atol(setup):
+    """Prefill logits agree to float32-rounding atol between the dense
+    SDPA and the chunked DAG flash kernel (GQA layout)."""
+    tok, params = setup
+    ids = tok.encode("q alpha beta gamma delta", bos=True)
+    n = len(ids)
+    ids_p = np.zeros((64,), np.int32)
+    ids_p[:n] = ids
+    pos = np.arange(64, dtype=np.int32)
+    outs = {}
+    for backend in ("dense", "pallas"):
+        logits, ks, vs = prefill_forward(
+            params, jnp.asarray(ids_p)[None], jnp.asarray(pos)[None],
+            CFG, jnp.int32(n), backend=backend, interpret=True)
+        outs[backend] = (np.asarray(logits), np.asarray(ks), np.asarray(vs))
+    np.testing.assert_allclose(outs["dense"][0], outs["pallas"][0],
+                               rtol=2e-4, atol=2e-4)
+    # K/V written to the pool must match as tightly: decode consumes them
+    np.testing.assert_allclose(outs["dense"][1], outs["pallas"][1],
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_check_backend_rejects():
+    with pytest.raises(ValueError):
+        check_backend(CFG, "cuda")
+    import dataclasses as dc
+    capped = dc.replace(CFG, attn_logit_softcap=30.0)
+    with pytest.raises(NotImplementedError):
+        check_backend(capped, "pallas")
+    check_backend(capped, "dense")  # dense supports the softcap
+
+
+# ------------------------------------------- page-prefix invariant ---------
+def _assert_prefix_runs(chain: IndexChain):
+    ps = chain.alloc.pc.page_size
+    pages, valid = chain.page_runs()
+    assert int(valid.sum()) == chain.length
+    idx = chain.idx[: chain.length]
+    for pg, cnt in zip(pages, valid):
+        slots = sorted(int(s) for s in idx[idx // ps == pg])
+        assert slots == list(range(pg * ps, pg * ps + cnt)), (
+            f"page {pg}: chain references {slots}, not a prefix of "
+            f"length {cnt}")
+
+
+def test_page_runs_prefix_invariant_fork_join_adopt():
+    """The pallas decode path attends to the leading ``valid`` slots of
+    each table page; that equals the chain's slot set only because every
+    referenced page is a contiguous prefix. Exercise all chain
+    constructors."""
+    pc = PoolConfig(n_layers=1, n_pages=64, page_size=4, n_kv_heads=1,
+                    head_dim=8)
+    alloc = PageAllocator(pc)
+    ctx = IndexChain.fresh(alloc)
+    ctx.reserve(6)                       # 1.5 pages
+    _assert_prefix_runs(ctx)
+    a = ctx.fork(); a.reserve(3)
+    b = ctx.fork(); b.reserve(5)
+    _assert_prefix_runs(a)
+    _assert_prefix_runs(b)
+    merged = MedVerseEngine._dedup_join(None, [a, b])
+    _assert_prefix_runs(merged)
+    # radix-style adoption of a partial prefix, then fresh appends
+    c = IndexChain.fresh(alloc)
+    c.adopt(ctx.idx[:5])
+    c.reserve(2)
+    _assert_prefix_runs(c)
+    # joined chain keeps appending into its own fresh page
+    merged.reserve(3)
+    _assert_prefix_runs(merged)
+    # rollback keeps the prefix property
+    merged.pop_slot()
+    _assert_prefix_runs(merged)
+    for ch in (ctx, a, b, c, merged):
+        ch.release()
+    assert alloc.pages_in_use == 0
