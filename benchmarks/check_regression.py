@@ -83,6 +83,21 @@ SPECS = {
         # absorbs token-level drift across jax/BLAS versions only.
         Metric("runs.fcfs.n_steps", False, 0.10),
     ],
+    "BENCH_spec.json": [
+        # all step/count metrics: deterministic on a given commit (the
+        # bench runs temp-0, one request at a time, no wall clock in
+        # any gated number); slack absorbs token-level drift across
+        # jax/BLAS versions only
+        Metric("runs.off.decode_iters", False, 0.10),
+        Metric("runs.ngram.decode_iters", False, 0.15),
+        Metric("runs.radix.decode_iters", False, 0.15),
+        # acceptance floors: the bench asserts strict iteration wins
+        # in-process; these gate drafter *quality* (ngram ~0.89 at the
+        # committed baseline — 10% slack keeps the ISSUE's 0.82 floor;
+        # radix replays the cache, 1.00 by construction)
+        Metric("runs.ngram.acceptance", True, 0.10),
+        Metric("runs.radix.acceptance", True, 0.02),
+    ],
 }
 
 # file -> dotted paths that must be *equal* between baseline and
@@ -93,6 +108,8 @@ GUARDS = {
     "BENCH_kernel.json": ["config.smoke", "paged_decode.shape"],
     "BENCH_serving.json": ["config.n_requests", "config.rate",
                            "config.clock", "config.max_slots"],
+    "BENCH_spec.json": ["config.n_requests", "config.n_unique",
+                        "config.draft_len", "config.max_slots"],
 }
 
 
@@ -116,6 +133,7 @@ def _lookup(doc: dict, path: str) -> float:
 EXPECTED = {
     "BENCH_kernel.json": {"config.smoke": True},
     "BENCH_serving.json": {"config.clock": "step"},
+    "BENCH_spec.json": {"config.smoke": True},
 }
 
 

@@ -38,6 +38,7 @@ def main() -> None:
         kernel_bench,
         roofline,
         serving_bench,
+        spec_bench,
         table2_cost_decomp,
         table3_topology,
         table4_reliability,
@@ -55,6 +56,7 @@ def main() -> None:
             "fig4b_throughput": lambda a: fig4b_throughput.run(
                 a, lengths=(32,)),
             "serving_bench": lambda a: serving_bench.run(a, smoke=True),
+            "spec_bench": lambda a: spec_bench.run(a, smoke=True),
         }
         failures = 0
         for name, fn in benches.items():
@@ -77,6 +79,9 @@ def main() -> None:
             a, lengths=(64, 128) if args.fast else (64, 128, 256, 512)),
         "serving_bench": lambda a: serving_bench.run(
             a, n_requests=8 if args.fast else 16),
+        "spec_bench": lambda a: spec_bench.run(
+            a, n_unique=2 if args.fast else 4,
+            n_repeats=3 if args.fast else 4),
         "table1_accuracy": lambda a: table1_accuracy.run(a, n=12 if args.fast else 24),
         "table2_cost_decomp": lambda a: table2_cost_decomp.run(a, n=4 if args.fast else 8),
         "table3_topology": lambda a: table3_topology.run(a, n_per_class=2 if args.fast else 4),

@@ -1,0 +1,135 @@
+"""Speculative-decoding benchmark: decode iterations + acceptance.
+
+Serves a repeated-request workload (the regime both drafters target:
+medical triage traffic re-asks near-identical questions) three times
+through the paged engine — speculation off, ngram drafter, radix
+drafter — one request at a time at temperature 0, and measures the
+*deterministic* outcomes: decode iterations to drain the workload,
+draft acceptance rate, committed tokens per step. Wall time is never
+recorded; every gated number is a step/count metric, reproducible
+across machines on a given commit.
+
+Asserts the correctness contract in-bench: output text is bit-identical
+across all three runs, both drafters finish in strictly fewer decode
+iterations than the baseline, and the page allocator returns to its
+pre-workload level. Writes ``results/BENCH_spec.json`` (committed
+baseline under ``benchmarks/baselines/``, gated by
+``check_regression.py``).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+if __package__ in (None, ""):  # direct script execution
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    __package__ = "benchmarks"
+
+from .common import default_engine_cfg, emit, eval_prompts, get_artifacts
+from repro.engine import MedVerseEngine
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+DRAFT_LEN = 4
+
+
+def _workload(art, n_unique: int, n_repeats: int):
+    """(prompt, plan) pairs: ``n_unique`` distinct eval questions with
+    teacher-forced plans, each repeated ``n_repeats`` times
+    back-to-back — repeats are where lookup drafters earn their keep."""
+    base = [(p, plan) for p, _, plan, _ in eval_prompts(art.corpus,
+                                                        n=n_unique)]
+    return [pair for pair in base for _ in range(n_repeats)]
+
+
+def _run_engine(art, workload, ecfg):
+    """Drain the workload one request at a time; return per-run stats
+    and the concatenated output texts (the parity witness)."""
+    eng = MedVerseEngine(art.params_mask, art.cfg, art.corpus.tokenizer,
+                         ecfg)
+    eng.warmup()
+    used0 = eng.alloc.used
+    texts = []
+    for prompt, plan in workload:
+        res = eng.generate([prompt], plans=[plan])[0]
+        texts.append(res.text)
+    assert eng.alloc.used == used0, (
+        f"leaked pages: used {eng.alloc.used} vs {used0} pre-workload")
+    s = eng.spec_stats
+    tokens = sum(len(t.split()) for t in texts)  # proxy; iters is the gate
+    return {
+        "decode_iters": eng.total_iters,
+        "tokens": s["tokens"] if s["steps"] else tokens,
+        "proposed": s["proposed"],
+        "accepted": s["accepted"],
+        "acceptance": (s["accepted"] / s["proposed"]
+                       if s["proposed"] else None),
+        "forced_batched": s["forced_batched"],
+        "tokens_per_step": (s["tokens"] / s["steps"]
+                            if s["steps"] else None),
+    }, texts
+
+
+def run(art=None, n_unique: int = 4, n_repeats: int = 4,
+        smoke: bool = False):
+    if smoke:
+        n_unique, n_repeats = 2, 4
+        art = art or get_artifacts(n_items=60, epochs=1, tag="smoke")
+    art = art or get_artifacts()
+    workload = _workload(art, n_unique, n_repeats)
+
+    def ecfg(**kw):
+        return default_engine_cfg(
+            max_slots=8, n_pages=4096, max_step_tokens=8,
+            max_conclusion_tokens=8, draft_len=DRAFT_LEN, **kw)
+
+    runs = {}
+    base_stats, base_texts = _run_engine(art, workload, ecfg())
+    runs["off"] = {"decode_iters": base_stats["decode_iters"]}
+    emit("spec_off", 0.0, f"iters={base_stats['decode_iters']}")
+    for name in ("ngram", "radix"):
+        stats, texts = _run_engine(
+            art, workload, ecfg(speculative=True, drafter=name))
+        assert texts == base_texts, (
+            f"{name}: speculative output diverged from baseline")
+        assert stats["decode_iters"] < base_stats["decode_iters"], (
+            f"{name}: {stats['decode_iters']} iters, no better than "
+            f"baseline {base_stats['decode_iters']}")
+        stats["iters_saved"] = (base_stats["decode_iters"]
+                                - stats["decode_iters"])
+        runs[name] = stats
+        emit(f"spec_{name}", 0.0,
+             f"iters={stats['decode_iters']};"
+             f"saved={stats['iters_saved']};"
+             f"acceptance={stats['acceptance']:.2f};"
+             f"tok_step={stats['tokens_per_step']:.2f}")
+        print(f"# {name}: {stats['decode_iters']} iters "
+              f"(off={base_stats['decode_iters']}), accepted "
+              f"{stats['accepted']}/{stats['proposed']} drafts "
+              f"({stats['acceptance']:.0%}), "
+              f"{stats['tokens_per_step']:.2f} tok/step")
+
+    os.makedirs(RESULTS, exist_ok=True)
+    out = {"config": {"smoke": smoke, "n_unique": n_unique,
+                      "n_repeats": n_repeats,
+                      "n_requests": len(workload),
+                      "draft_len": DRAFT_LEN, "max_slots": 8},
+           "runs": runs}
+    path = os.path.join(RESULTS, "BENCH_spec.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"# wrote {os.path.relpath(path)}")
+    return runs
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--unique", type=int, default=4)
+    ap.add_argument("--repeats", type=int, default=4)
+    args = ap.parse_args()
+    run(n_unique=args.unique, n_repeats=args.repeats, smoke=args.smoke)

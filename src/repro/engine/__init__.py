@@ -7,6 +7,7 @@ from .paged_model import (ATTENTION_BACKENDS, check_backend,
                           prefill_forward, prefix_pool_write, supports_paged)
 from .radix import RadixTree
 from .sampling import SamplingParams, sample_token
+from .spec import DRAFTERS, Drafter, NgramDrafter, RadixDrafter, make_drafter
 
 __all__ = [
     "EngineConfig",
@@ -29,4 +30,9 @@ __all__ = [
     "prefill_forward",
     "supports_paged",
     "RadixTree",
+    "DRAFTERS",
+    "Drafter",
+    "NgramDrafter",
+    "RadixDrafter",
+    "make_drafter",
 ]

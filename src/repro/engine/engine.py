@@ -66,6 +66,13 @@ Scheduler modes
   radix tree before allocating (cache hits adopt existing pool slots) and
   inserts the prompt afterwards; cached pages are pinned in the
   allocator (``PageAllocator.pin``) and evicted LRU under page pressure.
+* ``speculative=True``: per-chain speculative decoding (see ``spec.py``
+  and ``docs/ARCHITECTURE.md``). Each live stream may feed a *block* of
+  rows into the batched decode — queued forced tokens plus drafter
+  proposals — verified in the same ``paged_decode`` call and committed
+  as the longest argmax-accepted prefix, with rejected slots rolled
+  back. Temperature-0 output text is bit-identical on or off; only the
+  decode-iteration count changes.
 * chain bucketing: every decode step pads chains to the smallest
   power-of-two bucket (>= ``min_chain_bucket``, capped at
   ``max_chain_len``) covering the batch, instead of always paying
@@ -101,6 +108,7 @@ from .paged_model import (check_backend, paged_decode, prefill_forward,
                           prefix_pool_write, supports_paged)
 from .radix import RadixTree
 from .sampling import SamplingParams, sample_token
+from .spec import Drafter, make_drafter
 
 
 @dataclasses.dataclass
@@ -136,6 +144,17 @@ class EngineConfig:
     # safety valve: a request evicted this many times is genuinely too
     # large for the pool — step() raises instead of thrashing
     max_preemptions: int = 16
+    # Speculative decoding (see spec.py and docs/ARCHITECTURE.md):
+    # every live stream may feed up to 1 + draft_len tokens per step —
+    # queued forced tokens (teacher-forced plans, step headers) batched
+    # unconditionally, then drafter proposals verified against the
+    # argmax of the same batched decode call. Draft rows only occupy
+    # batch rows the step would otherwise pad, so the compiled shapes
+    # (max_slots rows, the chain-bucket ladder) are reused as-is.
+    # Temperature-0 output text is bit-identical with this on or off.
+    speculative: bool = False
+    drafter: str = "ngram"         # "ngram" | "radix" (spec.DRAFTERS)
+    draft_len: int = 4             # max draft rows per stream per step
     # Teacher-forced plan injection: skip LLM planning and force this
     # plan text (deterministic execution; also the Table-5 "Direct Petri
     # Net" ablation hook and the debugging surface).
@@ -161,10 +180,12 @@ class StepEvent:
     """One observable outcome of an engine ``step()``.
 
     ``token``: a stream of request ``rid`` consumed one token (``forced``
-    marks teacher-forced / header tokens). ``done``: the request
-    finished; ``result`` carries its :class:`GenResult` and its pages are
-    already released. ``preempted``: the request was evicted under page
-    pressure and must be re-queued for re-prefill by the caller.
+    marks teacher-forced / header tokens; ``drafted`` marks tokens
+    committed from an accepted speculative draft — one step may emit
+    several per stream). ``done``: the request finished; ``result``
+    carries its :class:`GenResult` and its pages are already released.
+    ``preempted``: the request was evicted under page pressure and must
+    be re-queued for re-prefill by the caller.
     """
 
     kind: str                 # "token" | "done" | "preempted"
@@ -173,17 +194,18 @@ class StepEvent:
     purpose: str = ""         # "plan" | "step" | "conclusion" | "serial"
     tid: int = -1             # DAG transition id for step streams
     forced: bool = False
+    drafted: bool = False
     result: Optional[GenResult] = None
 
 
 class _Stream:
     __slots__ = ("chain", "q_pos", "forced", "next_input", "generated",
                  "purpose", "stop_id", "max_new", "done", "finish_after",
-                 "n_generated", "rid", "tid")
+                 "n_generated", "rid", "tid", "history", "seq_ok")
 
     def __init__(self, chain: IndexChain, q_pos: int, purpose: str,
                  rid: int, tid: int = -1, stop_id: int = EOS,
-                 max_new: int = 64):
+                 max_new: int = 64, history: Optional[List[int]] = None):
         self.chain = chain
         self.q_pos = q_pos
         self.forced: deque = deque()
@@ -197,6 +219,16 @@ class _Stream:
         self.done = False
         self.finish_after = False
         self.n_generated = 0
+        # Speculation context: the committed tokens *behind* this
+        # stream's chain (prompt / linear ancestor history), when the
+        # ancestry is a single linear sequence; None for dedup joins.
+        # ``history + generated`` is then the full token view of the
+        # chain — the drafter lookup context, and (when ``seq_ok``) a
+        # radix-insertable sequence.
+        self.history = history
+        # positions are gap-free iff the stream starts appending exactly
+        # where the chain's content ends (join-max can skip positions)
+        self.seq_ok = (q_pos == chain.length)
 
 
 class _Request:
@@ -221,6 +253,11 @@ class _Request:
         self.ctx_end = 0
         self.max_end = 0
         self.step_results: Dict[int, Tuple[str, IndexChain, int]] = {}
+        # token-level views used by speculation: the linear context
+        # tokens (prompt + plan) and, per fired transition, the full
+        # linear token history of its stream (None for join ancestry)
+        self.ctx_tokens: Optional[List[int]] = None
+        self.step_tokens: Dict[int, Optional[List[int]]] = {}
         self.pending_frontier: List[int] = []
         self.plan_text = ""
         self.conclusion_text = ""
@@ -257,6 +294,21 @@ class MedVerseEngine:
                                on_unpin=self.alloc.unpin)
         # under page pressure, reclaim radix-pinned cache pages (LRU)
         self.alloc.reclaim_cb = self.radix.evict_one
+        # speculative decoding: one drafter shared by every stream; the
+        # radix drafter reads (and populates, via generation caching)
+        # the same radix tree the prefill cache uses
+        self._drafter: Optional[Drafter] = None
+        if self.ecfg.speculative:
+            self._drafter = make_drafter(self.ecfg.drafter, self.radix)
+            if self._drafter.wants_generation_cache and not self.ecfg.radix_cache:
+                raise ValueError(
+                    "drafter='radix' requires radix_cache=True (the radix "
+                    "tree is its draft source)")
+        # lifetime speculation counters: draft rows proposed/accepted,
+        # extra forced rows batched, committed tokens, decode steps
+        self.spec_stats: Dict[str, int] = {
+            "proposed": 0, "accepted": 0, "forced_batched": 0,
+            "tokens": 0, "steps": 0}
         self.last_iters = 0                  # decode iterations, last generate()
         self.total_iters = 0                 # decode iterations, lifetime
         self.preemptions = 0                 # page-pressure evictions, lifetime
@@ -322,7 +374,8 @@ class MedVerseEngine:
             self.radix.release(path)
         st = _Stream(chain, q_pos=n, purpose="plan", rid=req.rid,
                      stop_id=self.id_plan_end,
-                     max_new=self.ecfg.max_plan_tokens)
+                     max_new=self.ecfg.max_plan_tokens,
+                     history=list(ids))
         if req.plan_spec is not None:
             forced = self.tok.encode(req.plan_spec)
             st.forced.extend(forced)
@@ -347,9 +400,14 @@ class MedVerseEngine:
 
     def _spawn_transition(self, req: _Request, t, start_pos: int) -> _Stream:
         tf = time.monotonic()
+        history: Optional[List[int]] = None
         if len(t.pre) == 1:
-            src = (req.ctx_chain if t.pre[0] == req.sched.net.ctx_place
-                   else req.step_results[self._tid_of_place(req, t.pre[0])][1])
+            if t.pre[0] == req.sched.net.ctx_place:
+                src, history = req.ctx_chain, req.ctx_tokens
+            else:
+                pre_tid = self._tid_of_place(req, t.pre[0])
+                src = req.step_results[pre_tid][1]
+                history = req.step_tokens.get(pre_tid)
             chain = src.fork()
         else:
             chains = [req.step_results[self._tid_of_place(req, p)][1]
@@ -360,7 +418,8 @@ class MedVerseEngine:
             f"<Step> Transient Step {t.tid + 1}: {req.labels.get(t.tid, '')}")
         st = _Stream(chain, q_pos=start_pos, purpose="step",
                      rid=req.rid, tid=t.tid, stop_id=self.id_step_end,
-                     max_new=self.ecfg.max_step_tokens + len(header))
+                     max_new=self.ecfg.max_step_tokens + len(header),
+                     history=history)
         st.forced.extend(header)
         return st
 
@@ -427,9 +486,34 @@ class MedVerseEngine:
         return st
 
     # ------------------------------------------------------- stream done ---
+    def _observe_stream(self, st: _Stream) -> None:
+        """Feed a finished stream to the drafter, and — for the radix
+        drafter — insert it into the radix prefix cache so later
+        requests can draft (and prefill) from it. Only streams whose
+        ancestry is one linear sequence *and* whose positions are
+        gap-free are insertable: the tree maps token sequences to pool
+        slots whose stored (RoPE'd) positions must read ``0..n-1`` for
+        a future prefill adoption to be correct."""
+        if self._drafter is None:
+            return
+        if st.history is not None:
+            toks = st.history + st.generated
+            self._drafter.observe(toks)
+            if (self._drafter.wants_generation_cache and st.seq_ok
+                    and len(toks) == st.chain.length):
+                self.radix.insert(toks, st.chain.idx[: st.chain.length])
+        else:
+            self._drafter.observe(st.generated)
+
     def _on_stream_done(self, req: _Request, st: _Stream,
                         new_streams: List[_Stream]) -> None:
         text = self.tok.decode(st.generated)
+        if st.history is not None:
+            if st.purpose == "plan":
+                req.ctx_tokens = st.history + st.generated
+            elif st.purpose == "step":
+                req.step_tokens[st.tid] = st.history + st.generated
+        self._observe_stream(st)
         if st.purpose == "plan":
             req.plan_text = text
             t0 = time.monotonic()
@@ -534,23 +618,117 @@ class MedVerseEngine:
         self._release_request(req)
         return True
 
+    def _block_capacity(self, st: _Stream) -> int:
+        """Most rows stream ``st`` could usefully decode this step: its
+        committed input plus up to ``draft_len`` lookahead rows, capped
+        by its remaining token budget. Temperature>0 streams batch only
+        queued forced tokens (teacher-forced text is distribution-free);
+        drafting there would perturb the sampled distribution."""
+        cap = min(1 + self.ecfg.draft_len,
+                  max(st.max_new - st.n_generated, 1),
+                  # lookahead must not push the chain past the compiled
+                  # bucket ladder's max_chain_len cap
+                  max(self.ecfg.max_chain_len - st.chain.length, 1))
+        if self._reqs[st.rid].sampling.temperature > 0:
+            cap = min(cap, max(len(st.forced), 1))
+        return cap
+
+    def _build_block(self, st: _Stream, budget: int) -> List[Tuple[int, bool, bool]]:
+        """Rows ``(token, was_forced, is_draft)`` stream ``st`` feeds
+        into this decode step. Row 0 is the committed input (head of the
+        forced queue, else ``next_input``); further rows are queued
+        forced tokens, then (temperature 0 only) drafter proposals.
+        Forced rows always precede draft rows, so the accepted prefix
+        can only break at a draft. The block truncates at any terminal
+        token (stop id / ``max_new``) — a terminal row is always last.
+        """
+        if st.forced:
+            rows = [(int(st.forced[0]), True, False)]
+            n_forced = 1
+        else:
+            rows = [(int(st.next_input), False, False)]
+            n_forced = 0
+        ngen = st.n_generated + 1
+        if rows[0][0] == st.stop_id or ngen >= st.max_new:
+            return rows
+        while len(rows) < budget and n_forced < len(st.forced):
+            tok = int(st.forced[n_forced])
+            rows.append((tok, True, False))
+            n_forced += 1
+            ngen += 1
+            if tok == st.stop_id or ngen >= st.max_new:
+                return rows
+        if (self._drafter is not None and len(rows) < budget
+                and n_forced >= len(st.forced)
+                and self._reqs[st.rid].sampling.temperature <= 0):
+            ctx = ((list(st.history) if st.history is not None else [])
+                   + st.generated + [r[0] for r in rows])
+            for tok in self._drafter.propose(ctx, budget - len(rows)):
+                tok = int(tok)
+                rows.append((tok, False, True))
+                ngen += 1
+                if tok == st.stop_id or ngen >= st.max_new:
+                    break
+        return rows
+
+    def _plan_blocks(self, batch: List[_Stream]) -> List[List[Tuple[int, bool, bool]]]:
+        """Split the step's ``max_slots`` batch rows across the active
+        streams. Every stream gets its committed-input row; the spare
+        rows (the ones a non-speculative step would pad) are dealt
+        round-robin to streams that can use them, so every live DAG
+        branch speculates in parallel and speculation never displaces a
+        stream's real decode. With speculation off every block is one
+        row — the legacy single-token step, byte for byte."""
+        if self._drafter is None:
+            return [self._build_block(st, 1) for st in batch]
+        n = len(batch)
+        want = [self._block_capacity(st) for st in batch]
+        budgets = [1] * n
+        spare = self.ecfg.max_slots - n
+        progress = True
+        while spare > 0 and progress:
+            progress = False
+            for i in range(n):
+                if spare == 0:
+                    break
+                if budgets[i] < want[i]:
+                    budgets[i] += 1
+                    spare -= 1
+                    progress = True
+        return [self._build_block(st, b) for st, b in zip(batch, budgets)]
+
     def step(self) -> List[StepEvent]:
         """One continuous-batching iteration: batched ``paged_decode``
-        over (up to ``max_slots``) active streams, then stream/request
-        completion handling. Returns the step's events; an empty list
-        means the engine is idle."""
+        over (up to ``max_slots``) rows spanning the active streams,
+        then stream/request completion handling. Returns the step's
+        events; an empty list means the engine is idle.
+
+        With ``EngineConfig.speculative`` on, a stream's block may hold
+        several rows (see :meth:`_plan_blocks`): queued forced tokens
+        batched unconditionally plus drafter proposals verified against
+        the argmax of this same decode call. The longest accepted prefix
+        is committed (one ``token`` event per row, ``drafted`` marking
+        accepted draft rows); rejected rows' pool slots are rolled back
+        via :meth:`~.kvcache.IndexChain.pop_slot`, so a fully rejected
+        draft leaves page accounting exactly where it started.
+        Temperature-0 output is bit-identical with speculation on or
+        off."""
         batch = self._active[: self.ecfg.max_slots]
         if not batch:
             return []
+        blocks = self._plan_blocks(batch)
         # Reserve pool slots first — the only fallible part of the step —
         # so OutOfPagesError can roll back cleanly and preempt a victim
         # instead of corrupting half-committed streams.
         slots: List[int] = []
+        reserved: List[_Stream] = []
         try:
-            for st in batch:
-                slots.append(st.chain.next_slot())
+            for st, rows in zip(batch, blocks):
+                for _ in rows:
+                    slots.append(st.chain.next_slot())
+                    reserved.append(st)
         except OutOfPagesError:
-            for st in batch[: len(slots)]:
+            for st in reversed(reserved):
                 st.chain.pop_slot()
             victim = self._pick_victim()
             if victim is None:
@@ -559,39 +737,73 @@ class MedVerseEngine:
             return [StepEvent(kind="preempted", rid=victim)]
         t_step0 = time.monotonic()
         events: List[StepEvent] = []
-        tokens, q_pos, lens = [], [], []
-        for st in batch:
-            was_forced = bool(st.forced)
-            tok_in = (st.forced.popleft() if st.forced
-                      else st.next_input)
-            tokens.append(tok_in)
-            q_pos.append(st.q_pos)
-            lens.append(st.chain.length)
-            st.generated.append(tok_in)
-            st.q_pos += 1
-            st.n_generated += 1
-            if tok_in == st.stop_id or st.n_generated >= st.max_new:
-                st.finish_after = True
-            events.append(StepEvent(
-                kind="token", rid=st.rid, token=tok_in,
-                purpose=st.purpose, tid=st.tid, forced=was_forced))
-        logits_np = self._decode(tokens, q_pos, slots,
-                                 [st.chain for st in batch], lens)
+        tokens, q_pos, chains, lens = [], [], [], []
+        spans: List[int] = []          # base row index of each block
+        for st, rows in zip(batch, blocks):
+            spans.append(len(tokens))
+            for j, (tok_in, _, _) in enumerate(rows):
+                tokens.append(tok_in)
+                q_pos.append(st.q_pos + j)
+                chains.append(st.chain)
+                # full post-reservation length: row j sees its block's
+                # earlier rows through the kv_pos <= q_pos position mask
+                # (pool K/V is written before attention per layer), and
+                # later rows are hidden by the same mask
+                lens.append(st.chain.length)
+        logits_np = self._decode(tokens, q_pos, slots, chains, lens)
         n = len(batch)
         step_dt = time.monotonic() - t_step0
+        spec_on = self._drafter is not None
         new_streams: List[_Stream] = []
         finished: List[_Stream] = []
-        for i, st in enumerate(batch):
+        for i, (st, rows) in enumerate(zip(batch, blocks)):
             req = self._reqs[st.rid]
+            base = spans[i]
+            # longest accepted prefix: row 0 and forced rows commit
+            # unconditionally; a draft row commits iff it equals the
+            # argmax of the previous row's verified logits (== what
+            # greedy sample_token would have produced sequentially)
+            n_acc = 1
+            while n_acc < len(rows):
+                tok, _, isd = rows[n_acc]
+                if isd and tok != int(np.argmax(logits_np[base + n_acc - 1])):
+                    break
+                n_acc += 1
+            if spec_on:
+                self.spec_stats["proposed"] += sum(
+                    1 for r in rows if r[2])
+                self.spec_stats["accepted"] += sum(
+                    1 for r in rows[:n_acc] if r[2])
+                self.spec_stats["forced_batched"] += sum(
+                    1 for r in rows[1:n_acc] if r[1])
+                self.spec_stats["tokens"] += n_acc
+            # roll back rejected rows: pop_slot un-reserves this chain's
+            # tail slots (newest first); the pages stay owned by the
+            # chain, so the next reservation rewrites them in place
+            for _ in range(len(rows) - n_acc):
+                st.chain.pop_slot()
             phase = {"plan": "planning", "step": "execution",
                      "conclusion": "conclusion",
                      "serial": "planning"}[st.purpose]
             req.timings[phase] += step_dt / n
-            req.n_tokens += 1
+            for j in range(n_acc):
+                tok_in, was_forced, was_draft = rows[j]
+                if was_forced:
+                    st.forced.popleft()
+                st.generated.append(tok_in)
+                st.q_pos += 1
+                st.n_generated += 1
+                req.n_tokens += 1
+                if tok_in == st.stop_id or st.n_generated >= st.max_new:
+                    st.finish_after = True
+                events.append(StepEvent(
+                    kind="token", rid=st.rid, token=tok_in,
+                    purpose=st.purpose, tid=st.tid, forced=was_forced,
+                    drafted=was_draft))
             if not st.forced and not st.finish_after:
                 sp = req.sampling
                 st.next_input = int(sample_token(
-                    logits_np[i], sp.temperature, req.rng,
+                    logits_np[base + n_acc - 1], sp.temperature, req.rng,
                     sp.top_k, sp.top_p))
             if st.finish_after:
                 st.done = True
@@ -601,6 +813,8 @@ class MedVerseEngine:
             self._on_stream_done(self._reqs[st.rid], st, new_streams)
         self._active.extend(new_streams)
         self.total_iters += 1
+        if spec_on:
+            self.spec_stats["steps"] += 1
         for st in finished:
             req = self._reqs.get(st.rid)
             if req is not None and req.done:

@@ -104,6 +104,16 @@ class PageAllocator:
 
     # -- cache pins (radix prefix cache) ------------------------------------
     def pin(self, page: int) -> None:
+        """Take a *cache* reference on an already-referenced page.
+
+        Invariants: a pin is always added on top of at least one live
+        stream ref (the radix tree pins a node's pages at insert time,
+        while the inserting chain still holds them), so ``refs[page]``
+        exists; a pinned-only page (all stream refs gone) stays out of
+        the free list but is excluded from :attr:`used` — it is
+        reclaimable cache, freed by ``unpin`` when the radix node is
+        evicted (LRU, via ``reclaim_cb`` under page pressure). Each pin
+        must be matched by exactly one ``unpin``."""
         self.refs[page] += 1
         self.pinned[page] = self.pinned.get(page, 0) + 1
 
@@ -135,14 +145,19 @@ class IndexChain:
     ``write_page``/``write_off``: current append cursor (owned page).
     """
 
-    __slots__ = ("alloc", "idx", "length", "pages", "write_page",
-                 "write_off")
+    __slots__ = ("alloc", "idx", "length", "pages", "own_pages",
+                 "write_page", "write_off")
 
     def __init__(self, alloc: PageAllocator):
         self.alloc = alloc
         self.idx = np.zeros((0,), np.int32)
         self.length = 0
         self.pages: Set[int] = set()
+        # pages *allocated by this chain's own appends* (never inherited
+        # via fork/join/adopt) — the only pages pop_slot may empty and
+        # the only pages the write cursor may re-enter on rollback,
+        # preserving the single-writer-per-page invariant
+        self.own_pages: Set[int] = set()
         self.write_page: Optional[int] = None
         self.write_off = 0
 
@@ -202,6 +217,7 @@ class IndexChain:
         for pg in self.pages:
             self.alloc.decref(pg)
         self.pages.clear()
+        self.own_pages.clear()
         self.length = 0
         self.idx = np.zeros((0,), np.int32)
         self.write_page = None
@@ -213,6 +229,7 @@ class IndexChain:
         if self.write_page is None or self.write_off == pg_size:
             self.write_page = self.alloc.alloc_page()
             self.pages.add(self.write_page)
+            self.own_pages.add(self.write_page)
             self.write_off = 0
         slot = self.write_page * pg_size + self.write_off
         self.write_off += 1
@@ -221,15 +238,43 @@ class IndexChain:
         return slot
 
     def pop_slot(self) -> None:
-        """Undo the most recent ``next_slot`` (preemption rollback: a
-        batched step reserves one slot per stream before committing any
-        tokens, and unwinds the reservations if the pool runs dry
-        mid-batch). The write page stays owned by the chain — the
-        popped slot is simply handed out again on the next append."""
+        """Undo the most recent ``next_slot``.
+
+        Used two ways: a batched step reserves its slots before
+        committing any tokens and unwinds all of them if the pool runs
+        dry mid-batch (preemption rollback), and speculative decoding
+        unwinds a block's rejected draft rows the same way. Within a
+        page the write page stays owned by the chain — the popped slot
+        is simply handed out again on the next append. When a multi-row
+        rollback empties a page, that page was necessarily allocated by
+        this chain's own appends (inherited pages hold only committed
+        prefix slots, which are never popped), so it is returned to the
+        allocator and the cursor re-derived from the chain tail — a
+        fully rejected draft leaves page accounting exactly where it
+        started."""
         assert self.length > 0 and self.write_off > 0, "nothing to pop"
         self.write_off -= 1
         self.idx = self.idx[:-1]
         self.length -= 1
+        if self.write_off > 0:
+            return
+        pg = self.write_page
+        self.pages.discard(pg)
+        self.own_pages.discard(pg)
+        self.alloc.decref(pg)
+        pg_size = self.alloc.pc.page_size
+        if self.length > 0:
+            last_pg = int(self.idx[-1]) // pg_size
+            if last_pg in self.own_pages:
+                # cursor returns to the previous own page (full or not:
+                # off == page_size just means the next append allocates)
+                self.write_page = last_pg
+                self.write_off = int(self.idx[-1]) % pg_size + 1
+                return
+        # tail is inherited (or the chain is empty): back to the
+        # lazy-allocation state; the next append gets a fresh page
+        self.write_page = None
+        self.write_off = 0
 
     def reserve(self, n: int) -> np.ndarray:
         return np.asarray([self.next_slot() for _ in range(n)], np.int32)

@@ -113,6 +113,41 @@ class RadixTree:
         for n in path:
             n.refcount -= 1
 
+    def continuation(self, tokens: List[int], k: int) -> List[int]:
+        """Read-only draft lookup: up to ``k`` cached tokens continuing
+        ``tokens``.
+
+        Walks the tree along the *entire* ``tokens`` sequence; if the
+        walk consumes it all (ending mid-edge or on a node), the
+        following edge tokens — descending into the most-recently-used
+        child at branch points — are the proposal. A mismatch or
+        fall-off before the end returns ``[]``: the cache has never
+        seen this history, so it has nothing to say. Unlike
+        :meth:`match_prefix` this takes no refcount leases and updates
+        no LRU clocks — drafting must not change eviction order.
+        """
+        node, i = self.root, 0
+        out: List[int] = []
+        while i < len(tokens):
+            child = node.children.get(tokens[i])
+            if child is None:
+                return []
+            el = len(child.tokens)
+            j = 0
+            while (j < el and i + j < len(tokens)
+                   and child.tokens[j] == tokens[i + j]):
+                j += 1
+            i += j
+            if j < el:
+                if i < len(tokens):
+                    return []        # diverged mid-edge
+                out = list(child.tokens[j:])   # rest of the edge
+            node = child
+        while len(out) < k and node.children:
+            node = max(node.children.values(), key=lambda c: c.last_used)
+            out.extend(node.tokens)
+        return out[:k]
+
     # -- insert -------------------------------------------------------------
     def insert(self, tokens: List[int], slots: np.ndarray) -> None:
         """Register a decoded sequence's (tokens -> pool slots) mapping."""

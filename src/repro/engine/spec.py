@@ -1,0 +1,182 @@
+"""Speculative decoding drafters for the MedVerse engine.
+
+A :class:`Drafter` proposes cheap draft continuations for a decode
+stream; the engine verifies up to ``EngineConfig.draft_len`` of them in
+the *same* batched ``paged_decode`` call that would have decoded one
+token (draft tokens occupy otherwise-idle batch rows, and the
+position mask ``kv_pos <= q_pos`` hides each row's successors), then
+commits the longest accepted prefix and rolls the rejected slots back
+(:meth:`..kvcache.IndexChain.pop_slot`). Because every live stream
+drafts independently, a wide DAG frontier speculates on every branch at
+once — DAG width × draft depth, the multiplier a linear engine never
+gets.
+
+Both built-in drafters are model-free (no draft model, no extra
+forward passes — proposals are host-side lookups over already-decoded
+text):
+
+* :class:`NgramDrafter` — prompt-lookup drafting: match the stream's
+  trailing n-gram against its own history first, then against a global
+  index of recently finished streams, and propose whatever followed
+  the most recent prior occurrence. Strong whenever decoded text is
+  self-similar or requests repeat.
+* :class:`RadixDrafter` — radix-continuation drafting: walk the
+  engine's radix prefix cache along the stream's *full* token history
+  and propose the cached continuation. The engine (when this drafter
+  is active) inserts finished linear streams into the radix tree, so a
+  repeated request replays its predecessor's exact decode — 100%
+  acceptance at temperature 0.
+
+Correctness contract (pinned by ``tests/test_spec_decode.py``): a draft
+token is accepted only if it equals the argmax of the verified logits
+at its position, so temperature-0 output text is bit-identical with
+speculation on or off — drafters only change *how many* decode
+iterations that text costs, never what it is. Drafting is disabled for
+temperature>0 streams (forced-token batching still applies — it is
+distribution-free).
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
+
+from .radix import RadixTree
+
+DRAFTERS = ("ngram", "radix")
+
+
+class Drafter:
+    """Interface the engine drafts through.
+
+    Invariants the engine relies on:
+
+    * :meth:`propose` is a pure lookup — it must not mutate pool pages,
+      chains, or the radix tree, and it may return fewer than ``k``
+      tokens (including none). Proposals are *hints*: every one is
+      verified against the target model before it can be committed, so
+      a wrong proposal costs only the batch row it occupied.
+    * :meth:`observe` is called once per finished stream with the
+      stream's committed token sequence (prompt/ancestor history plus
+      generated tokens when the ancestry is linear, generated tokens
+      alone otherwise). It must tolerate arbitrary sequences.
+    """
+
+    name = "base"
+    #: True if the engine should insert finished linear streams into the
+    #: radix prefix cache so this drafter can read them back.
+    wants_generation_cache = False
+
+    def observe(self, tokens: Sequence[int]) -> None:
+        """Index a finished stream's committed tokens as draft source."""
+
+    def propose(self, ctx: Sequence[int], k: int) -> List[int]:
+        """Up to ``k`` draft tokens continuing ``ctx`` (may be empty)."""
+        raise NotImplementedError
+
+
+class NgramDrafter(Drafter):
+    """Prompt-lookup drafting (PLD-style, no draft model).
+
+    ``propose`` matches the last ``order`` tokens of the context (falling
+    back to shorter n-grams down to ``min_order``) against two sources,
+    longest match first and, at equal order, cross-request evidence
+    first:
+
+    1. a global index over the last ``max_sequences`` finished streams
+       (:meth:`observe`) — repeated or near-duplicate requests replay
+       each other's decodes;
+    2. the context itself — the most recent *prior* occurrence of the
+       trailing n-gram; whatever followed it is the proposal (decoded
+       text, headers, and plans are highly self-similar).
+    """
+
+    name = "ngram"
+
+    def __init__(self, order: int = 8, min_order: int = 4,
+                 max_sequences: int = 64):
+        assert order >= min_order >= 1
+        self.order = order
+        self.min_order = min_order
+        self._seqs: Deque[List[int]] = deque(maxlen=max_sequences)
+        # (n, ngram) -> (sequence, end-of-match index); newest insert wins
+        self._index: Dict[Tuple[int, ...], Tuple[List[int], int]] = {}
+
+    def observe(self, tokens: Sequence[int]) -> None:
+        seq = [int(t) for t in tokens]
+        if len(seq) <= self.min_order:
+            return
+        if len(self._seqs) == self._seqs.maxlen:
+            old = self._seqs[0]
+            for key in self._grams(old):
+                ref = self._index.get(key)
+                if ref is not None and ref[0] is old:
+                    del self._index[key]
+        self._seqs.append(seq)
+        for key, end in self._grams(seq, with_pos=True):
+            self._index[key] = (seq, end)
+
+    def _grams(self, seq: List[int], with_pos: bool = False):
+        for n in range(self.min_order, self.order + 1):
+            for i in range(len(seq) - n):
+                key = (n, *seq[i: i + n])
+                yield (key, i + n) if with_pos else key
+
+    def propose(self, ctx: Sequence[int], k: int) -> List[int]:
+        ctx = [int(t) for t in ctx]
+        for n in range(self.order, self.min_order - 1, -1):
+            if len(ctx) < n:
+                continue
+            tail = ctx[-n:]
+            # 1) global index over finished streams: a repeated request
+            # replays its predecessor's exact decode, so cross-request
+            # evidence beats a coincidental self-match at equal order
+            ref = self._index.get((n, *tail))
+            if ref is not None:
+                seq, end = ref
+                out = seq[end: end + k]
+                if out:
+                    return out
+            # 2) self-context: most recent prior occurrence
+            for i in range(len(ctx) - n - 1, -1, -1):
+                if ctx[i: i + n] == tail:
+                    out = ctx[i + n: i + n + k]
+                    if out:
+                        return out
+        return []
+
+
+class RadixDrafter(Drafter):
+    """Radix-continuation drafting over the engine's prefix cache.
+
+    Walks the shared :class:`~.radix.RadixTree` along the stream's full
+    token history (prompt + committed decode) and proposes the cached
+    continuation (``RadixTree.continuation``). Only streams with linear,
+    sequentially-positioned ancestry are inserted into the tree (the
+    engine enforces this — see ``MedVerseEngine._observe_stream``), so
+    every cached path is also a valid prefill prefix: draft source and
+    prefix cache stay one structure, one eviction policy.
+    """
+
+    name = "radix"
+    wants_generation_cache = True
+
+    def __init__(self, tree: RadixTree):
+        self.tree = tree
+
+    def propose(self, ctx: Sequence[int], k: int) -> List[int]:
+        if not ctx:
+            return []
+        return self.tree.continuation(list(ctx), k)
+
+
+def make_drafter(name: str, radix: Optional[RadixTree] = None) -> Drafter:
+    """Construct the drafter ``EngineConfig.drafter`` names."""
+    if name == "ngram":
+        return NgramDrafter()
+    if name == "radix":
+        if radix is None:
+            raise ValueError("radix drafter requires the engine radix tree "
+                             "(EngineConfig.radix_cache=True)")
+        return RadixDrafter(radix)
+    raise ValueError(f"drafter={name!r}: expected one of {DRAFTERS}")

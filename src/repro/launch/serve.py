@@ -14,7 +14,9 @@ advance. ``--no-radix`` disables cross-request prefix reuse.
 prompts (the tokenizer trains on whatever corpus is served).
 ``--continuous`` serves the workload through the continuous-batching
 scheduler with Poisson arrivals at ``--arrival-rate`` req/s instead of
-one closed batch.
+one closed batch. ``--speculative`` turns on per-chain speculative
+decoding (``--drafter ngram|radix``, ``--draft-len N``) — same
+temperature-0 output in fewer decode iterations.
 
 On CPU use --host-mesh --smoke; the same entry point drives real pods.
 """
@@ -78,17 +80,21 @@ def run_engine(args) -> None:
         max_slots=args.batch, page_size=16, n_pages=2048,
         max_chain_len=512, max_step_tokens=8, max_conclusion_tokens=8,
         async_frontier=args.async_frontier,
-        radix_cache=not args.no_radix, plan_override=plan)
+        radix_cache=not args.no_radix, plan_override=plan,
+        speculative=args.speculative, drafter=args.drafter,
+        draft_len=args.draft_len)
     if args.attention_backend:
         ecfg.attention_backend = args.attention_backend
     ecfg.kernel_interpret = not args.compiled_kernels
     eng = MedVerseEngine(params, cfg, tok, ecfg)
     buckets = eng.warmup()
+    spec_str = (f" speculative={ecfg.drafter}/{ecfg.draft_len}"
+                if ecfg.speculative else "")
     print(f"arch={cfg.name} engine async_frontier={ecfg.async_frontier} "
           f"radix={ecfg.radix_cache} "
           f"attention={ecfg.attention_backend}"
-          f"{'' if ecfg.kernel_interpret else ' (compiled)'} "
-          f"warmed buckets={buckets}")
+          f"{'' if ecfg.kernel_interpret else ' (compiled)'}"
+          f"{spec_str} warmed buckets={buckets}")
     if args.continuous:
         _run_continuous(args, eng, prompts, plan)
         return
@@ -101,6 +107,18 @@ def run_engine(args) -> None:
           f"radix hits={eng.radix.hits} misses={eng.radix.misses}; "
           f"pages used={eng.alloc.used} pinned={eng.alloc.pinned_pages}; "
           f"buckets={dict(sorted(eng.bucket_hist.items()))}")
+    _print_spec_stats(eng)
+
+
+def _print_spec_stats(eng) -> None:
+    s = eng.spec_stats
+    if s["steps"] == 0:
+        return
+    acc = s["accepted"] / s["proposed"] if s["proposed"] else float("nan")
+    print(f"speculative: {s['tokens']} tokens in {s['steps']} steps "
+          f"({s['tokens']/s['steps']:.2f} tok/step); drafts "
+          f"accepted={s['accepted']}/{s['proposed']} ({acc:.0%}), "
+          f"forced batched={s['forced_batched']}")
 
 
 def _run_continuous(args, eng, prompts, plan) -> None:
@@ -120,6 +138,7 @@ def _run_continuous(args, eng, prompts, plan) -> None:
     print(f"radix hits={eng.radix.hits} misses={eng.radix.misses}; "
           f"pages used={eng.alloc.used} pinned={eng.alloc.pinned_pages}; "
           f"preemptions={eng.preemptions}")
+    _print_spec_stats(eng)
 
 
 def main():
@@ -145,6 +164,16 @@ def main():
     ap.add_argument("--compiled-kernels", action="store_true",
                     help="engine mode: run Pallas kernels compiled "
                          "(Mosaic, real TPU) instead of interpret mode")
+    ap.add_argument("--speculative", action="store_true",
+                    help="engine mode: per-chain speculative decoding "
+                         "(temp-0 output unchanged, fewer decode iters)")
+    ap.add_argument("--drafter", default="ngram",
+                    choices=["ngram", "radix"],
+                    help="speculative mode: draft source — ngram "
+                         "prompt-lookup or radix-cache continuation")
+    ap.add_argument("--draft-len", type=int, default=4,
+                    help="speculative mode: max draft tokens per stream "
+                         "per step")
     ap.add_argument("--continuous", action="store_true",
                     help="engine mode: open-system continuous batching "
                          "with Poisson arrivals (vs one closed batch)")

@@ -30,6 +30,7 @@ class RequestMetrics:
     first_token_step: int = -1
     done_step: int = -1
     n_tokens: int = 0             # decoded tokens across all DAG streams
+    n_drafted: int = 0            # of those, committed from accepted drafts
     n_preemptions: int = 0
 
     @property
@@ -89,14 +90,27 @@ class ServingReport:
     goodput: float                # fraction finishing within the deadline
     deadline_s: Optional[float]
     n_preemptions: int
+    # speculative decoding (all zero / NaN when the engine runs without
+    # a drafter): committed tokens per engine step — the accepted-
+    # tokens-per-step SLA companion to TPOT — plus the engine's
+    # lifetime draft counters
+    tokens_per_step: float = NAN
+    n_drafted: int = 0
+    spec_proposed: int = 0
+    spec_accepted: int = 0
+    spec_acceptance: float = NAN
 
     @staticmethod
     def build(metrics: List[RequestMetrics], duration_s: float,
               n_steps: int, policy: str, closed_batch: bool = False,
-              deadline_s: Optional[float] = None) -> "ServingReport":
+              deadline_s: Optional[float] = None,
+              spec_stats: Optional[Dict[str, int]] = None) -> "ServingReport":
         done = [m for m in metrics if not math.isnan(m.t_done_s)]
         total_tokens = sum(m.n_tokens for m in metrics)
         good = sum(1 for m in done if m.meets_deadline(deadline_s))
+        spec_stats = spec_stats or {}
+        proposed = int(spec_stats.get("proposed", 0))
+        accepted = int(spec_stats.get("accepted", 0))
         return ServingReport(
             policy=policy, closed_batch=closed_batch,
             n_requests=len(metrics), n_completed=len(done),
@@ -112,6 +126,11 @@ class ServingReport:
             goodput=good / max(len(metrics), 1),
             deadline_s=deadline_s,
             n_preemptions=sum(m.n_preemptions for m in metrics),
+            tokens_per_step=total_tokens / n_steps if n_steps > 0 else NAN,
+            n_drafted=sum(m.n_drafted for m in metrics),
+            spec_proposed=proposed,
+            spec_accepted=accepted,
+            spec_acceptance=accepted / proposed if proposed > 0 else NAN,
         )
 
     def to_dict(self) -> dict:
@@ -125,5 +144,9 @@ class ServingReport:
                 f"ttft={self.ttft_s['mean']*1e3:.0f}ms"
                 f"({self.ttft_steps['mean']:.1f}st) "
                 f"tpot={self.tpot_s['mean']*1e3:.1f}ms "
+                f"tok/step={self.tokens_per_step:.2f} "
                 f"goodput={self.goodput:.2f} "
-                f"preempt={self.n_preemptions}")
+                f"preempt={self.n_preemptions}"
+                + (f" spec={self.spec_accepted}/{self.spec_proposed}"
+                   f"({self.spec_acceptance:.0%})"
+                   if self.spec_proposed > 0 else ""))

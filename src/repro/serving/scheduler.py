@@ -138,6 +138,8 @@ class ContinuousScheduler:
                 m.first_token_step = self.step_count
                 m.t_first_token_s = time.monotonic() - (self._t0 or 0.0)
             m.n_tokens += 1
+            if ev.drafted:
+                m.n_drafted += 1
             if req.on_token is not None:
                 req.on_token(ev.rid, ev.token,
                              self.engine.tok.decode([ev.token]))
@@ -212,4 +214,5 @@ class ContinuousScheduler:
             [r.metrics for r in reqs], duration_s=duration,
             n_steps=self.step_count,
             policy=self.policy.name, closed_batch=self.closed_batch,
-            deadline_s=self.deadline_s)
+            deadline_s=self.deadline_s,
+            spec_stats=getattr(self.engine, "spec_stats", None))

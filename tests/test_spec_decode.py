@@ -1,0 +1,296 @@
+"""Speculative decoding: drafter unit tests against pure-Python
+references, and the engine parity contract — temperature-0 output text
+bit-identical with speculation on or off, across scheduler modes,
+attention backends, repeated prompts (radix hits), forced preemption
+mid-draft, and adversarially wrong drafters — with zero leaked pages
+after rejected drafts."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data.tokenizer import Tokenizer
+from repro.engine import (
+    EngineConfig,
+    MedVerseEngine,
+    NgramDrafter,
+    RadixTree,
+    make_drafter,
+)
+from repro.engine.spec import Drafter
+from repro.models import init_params
+from repro.serving import ContinuousScheduler, ServeRequest
+
+CFG = get_config("medverse-7b", smoke=True)
+
+DIAMOND = ("<Think> 1. q -> A -> C. 2. q -> B -> C. </Think> <Plan> "
+           "<Outline> Transient Step 1: q -> A ; Dependency: [] </Outline> "
+           "<Outline> Transient Step 2: q -> B ; Dependency: [] </Outline> "
+           "<Outline> Transient Step 3: A , B -> C ; Dependency: [1, 2] "
+           "</Outline> </Plan>")
+
+FANOUT = ("<Plan> "
+          "<Outline> Transient Step 1: alpha ; Dependency: [] </Outline> "
+          "<Outline> Transient Step 2: beta ; Dependency: [] </Outline> "
+          "<Outline> Transient Step 3: gamma ; Dependency: [] </Outline> "
+          "</Plan>")
+
+_LONG = " ".join(["gamma delta epsilon zeta eta theta iota kappa"] * 3)
+MIXED_DEPTH = (
+    "<Plan> "
+    "<Outline> Transient Step 1: alpha ; Dependency: [] </Outline> "
+    "<Outline> Transient Step 2: beta ; Dependency: [1] </Outline> "
+    f"<Outline> Transient Step 3: {_LONG} ; Dependency: [] </Outline> "
+    "</Plan>")
+
+
+def make_tok():
+    corpus = ["alpha beta gamma delta epsilon zeta eta theta iota kappa "
+              "Transient Step 1: 2: 3: Dependency: [] [1] [2] [1, 2] "
+              "A -> B ; C D q x y z"]
+    return Tokenizer.train(corpus)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    tok = make_tok()
+    params = init_params(jax.random.PRNGKey(0), CFG)
+    return tok, params
+
+
+def make_engine(params, tok, **kw):
+    base = dict(max_slots=4, page_size=4, n_pages=512, max_chain_len=256,
+                max_step_tokens=6, max_conclusion_tokens=6)
+    base.update(kw)
+    return MedVerseEngine(params, CFG, tok, EngineConfig(**base))
+
+
+# ------------------------------------------------- drafter unit tests --
+
+
+def _ref_ngram_propose(seqs, ctx, k, order, min_order):
+    """Pure-Python reference for NgramDrafter.propose: longest trailing
+    n-gram match, cross-request (most recently observed sequence, last
+    occurrence within it) before self-context (most recent prior
+    occurrence)."""
+    for n in range(order, min_order - 1, -1):
+        if len(ctx) < n:
+            continue
+        tail = list(ctx[-n:])
+        for seq in reversed(seqs):
+            hits = [i for i in range(len(seq) - n)
+                    if list(seq[i:i + n]) == tail]
+            if hits:
+                out = seq[hits[-1] + n: hits[-1] + n + k]
+                if out:
+                    return out
+        for i in range(len(ctx) - n - 1, -1, -1):
+            if list(ctx[i:i + n]) == tail:
+                out = ctx[i + n: i + n + k]
+                if out:
+                    return out
+    return []
+
+
+def test_ngram_drafter_matches_reference():
+    rng = np.random.default_rng(0)
+    d = NgramDrafter(order=4, min_order=2, max_sequences=8)
+    seqs = [rng.integers(0, 6, size=rng.integers(5, 30)).tolist()
+            for _ in range(6)]
+    for s in seqs:
+        d.observe(s)
+    for _ in range(200):
+        ctx = rng.integers(0, 6, size=rng.integers(2, 25)).tolist()
+        k = int(rng.integers(1, 6))
+        got = d.propose(ctx, k)
+        want = _ref_ngram_propose(seqs, ctx, k, order=4, min_order=2)
+        assert got == want, (ctx, k, got, want)
+
+
+def test_ngram_drafter_self_context():
+    d = NgramDrafter(order=3, min_order=2)
+    # nothing observed: only the context itself can match
+    ctx = [1, 2, 3, 9, 9, 1, 2, 3]
+    assert d.propose(ctx, 2) == [9, 9]
+    assert d.propose([1, 2, 3], 4) == []      # no prior occurrence
+
+
+def test_ngram_drafter_eviction():
+    d = NgramDrafter(order=2, min_order=2, max_sequences=2)
+    d.observe([1, 2, 3, 4])
+    d.observe([5, 6, 7, 8])
+    assert d.propose([1, 2], 2) == [3, 4]
+    d.observe([8, 9, 1, 5])     # evicts [1, 2, 3, 4]
+    assert d.propose([1, 2], 2) == []
+    assert d.propose([5, 6], 2) == [7, 8]
+
+
+def test_radix_continuation():
+    tree = RadixTree(page_size=4)
+    tree.insert([1, 2, 3, 4, 5, 6], np.arange(6, dtype=np.int32))
+    # mid-edge: rest of the edge
+    assert tree.continuation([1, 2, 3], 3) == [4, 5, 6]
+    assert tree.continuation([1, 2, 3], 2) == [4, 5]
+    # full match: nothing cached beyond
+    assert tree.continuation([1, 2, 3, 4, 5, 6], 3) == []
+    # divergence before the history is consumed: no proposal
+    assert tree.continuation([1, 2, 9], 3) == []
+    assert tree.continuation([7], 3) == []
+    # descends across a split into the most recently used child
+    tree.insert([1, 2, 3, 7, 8], np.asarray([0, 1, 2, 40, 41], np.int32))
+    assert tree.continuation([1, 2], 5) in ([3, 7, 8], [3, 4, 5, 6])
+    # read-only: no refcounts taken, tree fully evictable
+    while tree.evict_one():
+        pass
+    assert tree.n_cached_tokens() == 0
+
+
+def test_make_drafter():
+    assert make_drafter("ngram").name == "ngram"
+    tree = RadixTree()
+    d = make_drafter("radix", tree)
+    assert d.name == "radix" and d.tree is tree
+    with pytest.raises(ValueError):
+        make_drafter("radix")          # needs the engine radix tree
+    with pytest.raises(ValueError):
+        make_drafter("medusa")
+
+
+def test_radix_drafter_requires_radix_cache(setup):
+    tok, params = setup
+    with pytest.raises(ValueError, match="radix_cache"):
+        make_engine(params, tok, speculative=True, drafter="radix",
+                    radix_cache=False)
+
+
+# --------------------------------------------------- engine parity -----
+
+
+def _texts(results):
+    return [(r.text, tuple(sorted(r.step_texts.items())), r.conclusion)
+            for r in results]
+
+
+@pytest.mark.parametrize("drafter", ["ngram", "radix"])
+@pytest.mark.parametrize(
+    "plan,async_frontier",
+    [(DIAMOND, False), (DIAMOND, True), (FANOUT, False),
+     (MIXED_DEPTH, True)],
+    ids=["diamond-sync", "diamond-async", "fanout-sync", "mixed-async"])
+def test_spec_parity_and_fewer_iters(setup, drafter, plan, async_frontier):
+    """Temp-0 text identical with speculation on vs off on every
+    scheduling path; repeated prompts (radix hits + warm drafter) finish
+    in strictly fewer decode iterations."""
+    tok, params = setup
+    off = make_engine(params, tok, plan_override=plan,
+                      async_frontier=async_frontier)
+    on = make_engine(params, tok, plan_override=plan,
+                     async_frontier=async_frontier,
+                     speculative=True, drafter=drafter)
+    prompts = ["q alpha beta", "q alpha beta", "q alpha beta"]
+    r_off = [off.generate([p])[0] for p in prompts]
+    r_on = [on.generate([p])[0] for p in prompts]
+    assert _texts(r_on) == _texts(r_off)
+    assert on.total_iters < off.total_iters
+    assert on.spec_stats["accepted"] <= on.spec_stats["proposed"]
+    assert on.spec_stats["tokens"] > on.spec_stats["steps"]
+    # no pages leaked by rejected drafts
+    assert on.alloc.used == 0
+
+
+@pytest.mark.parametrize("drafter", ["ngram", "radix"])
+def test_spec_parity_pallas_backend(setup, drafter):
+    """Multi-token verification in one paged_decode call holds under the
+    Pallas kernel's page-table masking too."""
+    tok, params = setup
+    off = make_engine(params, tok, plan_override=DIAMOND,
+                      attention_backend="pallas", kernel_interpret=True)
+    on = make_engine(params, tok, plan_override=DIAMOND,
+                     attention_backend="pallas", kernel_interpret=True,
+                     speculative=True, drafter=drafter)
+    prompts = ["q alpha beta", "q alpha beta"]
+    r_off = [off.generate([p])[0] for p in prompts]
+    r_on = [on.generate([p])[0] for p in prompts]
+    assert _texts(r_on) == _texts(r_off)
+    assert on.total_iters < off.total_iters
+
+
+class _WrongDrafter(Drafter):
+    """Adversarial drafter: always proposes token 0 repeated — near
+    guaranteed rejection, so every block rolls back its draft rows."""
+
+    name = "wrong"
+
+    def propose(self, ctx, k):
+        return [0] * k
+
+
+def test_rejected_drafts_roll_back_pages(setup, monkeypatch):
+    """A drafter that is always wrong costs nothing but the wasted batch
+    rows: output text identical, pages fully reclaimed, chain state
+    byte-identical to the non-speculative run."""
+    import repro.engine.engine as engine_mod
+    tok, params = setup
+    monkeypatch.setattr(engine_mod, "make_drafter",
+                        lambda name, radix=None: _WrongDrafter())
+    on = make_engine(params, tok, plan_override=DIAMOND,
+                     speculative=True, draft_len=3)
+    off = make_engine(params, tok, plan_override=DIAMOND)
+    used0 = on.alloc.used
+    r_on = on.generate(["q alpha beta"])[0]
+    r_off = off.generate(["q alpha beta"])[0]
+    assert r_on.text == r_off.text
+    assert r_on.step_texts == r_off.step_texts
+    assert on.spec_stats["proposed"] > 0
+    # the near-certain rejections all rolled back cleanly
+    assert on.spec_stats["accepted"] < on.spec_stats["proposed"]
+    assert on.alloc.used == used0
+    assert on.alloc.pages_in_use == on.alloc.used + on.alloc.pinned_pages
+
+
+@pytest.mark.parametrize("drafter", ["ngram", "radix"])
+def test_spec_preemption_mid_draft(setup, drafter):
+    """Forced preemption with speculation on: a pool small enough to
+    evict mid-generation still completes every request with text
+    identical to an unconstrained engine, and releases every page."""
+    tok, params = setup
+    big = make_engine(params, tok, plan_override=DIAMOND)
+    ref = [big.generate([p])[0]
+           for p in ["q alpha beta", "q gamma delta"]]
+    tiny = make_engine(params, tok, plan_override=DIAMOND, n_pages=40,
+                       speculative=True, drafter=drafter, draft_len=4)
+    used0 = tiny.alloc.used
+    res = tiny.generate(["q alpha beta", "q gamma delta"])
+    assert _texts(res) == _texts(ref)
+    assert tiny.preemptions > 0, "pool was not small enough to preempt"
+    assert tiny.alloc.used == used0
+
+
+def test_spec_serving_reports_draft_metrics(setup):
+    """The continuous scheduler surfaces accepted-tokens-per-step and
+    per-request draft counts when the engine speculates."""
+    tok, params = setup
+    eng = make_engine(params, tok, plan_override=DIAMOND,
+                      speculative=True, drafter="ngram")
+    sched = ContinuousScheduler(eng, clock="step")
+    prompts = ["q alpha beta"] * 3
+    rep = sched.run([ServeRequest(prompt=p, arrival=float(i))
+                     for i, p in enumerate(prompts)])
+    assert rep.n_completed == 3
+    assert rep.spec_proposed > 0
+    assert rep.spec_accepted == sum(
+        r.metrics.n_drafted for r in sched.finished)
+    assert rep.spec_acceptance > 0
+    assert rep.tokens_per_step > 0
+    assert rep.n_drafted > 0
+
+
+def test_spec_off_reports_nan_acceptance(setup):
+    tok, params = setup
+    eng = make_engine(params, tok, plan_override=DIAMOND)
+    sched = ContinuousScheduler(eng, clock="step")
+    rep = sched.run([ServeRequest(prompt="q alpha beta")])
+    assert rep.n_completed == 1
+    assert rep.spec_proposed == 0 and rep.n_drafted == 0
+    assert rep.spec_acceptance != rep.spec_acceptance  # NaN

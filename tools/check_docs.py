@@ -1,0 +1,136 @@
+"""Docs consistency check (CI `docs` job; stdlib only).
+
+Validates, for every markdown file in ``docs/`` plus ``README.md``:
+
+1. **Relative links** ``[text](path)`` resolve to files/directories in
+   the repo (external ``http(s)://`` and ``#anchor``-only links are
+   skipped; a ``path#anchor`` suffix is stripped before checking).
+2. **Path-like code spans** — an inline ``code`` span that looks like a
+   repo path (starts with a known top-level directory and contains a
+   ``/``) must exist.
+3. **Module references** — an inline code span like
+   ``repro.engine.spec`` must resolve to a module file under ``src/``
+   (``src/repro/engine/spec.py`` or a package ``__init__.py``); a
+   dotted suffix beyond the deepest module (``repro.engine.spec.
+   Drafter.propose``) must appear as a name in that module's source.
+
+Exit code 1 with one line per violation; 0 when clean.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# top-level dirs a `code` span may point into to count as a path claim.
+# results/ is deliberately absent: docs cite bench *output* paths
+# (results/BENCH_spec.json) that only exist after a run.
+PATH_ROOTS = ("src/", "benchmarks/", "tests/", "docs/", "tools/",
+              "examples/", ".github/")
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+CODE_RE = re.compile(r"`([^`\n]+)`")
+MODULE_RE = re.compile(r"^(repro(?:\.\w+)+)")
+
+
+def _doc_files():
+    files = [os.path.join(REPO, "README.md")]
+    docs = os.path.join(REPO, "docs")
+    if os.path.isdir(docs):
+        for root, _, names in os.walk(docs):
+            files.extend(os.path.join(root, n) for n in names
+                         if n.endswith(".md"))
+    return [f for f in files if os.path.exists(f)]
+
+
+def _strip_code_blocks(text: str) -> str:
+    """Drop fenced code blocks: links/paths inside them are examples
+    (shell output, diagrams), not claims about the tree."""
+    return re.sub(r"```.*?```", "", text, flags=re.S)
+
+
+def _check_link(base_dir: str, target: str):
+    if target.startswith(("http://", "https://", "mailto:", "#")):
+        return None
+    path = target.split("#", 1)[0]
+    if not path:
+        return None
+    if path.startswith("/"):
+        return f"absolute link {target!r} (use a relative path)"
+    resolved = os.path.normpath(os.path.join(base_dir, path))
+    if not os.path.exists(resolved):
+        return f"broken link {target!r}"
+    return None
+
+
+def _check_module(span: str):
+    """`repro.x.y[.Name...]` -> error string or None."""
+    m = MODULE_RE.match(span)
+    if m is None:
+        return None
+    dotted = m.group(1).split(".")
+    # longest prefix that is a module file or package
+    mod_file, consumed = None, 0
+    for i in range(len(dotted), 0, -1):
+        stem = os.path.join(REPO, "src", *dotted[:i])
+        for cand in (stem + ".py", os.path.join(stem, "__init__.py")):
+            if os.path.exists(cand):
+                mod_file, consumed = cand, i
+                break
+        if mod_file:
+            break
+    if mod_file is None:
+        return f"module {'.'.join(dotted)!r} not found under src/"
+    leftover = dotted[consumed:]
+    if leftover:
+        with open(mod_file) as f:
+            source = f.read()
+        for name in leftover:
+            if not re.search(rf"\b{re.escape(name)}\b", source):
+                return (f"{'.'.join(dotted)!r}: name {name!r} not found "
+                        f"in {os.path.relpath(mod_file, REPO)}")
+    return None
+
+
+def _check_path_span(span: str):
+    # strip a trailing :line or wildcard; only bare path claims checked
+    path = span.split(":")[0].split("#")[0]
+    if not path.startswith(PATH_ROOTS) and path not in (
+            p.rstrip("/") for p in PATH_ROOTS):
+        return None
+    if any(ch in path for ch in "*{}<>$ "):
+        return None            # glob / placeholder, not a path claim
+    if not os.path.exists(os.path.join(REPO, path)):
+        return f"path {span!r} does not exist"
+    return None
+
+
+def main() -> int:
+    errors = []
+    for fpath in _doc_files():
+        rel = os.path.relpath(fpath, REPO)
+        with open(fpath) as f:
+            text = _strip_code_blocks(f.read())
+        base_dir = os.path.dirname(fpath)
+        for target in LINK_RE.findall(text):
+            err = _check_link(base_dir, target)
+            if err:
+                errors.append(f"{rel}: {err}")
+        for span in CODE_RE.findall(text):
+            err = _check_path_span(span) or _check_module(span)
+            if err:
+                errors.append(f"{rel}: {err}")
+    if errors:
+        print(f"check_docs: {len(errors)} problem(s)")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    print(f"check_docs: {len(_doc_files())} file(s) clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
