@@ -82,6 +82,23 @@ SPECS = {
         # in decode steps, no wall time in the schedule); the slack
         # absorbs token-level drift across jax/BLAS versions only.
         Metric("runs.fcfs.n_steps", False, 0.10),
+        # traced pass (smoke only): the bench re-runs the fcfs workload
+        # with EngineConfig.trace on and asserts in-process that the
+        # step count is identical (tracing is passive). Event counts on
+        # the step clock are deterministic on a given commit; the
+        # two-sided band (higher+lower on the same path) pins them
+        # against silent instrumentation loss or runaway emission,
+        # with slack for token-level drift across jax/BLAS versions.
+        Metric("trace.span_problems", False, 0.0),
+        # >= 2 DAG transitions of one request decoding on the same
+        # step — the paper's parallel-frontier claim, gated directly.
+        # Baseline is 4 (the wide fan-out shape); 50% slack keeps the
+        # floor at 2, the minimum that still proves parallel execution
+        Metric("trace.max_overlap", True, 0.50),
+        Metric("trace.n_events", True, 0.15),
+        Metric("trace.n_events", False, 0.15),
+        Metric("trace.event_counts.B:stream", True, 0.10),
+        Metric("trace.event_counts.B:stream", False, 0.10),
     ],
     "BENCH_spec.json": [
         # all step/count metrics: deterministic on a given commit (the
@@ -194,10 +211,20 @@ def check() -> int:
         mismatched = False
         for g in GUARDS.get(fname, []):
             try:
-                bv, nv = _lookup_raw(base_doc, g), _lookup_raw(new_doc, g)
-            except KeyError as e:
-                failures.append(f"{fname}: config guard {e.args[0]} missing")
+                nv = _lookup_raw(new_doc, g)
+            except KeyError:
+                failures.append(
+                    f"{fname}: config guard {g} missing from results")
                 mismatched = True
+                continue
+            try:
+                bv = _lookup_raw(base_doc, g)
+            except KeyError:
+                # additive-safe: a guard the committed baseline predates
+                # (a new config field) can't indicate a workload switch;
+                # it starts gating once baselines are refreshed
+                rows.append(f"  {'new':>10}  {fname}:{g} not in baseline "
+                            f"yet (results: {nv!r}) — skipped")
                 continue
             if bv != nv:
                 failures.append(
@@ -212,8 +239,12 @@ def check() -> int:
             try:
                 base = _lookup(base_doc, m.path)
             except KeyError:
-                failures.append(f"{fname}:{m.path}: not in baseline — "
-                                f"refresh baselines")
+                # additive-safe: a newly gated metric the committed
+                # baseline predates is reported, not failed — it starts
+                # gating once baselines are refreshed with the new field
+                rows.append(f"  {'new':>10}  {fname}:{m.path} not in "
+                            f"baseline yet — skipped (refresh baselines "
+                            f"to gate it)")
                 continue
             try:
                 new = _lookup(new_doc, m.path)

@@ -7,10 +7,17 @@ policy (FCFS, chain-aware) plus the closed-batch baseline (admit only
 into an idle engine — the historical ``generate()`` loop). Emits one
 CSV line per run and writes the full SLA reports (throughput, TTFT,
 TPOT, e2e, goodput, preemptions) to ``results/BENCH_serving.json``.
+
+A final *traced* fcfs pass re-runs the same workload with
+``EngineConfig.trace`` on: it asserts the step count is unchanged
+(tracing is passive), dumps ``results/serving_trace.jsonl`` plus its
+Perfetto-loadable Chrome twin, and records deterministic event counts
+that ``check_regression.py`` gates against the committed baseline.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 import sys
@@ -82,7 +89,47 @@ def _serve(art, workload, policy: str, closed_batch: bool, ecfg,
     # fresh copies per run: ServeRequest carries per-run mutable state
     reqs = [ServeRequest(prompt=r.prompt, plan=r.plan, arrival=r.arrival,
                          deadline_s=r.deadline_s) for r in workload]
-    return sched.run(reqs)
+    return sched.run(reqs), eng
+
+
+def _traced_pass(art, workload, ecfg, clock: str, fcfs_report: dict):
+    """Re-run the fcfs workload with tracing on: assert tracing is
+    passive (identical step count), dump the Perfetto-loadable trace to
+    ``results/``, and return the deterministic event-count section the
+    regression gate diffs (event counts on the step clock are exactly
+    reproducible for a given commit — wall timestamps inside the trace
+    are recorded but never gated)."""
+    from repro.obs import request_timelines, validate_spans
+
+    trace_path = os.path.join(RESULTS, "serving_trace.jsonl")
+    ecfg_t = dataclasses.replace(ecfg, trace=trace_path)
+    rep, eng = _serve(art, workload, "fcfs", False, ecfg_t, clock)
+    assert rep.n_steps == fcfs_report["n_steps"], (
+        f"tracing changed the schedule: {rep.n_steps} steps traced vs "
+        f"{fcfs_report['n_steps']} untraced")
+    os.makedirs(RESULTS, exist_ok=True)
+    jsonl_path, chrome_path = eng.dump_trace()
+    problems = validate_spans(eng.obs.events)
+    counts: dict = {}
+    for ev in eng.obs.events:
+        key = f"{ev['ph']}:{ev['name']}"
+        counts[key] = counts.get(key, 0) + 1
+    timelines = request_timelines(eng.obs.events)
+    max_overlap = max(
+        (tl.max_overlap for tl in timelines.values()), default=0)
+    print(f"# traced fcfs pass: {len(eng.obs.events)} events, "
+          f"{len(problems)} span problems, max_overlap={max_overlap} "
+          f"-> {os.path.relpath(jsonl_path)}, "
+          f"{os.path.relpath(chrome_path)}")
+    return {
+        "n_events": len(eng.obs.events),
+        "event_counts": dict(sorted(counts.items())),
+        "span_problems": len(problems),
+        "max_overlap": max_overlap,
+        "n_steps": rep.n_steps,
+        "jsonl": os.path.relpath(jsonl_path),
+        "chrome": os.path.relpath(chrome_path),
+    }
 
 
 def run(art=None, n_requests: int = 16, rate: float = 4.0,
@@ -109,7 +156,7 @@ def run(art=None, n_requests: int = 16, rate: float = 4.0,
     for policy, closed in runs:
         tag = f"{policy}{'-closed' if closed else ''}"
         t0 = time.time()
-        rep = _serve(art, workload, policy, closed, ecfg, clock)
+        rep, _ = _serve(art, workload, policy, closed, ecfg, clock)
         reports[tag] = rep.to_dict()
         emit(f"serving_{tag}",
              rep.duration_s / max(rep.total_tokens, 1) * 1e6,
@@ -128,11 +175,17 @@ def run(art=None, n_requests: int = 16, rate: float = 4.0,
     if reports["fcfs"]["ttft_steps"]["mean"] > reports["fcfs-closed"][
             "ttft_steps"]["mean"]:
         print("# WARNING: continuous TTFT did not beat closed batch")
+    # one traced fcfs pass: proves tracing is passive (identical step
+    # count) and produces the deterministic event-count section the
+    # regression gate diffs, plus the Perfetto-loadable trace artifact
+    trace_section = _traced_pass(art, workload, ecfg, clock,
+                                 reports["fcfs"])
     os.makedirs(RESULTS, exist_ok=True)
     out = {"config": {"n_requests": n_requests, "rate": rate,
                       "clock": clock, "max_slots": ecfg.max_slots,
                       "shapes": SHAPES},
-           "runs": reports}
+           "runs": reports,
+           "trace": trace_section}
     path = os.path.join(RESULTS, "BENCH_serving.json")
     with open(path, "w") as f:
         json.dump(out, f, indent=2)

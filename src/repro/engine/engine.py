@@ -102,6 +102,8 @@ from ..core.petri import ColoredToken, PetriNet, PetriScheduler
 from ..core.plan import PlanParseError, parse_plan
 from ..data.tokenizer import EOS, Tokenizer
 from ..models.config import ModelConfig
+from ..obs.metrics import MetricsRegistry
+from ..obs.trace import NULL_RECORDER, TraceRecorder
 from .kvcache import (IndexChain, OutOfPagesError, PageAllocator, PoolConfig,
                       init_pool)
 from .paged_model import (check_backend, paged_decode, prefill_forward,
@@ -159,6 +161,16 @@ class EngineConfig:
     # plan text (deterministic execution; also the Table-5 "Direct Petri
     # Net" ablation hook and the debugging surface).
     plan_override: Optional[str] = None
+    # Observability (src/repro/obs/): truthy enables the structured
+    # trace recorder — span/instant/counter events with two clocks
+    # (wall seconds + deterministic decode step) from the engine,
+    # page allocator, radix tree, spec path, and serving scheduler.
+    # A string is the default dump path for ``dump_trace()`` (JSONL +
+    # Chrome trace-event export); ``True`` records in memory only.
+    # Tracing is passive: temperature-0 output is bit-identical with
+    # it on or off (pinned by tests/test_obs.py). Default off — every
+    # hook short-circuits through the no-op recorder.
+    trace: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -294,6 +306,21 @@ class MedVerseEngine:
                                on_unpin=self.alloc.unpin)
         # under page pressure, reclaim radix-pinned cache pages (LRU)
         self.alloc.reclaim_cb = self.radix.evict_one
+        # observability: one recorder shared by every component (engine,
+        # allocator, radix, spec path, serving scheduler). Off by
+        # default — NULL_RECORDER makes every hook a single attribute
+        # check (``if obs.enabled``), so the hot path stays untouched.
+        self.obs = TraceRecorder() if self.ecfg.trace else NULL_RECORDER
+        if self.obs.enabled:
+            self.obs.meta(
+                model=cfg.name,
+                attention_backend=self.ecfg.attention_backend,
+                n_pages=self.ecfg.n_pages, page_size=self.ecfg.page_size,
+                max_slots=self.ecfg.max_slots,
+                speculative=self.ecfg.speculative,
+                async_frontier=self.ecfg.async_frontier)
+            self.alloc.tracer = self.obs
+            self.radix.tracer = self.obs
         # speculative decoding: one drafter shared by every stream; the
         # radix drafter reads (and populates, via generation caching)
         # the same radix tree the prefill cache uses
@@ -331,6 +358,8 @@ class MedVerseEngine:
     def _prefill(self, req: _Request) -> _Stream:
         ids = req.prompt_ids
         n = len(ids)
+        obs = self.obs
+        t0 = obs.now() if obs.enabled else 0.0
         chain = IndexChain.fresh(self.alloc)
         cached = np.zeros((0,), np.int32)
         path: List = []
@@ -383,6 +412,9 @@ class MedVerseEngine:
         sp = req.sampling
         st.next_input = int(sample_token(
             np.asarray(logits), sp.temperature, req.rng, sp.top_k, sp.top_p))
+        if obs.enabled:
+            obs.complete("prefill", "engine", t0, rid=req.rid,
+                         n_prompt=n, n_cached=m, bucket=bucket)
         return st
 
     # --------------------------------------------------------- fork/join ---
@@ -421,6 +453,8 @@ class MedVerseEngine:
                      max_new=self.ecfg.max_step_tokens + len(header),
                      history=history)
         st.forced.extend(header)
+        if self.obs.enabled:
+            self._obs_stream_begin(st)
         return st
 
     def _spawn_ready(self, req: _Request) -> List[_Stream]:
@@ -483,6 +517,8 @@ class MedVerseEngine:
                      rid=req.rid, stop_id=self.id_conc_end,
                      max_new=self.ecfg.max_conclusion_tokens)
         st.forced.append(self.id_conc)
+        if self.obs.enabled:
+            self._obs_stream_begin(st)
         return st
 
     # ------------------------------------------------------- stream done ---
@@ -607,6 +643,10 @@ class MedVerseEngine:
         st = self._prefill(req)          # may raise OutOfPagesError
         self._reqs[rid] = req
         self._active.append(st)
+        if self.obs.enabled:
+            self.obs.begin("request", "request", rid=rid,
+                           n_prompt=len(req.prompt_ids))
+            self._obs_stream_begin(st)
         return rid
 
     def abort(self, rid: int) -> bool:
@@ -616,6 +656,8 @@ class MedVerseEngine:
             return False
         self._drop_streams(rid)
         self._release_request(req)
+        if self.obs.enabled:
+            self.obs.end("request", "request", rid=rid, reason="aborted")
         return True
 
     def _block_capacity(self, st: _Stream) -> int:
@@ -716,7 +758,18 @@ class MedVerseEngine:
         batch = self._active[: self.ecfg.max_slots]
         if not batch:
             return []
+        obs = self.obs
+        t_trace0 = 0.0
+        if obs.enabled:
+            # deterministic clock: every event this iteration stamps
+            # total_iters, so event steps are machine-independent
+            obs.set_step(self.total_iters)
+            t_trace0 = obs.now()
         blocks = self._plan_blocks(batch)
+        if obs.enabled:
+            obs.complete("plan_blocks", "engine", t_trace0,
+                         n_streams=len(batch),
+                         n_rows=sum(len(b) for b in blocks))
         # Reserve pool slots first — the only fallible part of the step —
         # so OutOfPagesError can roll back cleanly and preempt a victim
         # instead of corrupting half-committed streams.
@@ -733,6 +786,9 @@ class MedVerseEngine:
             victim = self._pick_victim()
             if victim is None:
                 raise
+            if obs.enabled:
+                obs.instant("preempt", "engine", rid=victim,
+                            n_live=len(self._reqs))
             self._preempt(victim)
             return [StepEvent(kind="preempted", rid=victim)]
         t_step0 = time.monotonic()
@@ -777,6 +833,14 @@ class MedVerseEngine:
                 self.spec_stats["forced_batched"] += sum(
                     1 for r in rows[1:n_acc] if r[1])
                 self.spec_stats["tokens"] += n_acc
+                if obs.enabled:
+                    n_prop = sum(1 for r in rows if r[2])
+                    if n_prop:
+                        obs.instant(
+                            "spec_verify", "spec", rid=st.rid,
+                            track=self._track_of(st), proposed=n_prop,
+                            accepted=sum(1 for r in rows[:n_acc] if r[2]),
+                            rolled_back=len(rows) - n_acc)
             # roll back rejected rows: pop_slot un-reserves this chain's
             # tail slots (newest first); the pages stay owned by the
             # chain, so the next reservation rewrites them in place
@@ -794,6 +858,9 @@ class MedVerseEngine:
                 st.q_pos += 1
                 st.n_generated += 1
                 req.n_tokens += 1
+                if obs.enabled and st.n_generated == 1:
+                    obs.instant("first_token", "stream", rid=st.rid,
+                                track=self._track_of(st))
                 if tok_in == st.stop_id or st.n_generated >= st.max_new:
                     st.finish_after = True
                 events.append(StepEvent(
@@ -810,6 +877,8 @@ class MedVerseEngine:
                 finished.append(st)
         for st in finished:
             self._active.remove(st)
+            if obs.enabled:
+                self._obs_stream_end(st)
             self._on_stream_done(self._reqs[st.rid], st, new_streams)
         self._active.extend(new_streams)
         self.total_iters += 1
@@ -822,8 +891,19 @@ class MedVerseEngine:
                 self._release_request(req)
                 del self._reqs[req.rid]
                 self._preempt_count.pop(req.rid, None)
+                if obs.enabled:
+                    obs.end("request", "request", rid=req.rid,
+                            n_tokens=result.n_tokens,
+                            critical_path_tokens=result.critical_path_tokens)
                 events.append(StepEvent(kind="done", rid=req.rid,
                                         result=result))
+        if obs.enabled:
+            obs.counter("kv_pages", {"used": self.alloc.used,
+                                     "pinned": self.alloc.pinned_pages,
+                                     "free": len(self.alloc.free)})
+            obs.complete("step", "engine", t_trace0,
+                         n_streams=len(batch), n_rows=len(slots),
+                         n_events=len(events))
         return events
 
     # ---------------------------------------------------- batched decode ---
@@ -838,6 +918,8 @@ class MedVerseEngine:
         sentinel, and the bucket histograms. Returns host logits (n, V).
         """
         n = len(tokens)
+        obs = self.obs
+        t0 = obs.now() if obs.enabled else 0.0
         pad = self.ecfg.max_slots - n
         # power-of-two chain bucketing: short chains stop paying
         # max_chain_len-wide attention (and the cap is enforced for both
@@ -879,7 +961,12 @@ class MedVerseEngine:
                     jnp.asarray(slots_p),
                     jnp.asarray(np.pad(np.stack(padded), [(0, pad), (0, 0)])),
                     arr(lens), self.cfg))
-        return np.asarray(logits[:n])
+        out = np.asarray(logits[:n])   # host sync: dur covers the device
+        if obs.enabled:
+            obs.complete("decode", "engine", t0, n_rows=n,
+                         bucket=s_bucket,
+                         backend=self.ecfg.attention_backend)
+        return out
 
     def _page_bucket(self, n: int) -> int:
         """Smallest power-of-two page-table width covering ``n`` pages,
@@ -913,11 +1000,124 @@ class MedVerseEngine:
         self._release_request(req)
         self.preemptions += 1
         self._preempt_count[rid] = self._preempt_count.get(rid, 0) + 1
+        if self.obs.enabled:
+            self.obs.end("request", "request", rid=rid, reason="preempted")
 
     def _drop_streams(self, rid: int) -> None:
         for st in [s for s in self._active if s.rid == rid]:
             self._active.remove(st)
+            if self.obs.enabled:
+                self._obs_stream_end(st, aborted=True)
             st.chain.release()
+
+    # --------------------------------------------------- observability -----
+    @staticmethod
+    def _track_of(st: _Stream) -> str:
+        """Perfetto thread (track) of a stream: ``plan`` / ``t<N>``
+        (DAG transition N, 1-based as in the plan text) /
+        ``conclusion`` / ``serial``."""
+        return f"t{st.tid + 1}" if st.purpose == "step" else st.purpose
+
+    def _obs_stream_begin(self, st: _Stream) -> None:
+        req = self._reqs.get(st.rid)
+        label = req.labels.get(st.tid, "") if req is not None else ""
+        self.obs.begin("stream", "stream", rid=st.rid,
+                       track=self._track_of(st), purpose=st.purpose,
+                       tid=st.tid, q_pos=st.q_pos, label=label)
+
+    def _obs_stream_end(self, st: _Stream, aborted: bool = False) -> None:
+        extra = {"aborted": True} if aborted else {}
+        self.obs.end("stream", "stream", rid=st.rid,
+                     track=self._track_of(st), n_tokens=st.n_generated,
+                     **extra)
+
+    def dump_trace(self, path: Optional[str] = None
+                   ) -> Tuple[str, str]:
+        """Write the recorded trace twice: the native JSONL schema at
+        ``path`` (defaults to ``EngineConfig.trace`` when that is a
+        path) and the Chrome trace-event export next to it
+        (``<path minus .jsonl>.chrome.json``) — load the latter at
+        https://ui.perfetto.dev. Returns ``(jsonl_path, chrome_path)``.
+        """
+        if not self.obs.enabled:
+            raise ValueError(
+                "tracing is disabled; set EngineConfig.trace")
+        if path is None and isinstance(self.ecfg.trace, str):
+            path = self.ecfg.trace
+        if not path:
+            raise ValueError(
+                "no trace path: pass one, or set EngineConfig.trace "
+                "to a path instead of True")
+        self.obs.dump_jsonl(path)
+        base = path[: -len(".jsonl")] if path.endswith(".jsonl") else path
+        chrome = base + ".chrome.json"
+        self.obs.dump_chrome(chrome)
+        return path, chrome
+
+    def metrics_registry(self) -> MetricsRegistry:
+        """Snapshot the engine's lifetime telemetry into a fresh
+        :class:`~repro.obs.metrics.MetricsRegistry` — built on demand
+        from the plain-int counters the engine already keeps, so the
+        decode hot path pays nothing for it. Use ``.to_prom_text()``
+        for Prometheus exposition or ``.snapshot()`` for the JSON dict
+        merged into :class:`~repro.serving.metrics.ServingReport`."""
+        reg = MetricsRegistry(prefix="medverse_")
+        a = self.alloc.stats()
+        reg.counter("kv_pages_allocated_total",
+                    "lifetime page allocations").inc(a["allocs"])
+        reg.counter("kv_pages_freed_total",
+                    "lifetime pages returned to the free list").inc(
+                        a["frees"])
+        reg.counter("kv_page_pins_total",
+                    "lifetime radix cache pins taken").inc(a["pins"])
+        reg.counter("kv_page_unpins_total",
+                    "lifetime radix cache pins dropped").inc(a["unpins"])
+        reg.counter("kv_page_reclaims_total",
+                    "successful reclaim rounds under page pressure").inc(
+                        a["reclaims"])
+        reg.gauge("kv_pages_in_use",
+                  "pages with a live stream reference").set(a["in_use"])
+        reg.gauge("kv_pages_used",
+                  "pages off the free list (streams + cache)").set(
+                      a["used"])
+        reg.gauge("kv_pages_pinned",
+                  "pages held only as radix cache").set(a["pinned"])
+        reg.gauge("kv_pages_peak_in_use",
+                  "high-water pages_in_use").set(a["peak_in_use"])
+        reg.gauge("kv_pages_total", "pool size").set(a["n_pages"])
+        reg.counter("radix_hits_total",
+                    "prefix lookups that matched").inc(self.radix.hits)
+        reg.counter("radix_misses_total",
+                    "prefix lookups that missed").inc(self.radix.misses)
+        reg.counter("radix_inserts_total",
+                    "insertions that added a node").inc(self.radix.inserts)
+        reg.counter("radix_evictions_total",
+                    "LRU leaf evictions").inc(self.radix.evictions)
+        reg.counter("decode_steps_total",
+                    "batched decode iterations").inc(self.total_iters)
+        reg.counter("preemptions_total",
+                    "page-pressure evictions").inc(self.preemptions)
+        for k, v in self.spec_stats.items():
+            reg.counter(f"spec_{k}_total",
+                        f"speculative decoding: lifetime {k}").inc(v)
+        if self.bucket_hist:
+            h = reg.histogram("decode_chain_bucket",
+                              buckets=self.bucket_ladder(),
+                              help="decode steps per chain bucket width")
+            for b in sorted(self.bucket_hist):
+                h.observe(b, self.bucket_hist[b])
+        if self.page_bucket_hist:
+            h = reg.histogram("decode_page_bucket",
+                              buckets=sorted(self.page_bucket_hist),
+                              help="pallas decode steps per page-table "
+                                   "width")
+            for b in sorted(self.page_bucket_hist):
+                h.observe(b, self.page_bucket_hist[b])
+        reg.gauge("active_streams",
+                  "decode streams currently live").set(len(self._active))
+        reg.gauge("live_requests",
+                  "requests currently in flight").set(len(self._reqs))
+        return reg
 
     # ------------------------------------------------------------- main ----
     def generate(self, prompts: List[str],

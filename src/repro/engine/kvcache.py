@@ -27,6 +27,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..obs.trace import NULL_RECORDER
+
 
 class OutOfPagesError(RuntimeError):
     pass
@@ -79,18 +81,33 @@ class PageAllocator:
         self.refs: Dict[int, int] = {}
         self.pinned: Dict[int, int] = {}   # page -> cache pin count
         self.total_allocated = 0           # lifetime alloc_page count
+        self.total_freed = 0               # lifetime pages returned free
+        self.total_pins = 0                # lifetime cache pins taken
+        self.total_unpins = 0              # lifetime cache pins dropped
+        self.total_reclaims = 0            # successful reclaim_cb rounds
+        self.peak_in_use = 0               # high-water pages_in_use
         self.reclaim_cb = reclaim_cb       # () -> bool (freed something)
+        # trace hook: events emitted only when a recorder is attached
+        # (the engine sets this when EngineConfig.trace is on)
+        self.tracer = NULL_RECORDER
 
     def alloc_page(self) -> int:
         if not self.free and self.reclaim_cb is not None:
-            while not self.free and self.reclaim_cb():
-                pass
+            while not self.free:
+                if not self.reclaim_cb():
+                    break
+                self.total_reclaims += 1
         if not self.free:
             raise OutOfPagesError(
                 f"pool exhausted ({self.pc.n_pages} pages)")
         pg = self.free.pop()
         self.refs[pg] = 1
         self.total_allocated += 1
+        if self.pages_in_use > self.peak_in_use:
+            self.peak_in_use = self.pages_in_use
+        if self.tracer.enabled:
+            self.tracer.instant("page_alloc", "kvcache", page=pg,
+                                in_use=self.pages_in_use)
         return pg
 
     def incref(self, page: int) -> None:
@@ -101,6 +118,10 @@ class PageAllocator:
         if self.refs[page] == 0:
             del self.refs[page]
             self.free.append(page)
+            self.total_freed += 1
+            if self.tracer.enabled:
+                self.tracer.instant("page_free", "kvcache", page=page,
+                                    in_use=self.pages_in_use)
 
     # -- cache pins (radix prefix cache) ------------------------------------
     def pin(self, page: int) -> None:
@@ -116,11 +137,19 @@ class PageAllocator:
         must be matched by exactly one ``unpin``."""
         self.refs[page] += 1
         self.pinned[page] = self.pinned.get(page, 0) + 1
+        self.total_pins += 1
+        if self.tracer.enabled:
+            self.tracer.instant("page_pin", "kvcache", page=page,
+                                pins=self.pinned[page])
 
     def unpin(self, page: int) -> None:
         self.pinned[page] -= 1
         if self.pinned[page] == 0:
             del self.pinned[page]
+        self.total_unpins += 1
+        if self.tracer.enabled:
+            self.tracer.instant("page_unpin", "kvcache", page=page,
+                                pins=self.pinned.get(page, 0))
         self.decref(page)
 
     @property
@@ -136,6 +165,28 @@ class PageAllocator:
     @property
     def pinned_pages(self) -> int:
         return len(self.pinned)
+
+    def stats(self) -> Dict[str, int]:
+        """Lifetime counter set plus current occupancy — the page-pool
+        telemetry surface (merged into the engine metrics registry and
+        asserted by the no-page-leak tests).
+
+        Invariants a healthy pool satisfies at any quiescent point:
+        ``allocs - frees == in_use`` (every allocated page is either
+        live or was returned), ``pins - unpins == sum of outstanding
+        pin counts``, and ``peak_in_use <= n_pages``."""
+        return {
+            "allocs": self.total_allocated,
+            "frees": self.total_freed,
+            "pins": self.total_pins,
+            "unpins": self.total_unpins,
+            "reclaims": self.total_reclaims,
+            "peak_in_use": self.peak_in_use,
+            "in_use": self.pages_in_use,
+            "used": self.used,
+            "pinned": self.pinned_pages,
+            "n_pages": self.pc.n_pages,
+        }
 
 
 class IndexChain:

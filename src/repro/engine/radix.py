@@ -26,6 +26,8 @@ from typing import Callable, Dict, List, Optional, Set, Tuple
 
 import numpy as np
 
+from ..obs.trace import NULL_RECORDER
+
 
 @dataclasses.dataclass
 class RadixNode:
@@ -52,6 +54,9 @@ class RadixTree:
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        self.inserts = 0        # insert() calls that added >= 1 node
+        # trace hook (engine-attached when EngineConfig.trace is on)
+        self.tracer = NULL_RECORDER
 
     def _pages(self, slots: np.ndarray) -> Set[int]:
         if self.page_size is None:
@@ -107,6 +112,10 @@ class RadixTree:
             self.misses += 1
         slots = (np.concatenate(matched).astype(np.int32)
                  if matched else np.zeros((0,), np.int32))
+        if self.tracer.enabled:
+            self.tracer.instant("radix_hit" if matched else "radix_miss",
+                                "radix", n_tokens=len(tokens),
+                                n_cached=int(slots.size))
         return slots, path
 
     def release(self, path: List[RadixNode]) -> None:
@@ -165,6 +174,10 @@ class RadixTree:
                 )
                 node.children[tokens[i]] = new
                 self._pin(self._pages(new.slots))
+                self.inserts += 1
+                if self.tracer.enabled:
+                    self.tracer.instant("radix_insert", "radix",
+                                        n_tokens=len(new.tokens))
                 return
             el = len(child.tokens)
             j = 0
@@ -219,6 +232,9 @@ class RadixTree:
             for key, ch in list(parent.children.items()):
                 if ch is best:
                     del parent.children[key]
+        if self.tracer.enabled:
+            self.tracer.instant("radix_evict", "radix",
+                                n_tokens=len(best.tokens))
         self._unpin(self._pages(best.slots))
         self.evictions += 1
         return True

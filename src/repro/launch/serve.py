@@ -18,6 +18,13 @@ one closed batch. ``--speculative`` turns on per-chain speculative
 decoding (``--drafter ngram|radix``, ``--draft-len N``) — same
 temperature-0 output in fewer decode iterations.
 
+Observability: ``--trace PATH`` records the structured engine trace and
+writes it to ``PATH`` (native JSONL) plus ``PATH``'s Chrome trace-event
+twin, loadable at https://ui.perfetto.dev, and prints the per-request
+DAG timeline summary; ``--metrics`` prints the engine metrics registry
+in Prometheus text format after the run. Both work in closed-batch and
+``--continuous`` mode.
+
 On CPU use --host-mesh --smoke; the same entry point drives real pods.
 """
 
@@ -82,7 +89,7 @@ def run_engine(args) -> None:
         async_frontier=args.async_frontier,
         radix_cache=not args.no_radix, plan_override=plan,
         speculative=args.speculative, drafter=args.drafter,
-        draft_len=args.draft_len)
+        draft_len=args.draft_len, trace=args.trace)
     if args.attention_backend:
         ecfg.attention_backend = args.attention_backend
     ecfg.kernel_interpret = not args.compiled_kernels
@@ -97,6 +104,7 @@ def run_engine(args) -> None:
           f"{spec_str} warmed buckets={buckets}")
     if args.continuous:
         _run_continuous(args, eng, prompts, plan)
+        _print_observability(args, eng)
         return
     t0 = time.time()
     res = eng.generate(prompts)
@@ -108,6 +116,23 @@ def run_engine(args) -> None:
           f"pages used={eng.alloc.used} pinned={eng.alloc.pinned_pages}; "
           f"buckets={dict(sorted(eng.bucket_hist.items()))}")
     _print_spec_stats(eng)
+    _print_observability(args, eng)
+
+
+def _print_observability(args, eng) -> None:
+    """--trace: dump JSONL + Chrome exports and the per-request DAG
+    timeline; --metrics: Prometheus text dump of the engine registry."""
+    if args.trace:
+        from ..obs import summarize
+        jsonl_path, chrome_path = eng.dump_trace()
+        print(f"trace: {len(eng.obs.events)} events -> {jsonl_path}; "
+              f"Perfetto (https://ui.perfetto.dev): {chrome_path}")
+        lines = summarize(eng.obs.events)
+        if lines:
+            print("DAG timelines (steps, per request):")
+            print(lines)
+    if args.metrics:
+        print(eng.metrics_registry().to_prom_text(), end="")
 
 
 def _print_spec_stats(eng) -> None:
@@ -191,6 +216,15 @@ def main():
     ap.add_argument("--prompts-file", default=None,
                     help="engine mode: file with one prompt per line "
                          "(replaces the built-in toy prompts)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="engine mode: record a structured trace and "
+                         "write it to PATH (JSONL) plus a Chrome "
+                         "trace-event twin for Perfetto; also prints "
+                         "per-request DAG timelines")
+    ap.add_argument("--metrics", action="store_true",
+                    help="engine mode: print the engine metrics "
+                         "registry (Prometheus text format) after "
+                         "the run")
     args = ap.parse_args()
 
     if args.engine:

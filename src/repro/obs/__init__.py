@@ -1,0 +1,35 @@
+"""Observability subsystem: structured tracing (two clocks — wall
+seconds + deterministic engine step), a metrics registry with
+Prometheus/JSON export, and per-request DAG timeline summaries.
+
+See ``docs/ARCHITECTURE.md`` ("Observability") for the event taxonomy
+and how to open a trace in Perfetto. The default recorder is a no-op
+(:data:`NULL_RECORDER`); ``EngineConfig.trace`` / ``serve.py --trace``
+turn recording on.
+"""
+
+from .metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                      percentile_summary)
+from .timeline import (RequestTimeline, StreamTimeline, request_timelines,
+                       summarize)
+from .trace import (NULL_RECORDER, SCHEMA, NullRecorder, TraceRecorder,
+                    load_jsonl, to_chrome, validate_spans)
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "NULL_RECORDER",
+    "NullRecorder",
+    "RequestTimeline",
+    "SCHEMA",
+    "StreamTimeline",
+    "TraceRecorder",
+    "load_jsonl",
+    "percentile_summary",
+    "request_timelines",
+    "summarize",
+    "to_chrome",
+    "validate_spans",
+]

@@ -1,0 +1,186 @@
+"""Metrics registry: counters, gauges, and histograms with a
+Prometheus-text-format dump and a JSON snapshot.
+
+The engine's hot-path components keep their own plain-int counters
+(``PageAllocator.stats()``, ``RadixTree`` hit/miss/insert/evict,
+``MedVerseEngine.spec_stats`` — incrementing a Python int is the
+cheapest thing we can do per event); the registry is populated from
+them *at snapshot time* (``MedVerseEngine.metrics_registry``), so
+observability never adds work to the decode loop. The registry is also
+usable standalone for code that wants to own its metrics directly.
+
+``to_prom_text()`` renders the Prometheus text exposition format
+(``# HELP`` / ``# TYPE`` / sample lines, histograms as cumulative
+``_bucket{le=...}`` series); ``snapshot()`` returns a JSON-ready dict
+that the serving layer merges into ``ServingReport`` (the ``engine``
+field), so every serving bench run ships its engine telemetry.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence
+
+
+def _fmt(v: float) -> str:
+    if isinstance(v, float) and math.isinf(v):
+        return "+Inf" if v > 0 else "-Inf"
+    if isinstance(v, float) and v == int(v) and abs(v) < 1e15:
+        return str(int(v))
+    return repr(v)
+
+
+@dataclasses.dataclass
+class Counter:
+    """Monotonically increasing count."""
+
+    name: str
+    help: str = ""
+    value: float = 0.0
+
+    def inc(self, n: float = 1.0) -> None:
+        assert n >= 0, f"counter {self.name} decremented"
+        self.value += n
+
+    def snapshot(self):
+        return self.value
+
+
+@dataclasses.dataclass
+class Gauge:
+    """Point-in-time value (may go up or down)."""
+
+    name: str
+    help: str = ""
+    value: float = 0.0
+
+    def set(self, v: float) -> None:
+        self.value = float(v)
+
+    def inc(self, n: float = 1.0) -> None:
+        self.value += n
+
+    def dec(self, n: float = 1.0) -> None:
+        self.value -= n
+
+    def snapshot(self):
+        return self.value
+
+
+class Histogram:
+    """Fixed-bucket histogram (cumulative on export, Prometheus-style).
+
+    ``buckets`` are the upper bounds of each bin; an implicit ``+Inf``
+    bin catches the rest. ``observe(v, n)`` adds ``n`` occurrences of
+    value ``v`` (``n`` lets pre-aggregated engine histograms — e.g. the
+    chain-bucket histogram, a dict of bucket → step count — load in one
+    pass)."""
+
+    def __init__(self, name: str, buckets: Sequence[float], help: str = ""):
+        assert buckets and list(buckets) == sorted(buckets)
+        self.name = name
+        self.help = help
+        self.buckets = [float(b) for b in buckets]
+        self.counts = [0] * (len(self.buckets) + 1)   # last = +Inf
+        self.total = 0
+        self.sum = 0.0
+
+    def observe(self, v: float, n: int = 1) -> None:
+        for i, b in enumerate(self.buckets):
+            if v <= b:
+                self.counts[i] += n
+                break
+        else:
+            self.counts[-1] += n
+        self.total += n
+        self.sum += v * n
+
+    def snapshot(self):
+        return {"buckets": {_fmt(b): c for b, c in
+                            zip(self.buckets + [float("inf")], self.counts)},
+                "count": self.total, "sum": self.sum}
+
+
+class MetricsRegistry:
+    """Name-keyed collection of metrics; get-or-create accessors so
+    instrumentation sites stay one-liners."""
+
+    def __init__(self, prefix: str = ""):
+        self.prefix = prefix
+        self._metrics: Dict[str, object] = {}
+
+    def _get(self, name: str, factory):
+        name = self.prefix + name
+        m = self._metrics.get(name)
+        if m is None:
+            m = factory(name)
+            self._metrics[name] = m
+        return m
+
+    def counter(self, name: str, help: str = "") -> Counter:
+        m = self._get(name, lambda n: Counter(n, help))
+        assert isinstance(m, Counter), f"{name} already a {type(m).__name__}"
+        return m
+
+    def gauge(self, name: str, help: str = "") -> Gauge:
+        m = self._get(name, lambda n: Gauge(n, help))
+        assert isinstance(m, Gauge), f"{name} already a {type(m).__name__}"
+        return m
+
+    def histogram(self, name: str, buckets: Sequence[float],
+                  help: str = "") -> Histogram:
+        m = self._get(name, lambda n: Histogram(n, buckets, help))
+        assert isinstance(m, Histogram), (
+            f"{name} already a {type(m).__name__}")
+        return m
+
+    def names(self) -> List[str]:
+        return sorted(self._metrics)
+
+    # ------------------------------------------------------------ export --
+    def snapshot(self) -> dict:
+        """JSON-ready ``{name: value-or-histogram-dict}``."""
+        return {name: self._metrics[name].snapshot()
+                for name in sorted(self._metrics)}
+
+    def to_prom_text(self) -> str:
+        """Prometheus text exposition format."""
+        lines: List[str] = []
+        for name in sorted(self._metrics):
+            m = self._metrics[name]
+            if m.help:
+                lines.append(f"# HELP {name} {m.help}")
+            if isinstance(m, Counter):
+                lines.append(f"# TYPE {name} counter")
+                lines.append(f"{name} {_fmt(m.value)}")
+            elif isinstance(m, Gauge):
+                lines.append(f"# TYPE {name} gauge")
+                lines.append(f"{name} {_fmt(m.value)}")
+            else:
+                assert isinstance(m, Histogram)
+                lines.append(f"# TYPE {name} histogram")
+                cum = 0
+                for b, c in zip(m.buckets + [float("inf")], m.counts):
+                    cum += c
+                    lines.append(
+                        f'{name}_bucket{{le="{_fmt(b)}"}} {cum}')
+                lines.append(f"{name}_sum {_fmt(m.sum)}")
+                lines.append(f"{name}_count {m.total}")
+        return "\n".join(lines) + "\n"
+
+
+def percentile_summary(xs: Sequence[float],
+                       pcts: Sequence[float] = (50, 95, 99)) -> Optional[dict]:
+    """Small helper for SLA tails: ``{"p50": ..., "p95": ..., "p99":
+    ...}`` or None on empty input (no numpy dependency here — the
+    serving layer has its own numpy-based aggregation)."""
+    xs = sorted(x for x in xs if not math.isnan(x))
+    if not xs:
+        return None
+    out = {}
+    for p in pcts:
+        k = (len(xs) - 1) * p / 100.0
+        lo, hi = int(math.floor(k)), int(math.ceil(k))
+        out[f"p{int(p)}"] = xs[lo] + (xs[hi] - xs[lo]) * (k - lo)
+    return out

@@ -1,0 +1,294 @@
+"""Structured trace recorder for the MedVerse engine.
+
+The engine, memory system, radix cache, speculative-decode path, and
+the continuous-batching scheduler all emit events through one recorder
+object (``MedVerseEngine.obs``). Three event shapes:
+
+* **span** — a ``B``(egin)/``E``(nd) pair on a *track* (e.g. the
+  lifetime of one DAG-transition decode stream), or a single ``X``
+  (complete) event carrying its own duration (e.g. one batched
+  ``paged_decode`` call);
+* **instant** (``I``) — a point event (a page allocation, a radix hit,
+  a preemption, one speculative verify);
+* **counter** (``C``) — a sampled gauge set (KV page occupancy, queue
+  depth) that Perfetto renders as a time series.
+
+Every event carries **two clocks**: ``ts``, wall seconds relative to
+recorder start (what an operator reads), and ``step``, the engine's
+deterministic decode-iteration counter (what tests and cross-machine
+comparisons read — event *counts* and step intervals are bit-stable on
+a fixed workload, wall timestamps are not).
+
+The default recorder is :data:`NULL_RECORDER`: ``enabled`` is False and
+every hook short-circuits, so an untraced engine pays one attribute
+check per instrumented site and allocates nothing. Tracing is passive
+either way — it never touches RNG, page accounting, or scheduling, so
+temperature-0 output is bit-identical with tracing on or off (pinned by
+``tests/test_obs.py``).
+
+Exporters: :meth:`TraceRecorder.dump_jsonl` writes the native schema
+(one JSON object per line, header first — validated by
+``tools/check_trace.py``); :meth:`TraceRecorder.dump_chrome` writes
+Chrome trace-event JSON loadable in Perfetto (https://ui.perfetto.dev),
+where each request is a *process* and each DAG transition stream is a
+*thread track* — the parallel frontier is visually inspectable.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from typing import Dict, List, Optional
+
+SCHEMA = "medverse-trace/1"
+
+#: Event phases used in the native schema (a subset of Chrome's).
+PHASES = ("B", "E", "I", "X", "C")
+
+
+class NullRecorder:
+    """Disabled recorder: every hook is a no-op returning immediately.
+
+    Instrumented code guards any non-trivial argument construction
+    behind ``if obs.enabled:``, so the disabled cost per site is one
+    attribute load and (rarely) one no-op call.
+    """
+
+    __slots__ = ()
+    enabled = False
+    step = 0
+
+    def set_step(self, step: int) -> None:
+        pass
+
+    def now(self) -> float:
+        return 0.0
+
+    def meta(self, **kv) -> None:
+        pass
+
+    def begin(self, name, cat="engine", rid=None, track=None, **args):
+        pass
+
+    def end(self, name, cat="engine", rid=None, track=None, **args):
+        pass
+
+    def instant(self, name, cat="engine", rid=None, track=None, **args):
+        pass
+
+    def complete(self, name, cat, t0, rid=None, track=None, **args):
+        pass
+
+    def counter(self, name, values, rid=None):
+        pass
+
+
+#: The shared disabled recorder every component defaults to.
+NULL_RECORDER = NullRecorder()
+
+
+class TraceRecorder:
+    """In-memory recording implementation of the hook interface.
+
+    Events are plain JSON-ready dicts appended in emission order:
+    ``{"ph", "name", "cat", "ts", "step"}`` plus optional ``"rid"``
+    (owning request), ``"track"`` (sub-request lane, e.g. ``"plan"`` /
+    ``"t3"`` / ``"conclusion"``), ``"dur"`` (``X`` only), ``"args"``
+    (event payload) and ``"values"`` (``C`` only).
+    """
+
+    enabled = True
+
+    def __init__(self, clock=time.monotonic):
+        self._clock = clock
+        self.t0 = clock()
+        self.step = 0
+        self.events: List[dict] = []
+        self.meta_args: Dict[str, object] = {}
+
+    # ------------------------------------------------------------ clocks --
+    def now(self) -> float:
+        """Wall seconds since recorder start."""
+        return self._clock() - self.t0
+
+    def set_step(self, step: int) -> None:
+        """Advance the deterministic step clock (the engine calls this
+        at the top of every ``step()``)."""
+        self.step = int(step)
+
+    # ------------------------------------------------------------- emit ---
+    def meta(self, **kv) -> None:
+        """Attach header metadata (pool geometry, backend, ...)."""
+        self.meta_args.update(kv)
+
+    def _ev(self, ph: str, name: str, cat: str, rid, track,
+            args: dict, dur: Optional[float] = None,
+            values: Optional[dict] = None) -> None:
+        ev = {"ph": ph, "name": name, "cat": cat,
+              "ts": self.now(), "step": self.step}
+        if rid is not None:
+            ev["rid"] = int(rid)
+        if track is not None:
+            ev["track"] = str(track)
+        if dur is not None:
+            ev["dur"] = dur
+        if args:
+            ev["args"] = args
+        if values is not None:
+            ev["values"] = values
+        self.events.append(ev)
+
+    def begin(self, name, cat="engine", rid=None, track=None, **args):
+        """Open a span on ``(rid, track)``; close with :meth:`end`."""
+        self._ev("B", name, cat, rid, track, args)
+
+    def end(self, name, cat="engine", rid=None, track=None, **args):
+        self._ev("E", name, cat, rid, track, args)
+
+    def instant(self, name, cat="engine", rid=None, track=None, **args):
+        self._ev("I", name, cat, rid, track, args)
+
+    def complete(self, name, cat, t0, rid=None, track=None, **args):
+        """Emit an ``X`` span that started at wall time ``t0`` (a value
+        previously read from :meth:`now`) and ends now."""
+        ev = {"ph": "X", "name": name, "cat": cat, "ts": t0,
+              "step": self.step, "dur": self.now() - t0}
+        if rid is not None:
+            ev["rid"] = int(rid)
+        if track is not None:
+            ev["track"] = str(track)
+        if args:
+            ev["args"] = args
+        self.events.append(ev)
+
+    def counter(self, name, values, rid=None):
+        """Sample a gauge set, e.g. ``{"used": 12, "pinned": 3}``."""
+        self._ev("C", name, "counter", rid, None, {}, values=dict(values))
+
+    # ------------------------------------------------------------ export --
+    def header(self) -> dict:
+        return {"schema": SCHEMA, "meta": dict(self.meta_args)}
+
+    def dump_jsonl(self, path: str) -> None:
+        """Native export: header line, then one event per line."""
+        with open(path, "w") as f:
+            f.write(json.dumps(self.header()) + "\n")
+            for ev in self.events:
+                f.write(json.dumps(ev) + "\n")
+
+    def dump_chrome(self, path: str) -> None:
+        chrome = to_chrome(self.events, self.meta_args)
+        with open(path, "w") as f:
+            json.dump(chrome, f)
+
+
+def load_jsonl(path: str):
+    """Read a native trace file back: ``(header, events)``. The
+    round-trip is exact (events are JSON-plain when emitted), which
+    ``tests/test_obs.py`` pins."""
+    with open(path) as f:
+        lines = [json.loads(ln) for ln in f if ln.strip()]
+    if not lines or lines[0].get("schema") != SCHEMA:
+        raise ValueError(f"{path}: not a {SCHEMA} trace file")
+    return lines[0], lines[1:]
+
+
+# ------------------------------------------------------- chrome export ----
+#: pid used for engine-global (requestless) events in the Chrome view.
+ENGINE_PID = 0
+
+
+def _track_sort_key(track: str):
+    # plan first, then transitions in tid order, conclusion last
+    order = {"plan": 0, "serial": 0, "conclusion": 10**6}
+    if track in order:
+        return order[track]
+    if track.startswith("t") and track[1:].isdigit():
+        return int(track[1:])
+    return 10**5
+
+
+def to_chrome(events: List[dict], meta: Optional[dict] = None) -> dict:
+    """Convert native events to Chrome trace-event JSON (Perfetto-
+    loadable). Each request rid becomes a process; each distinct track
+    within a request becomes a named thread, so the DAG frontier's
+    parallel streams render as overlapping slices."""
+    out: List[dict] = []
+    # assign a stable tid per (pid, track)
+    tids: Dict[tuple, int] = {}
+
+    def tid_of(pid: int, track: str) -> int:
+        key = (pid, track)
+        if key not in tids:
+            tids[key] = _track_sort_key(track)
+            out.append({"ph": "M", "name": "thread_name", "pid": pid,
+                        "tid": tids[key], "args": {"name": track}})
+        return tids[key]
+
+    pids_seen = set()
+
+    def pid_of(ev: dict) -> int:
+        pid = ev.get("rid", ENGINE_PID) if ev.get("rid") is not None \
+            else ENGINE_PID
+        if pid not in pids_seen:
+            pids_seen.add(pid)
+            name = "engine" if pid == ENGINE_PID else f"request {pid}"
+            out.append({"ph": "M", "name": "process_name", "pid": pid,
+                        "args": {"name": name}})
+        return pid
+
+    for ev in events:
+        pid = pid_of(ev)
+        track = ev.get("track", ev["cat"])
+        base = {"name": ev["name"], "cat": ev["cat"], "pid": pid,
+                "ts": ev["ts"] * 1e6,
+                "args": dict(ev.get("args", {}), step=ev["step"])}
+        ph = ev["ph"]
+        if ph in ("B", "E"):
+            out.append(dict(base, ph=ph, tid=tid_of(pid, track)))
+        elif ph == "X":
+            out.append(dict(base, ph="X", dur=ev["dur"] * 1e6,
+                            tid=tid_of(pid, track)))
+        elif ph == "I":
+            out.append(dict(base, ph="i", s="t",
+                            tid=tid_of(pid, track)))
+        elif ph == "C":
+            out.append({"ph": "C", "name": ev["name"], "pid": pid,
+                        "tid": 0, "ts": ev["ts"] * 1e6,
+                        "args": ev.get("values", {})})
+    return {"traceEvents": out,
+            "otherData": dict(meta or {}, schema=SCHEMA)}
+
+
+# ----------------------------------------------------------- validation ---
+def validate_spans(events: List[dict]) -> List[str]:
+    """Structural check shared by tests: every ``B`` on a ``(rid,
+    track, name)`` lane must be closed by a matching ``E``, LIFO per
+    lane, none left open. Returns a list of problem strings (empty =
+    clean). ``tools/check_trace.py`` re-implements this stdlib-only for
+    CI use on trace *files*."""
+    open_spans: Dict[tuple, List[str]] = {}
+    problems: List[str] = []
+    for i, ev in enumerate(events):
+        if ev["ph"] not in ("B", "E"):
+            continue
+        lane = (ev.get("rid"), ev.get("track"))
+        stack = open_spans.setdefault(lane, [])
+        if ev["ph"] == "B":
+            stack.append(ev["name"])
+        else:
+            if not stack:
+                problems.append(
+                    f"event {i}: E {ev['name']!r} on lane {lane} with no "
+                    f"open span")
+            elif stack[-1] != ev["name"]:
+                problems.append(
+                    f"event {i}: E {ev['name']!r} closes {stack[-1]!r} "
+                    f"on lane {lane}")
+                stack.pop()
+            else:
+                stack.pop()
+    for lane, stack in open_spans.items():
+        for name in stack:
+            problems.append(f"span {name!r} on lane {lane} never closed")
+    return problems

@@ -51,6 +51,16 @@ class RequestMetrics:
         return (self.t_done_s - self.t_first_token_s) / (self.n_tokens - 1)
 
     @property
+    def tpot_steps(self) -> float:
+        """Decode steps per output token after the first — the
+        deterministic-clock companion to :attr:`tpot_s`. Below 1.0
+        means speculation committed more than one token per step."""
+        if (self.n_tokens <= 1 or self.done_step < 0
+                or self.first_token_step < 0):
+            return NAN
+        return (self.done_step - self.first_token_step) / (self.n_tokens - 1)
+
+    @property
     def e2e_s(self) -> float:
         return self.t_done_s - self.t_arrival_s
 
@@ -63,11 +73,12 @@ class RequestMetrics:
 def _stats(xs: List[float]) -> Dict[str, float]:
     xs = [x for x in xs if not math.isnan(x)]
     if not xs:
-        return {"mean": NAN, "p50": NAN, "p95": NAN}
+        return {"mean": NAN, "p50": NAN, "p95": NAN, "p99": NAN}
     a = np.asarray(xs, np.float64)
     return {"mean": float(a.mean()),
             "p50": float(np.percentile(a, 50)),
-            "p95": float(np.percentile(a, 95))}
+            "p95": float(np.percentile(a, 95)),
+            "p99": float(np.percentile(a, 99))}
 
 
 @dataclasses.dataclass
@@ -99,12 +110,20 @@ class ServingReport:
     spec_proposed: int = 0
     spec_accepted: int = 0
     spec_acceptance: float = NAN
+    # deterministic-clock TPOT (decode steps per token after the first);
+    # mean/p50/p95/p99 like the wall-clock stats above
+    tpot_steps: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # engine telemetry snapshot (MedVerseEngine.metrics_registry().
+    # snapshot()): page-pool lifetime counters, radix hit/miss, spec
+    # stats, bucket histograms. None when the caller has no engine.
+    engine: Optional[dict] = None
 
     @staticmethod
     def build(metrics: List[RequestMetrics], duration_s: float,
               n_steps: int, policy: str, closed_batch: bool = False,
               deadline_s: Optional[float] = None,
-              spec_stats: Optional[Dict[str, int]] = None) -> "ServingReport":
+              spec_stats: Optional[Dict[str, int]] = None,
+              engine_metrics: Optional[dict] = None) -> "ServingReport":
         done = [m for m in metrics if not math.isnan(m.t_done_s)]
         total_tokens = sum(m.n_tokens for m in metrics)
         good = sum(1 for m in done if m.meets_deadline(deadline_s))
@@ -131,6 +150,8 @@ class ServingReport:
             spec_proposed=proposed,
             spec_accepted=accepted,
             spec_acceptance=accepted / proposed if proposed > 0 else NAN,
+            tpot_steps=_stats([m.tpot_steps for m in done]),
+            engine=engine_metrics,
         )
 
     def to_dict(self) -> dict:

@@ -73,6 +73,10 @@ class ContinuousScheduler:
         self._pending: List[ServeRequest] = []   # submitted, not arrived
         self._running: Dict[int, ServeRequest] = {}
         self._t0: Optional[float] = None
+        # tracing: reuse the engine's recorder so serving events (arrival,
+        # admission, queue depth) interleave with engine events on the
+        # same two clocks; NULL_RECORDER when tracing is off
+        self.obs = engine.obs
 
     # ---------------------------------------------------------- clock ------
     def now(self) -> float:
@@ -97,6 +101,10 @@ class ContinuousScheduler:
             req.metrics.t_arrival_s = time.monotonic() - (self._t0 or 0.0)
             req.metrics.arrival_step = self.step_count
             self.queue.push(req)
+            if self.obs.enabled:
+                self.obs.instant("arrival", "serving",
+                                 sched_step=self.step_count,
+                                 queue_depth=len(self.queue))
 
     # -------------------------------------------------------- admission ----
     def _admit(self) -> None:
@@ -126,6 +134,11 @@ class ContinuousScheduler:
             req.metrics.t_admit_s = time.monotonic() - (self._t0 or 0.0)
             req.metrics.admit_step = self.step_count
             self._running[rid] = req
+            if self.obs.enabled:
+                self.obs.instant(
+                    "admit", "serving", rid=rid,
+                    wait_steps=self.step_count - req.metrics.arrival_step,
+                    queue_depth=len(self.queue))
 
     # ------------------------------------------------------------ events ---
     def _dispatch(self, ev: StepEvent) -> None:
@@ -167,6 +180,11 @@ class ContinuousScheduler:
             self._t0 = time.monotonic()
         self._release_arrivals()
         self._admit()
+        if self.obs.enabled:
+            self.obs.counter("queue_depth",
+                             {"queued": len(self.queue),
+                              "running": len(self._running),
+                              "pending": len(self._pending)})
         try:
             events = self.engine.step()
         except OutOfPagesError:
@@ -215,4 +233,5 @@ class ContinuousScheduler:
             n_steps=self.step_count,
             policy=self.policy.name, closed_batch=self.closed_batch,
             deadline_s=self.deadline_s,
-            spec_stats=getattr(self.engine, "spec_stats", None))
+            spec_stats=getattr(self.engine, "spec_stats", None),
+            engine_metrics=self.engine.metrics_registry().snapshot())

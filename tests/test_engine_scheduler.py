@@ -114,6 +114,13 @@ def test_pages_reclaimed_after_generate(setup, async_frontier):
     # and again, on a second call (warm radix)
     eng.generate(["q alpha beta"])
     assert eng.alloc.used == used_before
+    # stats() lifetime counters agree with occupancy: alloc/free balance
+    # explains in-use pages, pin/unpin balance explains outstanding pins,
+    # and the high-water mark stayed inside the pool
+    s = eng.alloc.stats()
+    assert s["allocs"] - s["frees"] == s["in_use"]
+    assert s["pins"] - s["unpins"] == sum(eng.alloc.pinned.values())
+    assert s["in_use"] <= s["peak_in_use"] <= s["n_pages"]
 
 
 def test_serial_engine_reclaims_pages(setup):

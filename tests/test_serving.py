@@ -66,6 +66,19 @@ def drain(eng):
     return results
 
 
+def assert_pool_invariants(alloc):
+    """PageAllocator.stats() lifetime-counter invariants that hold at
+    any quiescent point (see its docstring): alloc/free balance
+    explains occupancy, pin/unpin balance explains outstanding pins,
+    and the high-water mark stayed inside the pool."""
+    s = alloc.stats()
+    assert s["allocs"] - s["frees"] == s["in_use"], s
+    assert s["pins"] - s["unpins"] == sum(alloc.pinned.values()), s
+    assert s["in_use"] >= s["used"], s
+    assert 0 <= s["peak_in_use"] <= s["n_pages"], s
+    assert s["peak_in_use"] >= s["in_use"], s
+
+
 # --------------------------------------------------- step-level API --------
 def test_step_api_matches_generate(setup):
     """generate() is a thin wrapper over add_request/step: a manual
@@ -255,6 +268,11 @@ def test_preemption_recovers_without_leaks(setup):
     assert eng.alloc.used == 0                       # no leaked pages
     # every page still resident is explained by a radix cache pin
     assert eng.alloc.pages_in_use == eng.alloc.pinned_pages
+    assert_pool_invariants(eng.alloc)
+    # preemption forced real page churn: frees happened, and the pool
+    # high-water mark proves the pressure was genuine
+    s = eng.alloc.stats()
+    assert s["frees"] > 0 and s["peak_in_use"] >= s["in_use"]
     # the preempted request kept its rid and finished
     assert all(r.state == "done" for r in sched.finished)
 
@@ -268,6 +286,7 @@ def test_generate_survives_preemption(setup):
     assert len(res) == 2 and all(r.ok for r in res)
     assert eng.preemptions > 0
     assert eng.alloc.used == 0
+    assert_pool_invariants(eng.alloc)
 
 
 def test_radix_pins_evicted_before_preemption(setup):
@@ -293,6 +312,10 @@ def test_radix_pins_evicted_before_preemption(setup):
     assert eng.radix.evictions > 0
     assert eng.preemptions == 0
     assert eng.alloc.used == 0
+    assert_pool_invariants(eng.alloc)
+    # radix evictions show up as unpins in the allocator's lifetime
+    # counters — the eviction path is fully accounted
+    assert eng.alloc.stats()["unpins"] > 0
 
 
 def test_scheduler_fails_oversized_request_keeps_serving(setup):

@@ -247,6 +247,11 @@ def test_rejected_drafts_roll_back_pages(setup, monkeypatch):
     assert on.spec_stats["accepted"] < on.spec_stats["proposed"]
     assert on.alloc.used == used0
     assert on.alloc.pages_in_use == on.alloc.used + on.alloc.pinned_pages
+    # rejected-draft rollback never touches the page counters: the
+    # lifetime alloc/free balance still explains occupancy exactly
+    s = on.alloc.stats()
+    assert s["allocs"] - s["frees"] == s["in_use"]
+    assert s["in_use"] <= s["peak_in_use"] <= s["n_pages"]
 
 
 @pytest.mark.parametrize("drafter", ["ngram", "radix"])
@@ -265,6 +270,10 @@ def test_spec_preemption_mid_draft(setup, drafter):
     assert _texts(res) == _texts(ref)
     assert tiny.preemptions > 0, "pool was not small enough to preempt"
     assert tiny.alloc.used == used0
+    s = tiny.alloc.stats()
+    assert s["allocs"] - s["frees"] == s["in_use"]
+    assert s["pins"] - s["unpins"] == sum(tiny.alloc.pinned.values())
+    assert s["in_use"] <= s["peak_in_use"] <= s["n_pages"]
 
 
 def test_spec_serving_reports_draft_metrics(setup):

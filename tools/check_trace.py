@@ -1,0 +1,177 @@
+#!/usr/bin/env python3
+"""Validate a recorded engine trace file (``medverse-trace/1`` JSONL).
+
+Stdlib-only (CI-safe, no repo imports) structural checker for the
+traces ``MedVerseEngine.dump_trace`` / ``serve.py --trace`` /
+``benchmarks/serving_bench.py`` write:
+
+* header line present with the expected ``schema`` tag;
+* every event is well-formed: known phase (``B E I X C``), a name and
+  category, ``ts`` (wall seconds, >= 0 and non-decreasing per emission
+  order is NOT required — ``X`` events backdate to their start), and a
+  ``step`` clock value that never decreases across events;
+* every ``B`` span is closed by a matching ``E`` on its ``(rid,
+  track)`` lane, LIFO per lane, none left open at EOF;
+* cross-references resolve: every ``rid`` carried by a stream/spec
+  event belongs to a request whose ``request`` span was opened; every
+  ``page`` id in a kvcache event lies inside the pool recorded in the
+  header (``meta.n_pages``);
+* ``X`` events carry a non-negative ``dur``.
+
+Usage::
+
+    python tools/check_trace.py results/serving_trace.jsonl [more...]
+
+Exit 0 and a one-line summary per file when clean; exit 1 with every
+problem listed otherwise. A sibling ``*.chrome.json`` export, when
+present, is additionally checked to parse as Chrome trace-event JSON
+with a non-empty ``traceEvents`` list.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+from typing import Dict, List, Optional, Tuple
+
+SCHEMA = "medverse-trace/1"
+PHASES = ("B", "E", "I", "X", "C")
+
+
+def load(path: str) -> Tuple[dict, List[dict]]:
+    with open(path) as f:
+        lines = [json.loads(ln) for ln in f if ln.strip()]
+    if not lines:
+        raise ValueError("empty file")
+    header, events = lines[0], lines[1:]
+    if header.get("schema") != SCHEMA:
+        raise ValueError(
+            f"bad header schema: {header.get('schema')!r} "
+            f"(want {SCHEMA!r})")
+    return header, events
+
+
+def check_events(header: dict, events: List[dict]) -> List[str]:
+    problems: List[str] = []
+    n_pages: Optional[int] = header.get("meta", {}).get("n_pages")
+    open_spans: Dict[tuple, List[str]] = {}
+    requests_seen = set()
+    last_step = -1
+    for i, ev in enumerate(events):
+        where = f"event {i}"
+        ph = ev.get("ph")
+        if ph not in PHASES:
+            problems.append(f"{where}: unknown phase {ph!r}")
+            continue
+        if not isinstance(ev.get("name"), str) or not ev["name"]:
+            problems.append(f"{where}: missing name")
+        if not isinstance(ev.get("cat"), str) or not ev["cat"]:
+            problems.append(f"{where}: missing cat")
+        ts = ev.get("ts")
+        if not isinstance(ts, (int, float)) or ts < 0:
+            problems.append(f"{where}: bad ts {ts!r}")
+        step = ev.get("step")
+        if not isinstance(step, int) or step < 0:
+            problems.append(f"{where}: bad step {step!r}")
+        else:
+            if step < last_step:
+                problems.append(
+                    f"{where}: step clock went backwards "
+                    f"({last_step} -> {step})")
+            last_step = max(last_step, step)
+        if ph == "X" and not (isinstance(ev.get("dur"), (int, float))
+                              and ev["dur"] >= 0):
+            problems.append(f"{where}: X without non-negative dur")
+        if ph == "C" and not isinstance(ev.get("values"), dict):
+            problems.append(f"{where}: C without values dict")
+        rid = ev.get("rid")
+        name = ev["name"] if isinstance(ev.get("name"), str) else ""
+        # request lifecycle / cross-refs
+        if ph == "B" and name == "request":
+            requests_seen.add(rid)
+        elif rid is not None and ev.get("cat") in ("stream", "spec"):
+            if rid not in requests_seen:
+                problems.append(
+                    f"{where}: {name} references rid={rid} with no "
+                    f"request span opened")
+        page = ev.get("args", {}).get("page")
+        if page is not None and n_pages is not None:
+            if not (isinstance(page, int) and 0 <= page < n_pages):
+                problems.append(
+                    f"{where}: page id {page!r} outside pool "
+                    f"[0, {n_pages})")
+        # span matching, LIFO per (rid, track) lane
+        if ph in ("B", "E"):
+            lane = (rid, ev.get("track"))
+            stack = open_spans.setdefault(lane, [])
+            if ph == "B":
+                stack.append(name)
+            elif not stack:
+                problems.append(
+                    f"{where}: E {name!r} on lane {lane} with no open "
+                    f"span")
+            elif stack[-1] != name:
+                problems.append(
+                    f"{where}: E {name!r} closes {stack[-1]!r} on lane "
+                    f"{lane}")
+                stack.pop()
+            else:
+                stack.pop()
+    for lane, stack in open_spans.items():
+        for name in stack:
+            problems.append(f"span {name!r} on lane {lane} never closed")
+    return problems
+
+
+def check_chrome(path: str) -> List[str]:
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        return [f"{path}: unreadable chrome export ({e})"]
+    evs = doc.get("traceEvents")
+    if not isinstance(evs, list) or not evs:
+        return [f"{path}: no traceEvents"]
+    bad = [e for e in evs if "ph" not in e or "name" not in e
+           or "pid" not in e]
+    if bad:
+        return [f"{path}: {len(bad)} chrome events missing "
+                f"ph/name/pid"]
+    return []
+
+
+def check_file(path: str) -> List[str]:
+    try:
+        header, events = load(path)
+    except (OSError, ValueError) as e:
+        return [f"{path}: {e}"]
+    problems = [f"{path}: {p}" for p in check_events(header, events)]
+    base = path[: -len(".jsonl")] if path.endswith(".jsonl") else path
+    chrome = base + ".chrome.json"
+    if os.path.exists(chrome):
+        problems += check_chrome(chrome)
+    if not problems:
+        n_req = sum(1 for ev in events
+                    if ev.get("ph") == "B" and ev.get("name") == "request")
+        final_step = max((e.get("step", 0) for e in events), default=0)
+        print(f"{path}: OK — {len(events)} events, {n_req} requests, "
+              f"final step {final_step}")
+    return problems
+
+
+def main(argv: List[str]) -> int:
+    if not argv:
+        print(__doc__.strip().splitlines()[0])
+        print("usage: python tools/check_trace.py TRACE.jsonl [...]")
+        return 2
+    problems: List[str] = []
+    for path in argv:
+        problems += check_file(path)
+    for p in problems:
+        print(f"FAIL: {p}")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
