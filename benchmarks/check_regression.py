@@ -42,10 +42,18 @@ class Metric:
     # collapse the relative tolerance to an exact-zero requirement —
     # reduction order differs by ulps across BLAS/XLA versions
     abs_floor: float = 0.0
+    # exact metrics must match the baseline bit-for-bit in either
+    # direction (improvements included): the analytic cost counters are
+    # integers computed from the schedule, so *any* drift means the
+    # schedule changed and the baseline must be refreshed deliberately
+    exact: bool = False
 
     def check(self, base: float, new: float):
         """(ok, threshold) — fail only on regression beyond rel_tol;
-        improvements never fail."""
+        improvements never fail (except ``exact``, which pins both
+        directions)."""
+        if self.exact:
+            return new == base, base
         if self.higher_better:
             thr = base * (1.0 - self.rel_tol)
             return new >= thr, thr
@@ -99,6 +107,29 @@ SPECS = {
         Metric("trace.n_events", False, 0.15),
         Metric("trace.event_counts.B:stream", True, 0.10),
         Metric("trace.event_counts.B:stream", False, 0.10),
+        # analytic cost model (repro.obs.cost): exact integers computed
+        # from the dispatched schedule — bucket widths, page runs, GQA
+        # geometry — never from a device clock, so they are pinned
+        # bit-for-bit. Any change (either direction) means the engine
+        # does different work per token and must be an explicit,
+        # reviewed baseline refresh. This is the gate every perf PR
+        # (int8 KV, chunked prefill, cascade attention) is judged by.
+        Metric("trace.cost.prefill_attn_flops", False, 0.0, exact=True),
+        Metric("trace.cost.decode_attn_flops", False, 0.0, exact=True),
+        Metric("trace.cost.spec_verify_attn_flops", False, 0.0,
+               exact=True),
+        Metric("trace.cost.kv_read_bytes", False, 0.0, exact=True),
+        Metric("trace.cost.kv_write_bytes", False, 0.0, exact=True),
+        Metric("trace.cost.page_gathers", False, 0.0, exact=True),
+        Metric("trace.cost.useful_kv", False, 0.0, exact=True),
+        Metric("trace.cost.padded_kv", False, 0.0, exact=True),
+        Metric("trace.cost.padded_rows", False, 0.0, exact=True),
+        Metric("trace.cost.compiles", False, 0.0, exact=True),
+        # the bucket-ladder invariant: no XLA compile after warmup,
+        # enforced as == 0 (baseline is 0, exact match required; the
+        # bench additionally asserts this in-process)
+        Metric("trace.cost.recompiles_after_warmup", False, 0.0,
+               exact=True),
     ],
     "BENCH_spec.json": [
         # all step/count metrics: deterministic on a given commit (the
@@ -124,7 +155,8 @@ SPECS = {
 GUARDS = {
     "BENCH_kernel.json": ["config.smoke", "paged_decode.shape"],
     "BENCH_serving.json": ["config.n_requests", "config.rate",
-                           "config.clock", "config.max_slots"],
+                           "config.clock", "config.max_slots",
+                           "config.attention_backend"],
     "BENCH_spec.json": ["config.n_requests", "config.n_unique",
                         "config.draft_len", "config.max_slots"],
 }
@@ -252,15 +284,21 @@ def check() -> int:
                 failures.append(f"{fname}:{m.path}: missing from results")
                 continue
             ok, thr = m.check(base, new)
-            arrow = "↑" if m.higher_better else "↓"
+            arrow = "=" if m.exact else ("↑" if m.higher_better else "↓")
             status = "ok" if ok else "REGRESSION"
+            tol = "exact" if m.exact else f"tol {m.rel_tol:.0%}"
             rows.append(f"  {status:>10}  {fname}:{m.path} {arrow} "
                         f"base={base:.4g} new={new:.4g} "
-                        f"(tol {m.rel_tol:.0%}, limit {thr:.4g})")
+                        f"({tol}, limit {thr:.4g})")
             if not ok:
+                detail = ("exact metric drifted — the schedule changed; "
+                          "refresh baselines deliberately if intended"
+                          if m.exact else
+                          f"worse than {m.rel_tol:.0%} tolerance, "
+                          f"limit {thr:.4g}")
                 failures.append(
                     f"{fname}:{m.path}: {new:.4g} vs baseline {base:.4g} "
-                    f"(worse than {m.rel_tol:.0%} tolerance, limit {thr:.4g})")
+                    f"({detail})")
     print("bench-regression report:")
     for r in rows:
         print(r)

@@ -117,8 +117,22 @@ def _traced_pass(art, workload, ecfg, clock: str, fcfs_report: dict):
     timelines = request_timelines(eng.obs.events)
     max_overlap = max(
         (tl.max_overlap for tl in timelines.values()), default=0)
+    # analytic cost section: exact machine-independent integers the
+    # regression gate pins bit-for-bit (not banded)
+    cost = dict(eng.cost.summary(),
+                padding_waste_ratio=round(
+                    eng.cost.padding_waste_ratio(), 6),
+                compiles=eng.compiles.compiles_total,
+                recompiles_after_warmup=(
+                    eng.compiles.recompiles_after_warmup))
+    assert cost["recompiles_after_warmup"] == 0, (
+        f"bucket-ladder invariant broken: "
+        f"{eng.compiles.keys[-cost['recompiles_after_warmup']:]} "
+        f"compiled after warmup")
     print(f"# traced fcfs pass: {len(eng.obs.events)} events, "
-          f"{len(problems)} span problems, max_overlap={max_overlap} "
+          f"{len(problems)} span problems, max_overlap={max_overlap}, "
+          f"padding_waste={cost['padding_waste_ratio']:.1%}, "
+          f"recompiles_after_warmup={cost['recompiles_after_warmup']} "
           f"-> {os.path.relpath(jsonl_path)}, "
           f"{os.path.relpath(chrome_path)}")
     return {
@@ -127,6 +141,7 @@ def _traced_pass(art, workload, ecfg, clock: str, fcfs_report: dict):
         "span_problems": len(problems),
         "max_overlap": max_overlap,
         "n_steps": rep.n_steps,
+        "cost": cost,
         "jsonl": os.path.relpath(jsonl_path),
         "chrome": os.path.relpath(chrome_path),
     }
@@ -183,6 +198,7 @@ def run(art=None, n_requests: int = 16, rate: float = 4.0,
     os.makedirs(RESULTS, exist_ok=True)
     out = {"config": {"n_requests": n_requests, "rate": rate,
                       "clock": clock, "max_slots": ecfg.max_slots,
+                      "attention_backend": ecfg.attention_backend,
                       "shapes": SHAPES},
            "runs": reports,
            "trace": trace_section}

@@ -102,6 +102,7 @@ from ..core.petri import ColoredToken, PetriNet, PetriScheduler
 from ..core.plan import PlanParseError, parse_plan
 from ..data.tokenizer import EOS, Tokenizer
 from ..models.config import ModelConfig
+from ..obs.cost import CompileWatcher, CostGeometry, CostLedger
 from ..obs.metrics import MetricsRegistry
 from ..obs.trace import NULL_RECORDER, TraceRecorder
 from .kvcache import (IndexChain, OutOfPagesError, PageAllocator, PoolConfig,
@@ -171,6 +172,15 @@ class EngineConfig:
     # it on or off (pinned by tests/test_obs.py). Default off — every
     # hook short-circuits through the no-op recorder.
     trace: Optional[str] = None
+    # Analytic cost accounting (src/repro/obs/cost.py): per-step
+    # attention FLOPs, KV bytes, page gathers, and padding waste,
+    # attributed per phase (prefill / decode / spec_verify) and per
+    # request from engine-native integers — machine-independent, so CI
+    # gates the totals exactly. Plain-int adds on the host path (same
+    # cost class as bucket_hist); passive like tracing (pinned by
+    # tests/test_cost.py). Default on — the live /metrics endpoint and
+    # ServingReport.engine read it.
+    cost_accounting: bool = True
 
 
 @dataclasses.dataclass
@@ -321,6 +331,15 @@ class MedVerseEngine:
                 async_frontier=self.ecfg.async_frontier)
             self.alloc.tracer = self.obs
             self.radix.tracer = self.obs
+        # analytic cost model + compiled-shape watcher (obs/cost.py):
+        # both are plain-int host accounting over values the hot path
+        # already computes, independent of tracing — the watcher is
+        # always on (its counters back the bucket-ladder CI gate)
+        self.cost: Optional[CostLedger] = (
+            CostLedger(CostGeometry.from_model(
+                cfg, pc.page_size, self.ecfg.max_slots, pc.dtype))
+            if self.ecfg.cost_accounting else None)
+        self.compiles = CompileWatcher()
         # speculative decoding: one drafter shared by every stream; the
         # radix drafter reads (and populates, via generation caching)
         # the same radix tree the prefill cache uses
@@ -384,11 +403,19 @@ class MedVerseEngine:
         ids_p = np.zeros((bucket,), np.int32)
         ids_p[:n] = ids
         pos_p = np.arange(bucket, dtype=np.int32)
+        new_shape = self.compiles.note(
+            ("prefill", self.ecfg.attention_backend, bucket))
+        t_c = obs.now() if (obs.enabled and new_shape) else 0.0
         logits, ks, vs = prefill_forward(
             self.params, jnp.asarray(ids_p)[None],
             jnp.asarray(pos_p)[None], self.cfg, jnp.int32(n),
             backend=self.ecfg.attention_backend,
             interpret=self.ecfg.kernel_interpret)
+        if new_shape and obs.enabled:
+            obs.complete("compile", "compile", t_c, kind="prefill",
+                         backend=self.ecfg.attention_backend,
+                         bucket=bucket,
+                         after_warmup=self.compiles.warmup_step is not None)
         # write only positions [m, n): the cached prefix already holds
         # identical K/V; prefix and padding rows get the out-of-range
         # sentinel slot and are dropped device-side
@@ -412,6 +439,11 @@ class MedVerseEngine:
         sp = req.sampling
         st.next_input = int(sample_token(
             np.asarray(logits), sp.temperature, req.rng, sp.top_k, sp.top_p))
+        if self.cost is not None:
+            self.cost.note_prefill(req.rid, n_prompt=n, n_cached=m,
+                                   bucket=bucket)
+            if obs.enabled:
+                self.cost.emit(obs)
         if obs.enabled:
             obs.complete("prefill", "engine", t0, rid=req.rid,
                          n_prompt=n, n_cached=m, bucket=bucket)
@@ -657,7 +689,10 @@ class MedVerseEngine:
         self._drop_streams(rid)
         self._release_request(req)
         if self.obs.enabled:
-            self.obs.end("request", "request", rid=rid, reason="aborted")
+            extra = ({"cost": self.cost.request_summary(rid)}
+                     if self.cost is not None else {})
+            self.obs.end("request", "request", rid=rid, reason="aborted",
+                         **extra)
         return True
 
     def _block_capacity(self, st: _Stream) -> int:
@@ -794,6 +829,7 @@ class MedVerseEngine:
         t_step0 = time.monotonic()
         events: List[StepEvent] = []
         tokens, q_pos, chains, lens = [], [], [], []
+        rows_meta: List[Tuple[Optional[int], int, bool]] = []
         spans: List[int] = []          # base row index of each block
         for st, rows in zip(batch, blocks):
             spans.append(len(tokens))
@@ -806,7 +842,14 @@ class MedVerseEngine:
                 # (pool K/V is written before attention per layer), and
                 # later rows are hidden by the same mask
                 lens.append(st.chain.length)
-        logits_np = self._decode(tokens, q_pos, slots, chains, lens)
+                # cost attribution: row j's mask exposes the chain minus
+                # the block rows after it; rows past the committed input
+                # are the speculative (draft / extra forced) portion
+                rows_meta.append((st.rid,
+                                  st.chain.length - (len(rows) - 1 - j),
+                                  j > 0))
+        logits_np = self._decode(tokens, q_pos, slots, chains, lens,
+                                 rows_meta)
         n = len(batch)
         step_dt = time.monotonic() - t_step0
         spec_on = self._drafter is not None
@@ -892,12 +935,17 @@ class MedVerseEngine:
                 del self._reqs[req.rid]
                 self._preempt_count.pop(req.rid, None)
                 if obs.enabled:
+                    extra = ({"cost": self.cost.request_summary(req.rid)}
+                             if self.cost is not None else {})
                     obs.end("request", "request", rid=req.rid,
                             n_tokens=result.n_tokens,
-                            critical_path_tokens=result.critical_path_tokens)
+                            critical_path_tokens=result.critical_path_tokens,
+                            **extra)
                 events.append(StepEvent(kind="done", rid=req.rid,
                                         result=result))
         if obs.enabled:
+            if self.cost is not None:
+                self.cost.emit(obs)
             obs.counter("kv_pages", {"used": self.alloc.used,
                                      "pinned": self.alloc.pinned_pages,
                                      "free": len(self.alloc.free)})
@@ -909,14 +957,19 @@ class MedVerseEngine:
     # ---------------------------------------------------- batched decode ---
     def _decode(self, tokens: List[int], q_pos: List[int],
                 slots: List[int], chains: List[IndexChain],
-                lens: List[int]) -> np.ndarray:
+                lens: List[int],
+                rows_meta: Optional[List[Tuple[Optional[int], int, bool]]]
+                = None) -> np.ndarray:
         """One batched decode call over ``n <= max_slots`` streams,
         dispatched to the configured attention backend. Handles
         power-of-two bucketing (chain width for dense, page count for
         pallas — the kernel's shapes depend only on the page table
         width), batch-row padding with the out-of-range write-slot
-        sentinel, and the bucket histograms. Returns host logits (n, V).
-        """
+        sentinel, the bucket histograms, the compiled-shape watcher and
+        the analytic cost ledger. ``rows_meta`` is the cost attribution
+        per row — ``(rid, visible_kv_len, is_spec_row)`` — defaulting
+        to unattributed non-spec rows over the full chain length.
+        Returns host logits (n, V)."""
         n = len(tokens)
         obs = self.obs
         t0 = obs.now() if obs.enabled else 0.0
@@ -943,6 +996,10 @@ class MedVerseEngine:
             for i, (pgs, cnt) in enumerate(runs):
                 pt[i, : pgs.size] = pgs
                 pv[i, : pgs.size] = cnt
+            # the pallas decode's compiled shape depends on the
+            # page-table width, not the chain bucket
+            new_shape = self.compiles.note(("decode", "pallas", p_bucket))
+            t_c = obs.now() if (obs.enabled and new_shape) else 0.0
             logits, self.pool["k"], self.pool["v"], self.pool["pos"] = (
                 paged_decode(
                     self.params, self.pool["k"], self.pool["v"],
@@ -952,8 +1009,11 @@ class MedVerseEngine:
                     page_valid=jnp.asarray(pv),
                     page_size=self.pc.page_size,
                     interpret=self.ecfg.kernel_interpret))
+            pages = [r[0].size for r in runs]
         else:
             padded = [ch.padded(s_bucket) for ch in chains]
+            new_shape = self.compiles.note(("decode", "dense", s_bucket))
+            t_c = obs.now() if (obs.enabled and new_shape) else 0.0
             logits, self.pool["k"], self.pool["v"], self.pool["pos"] = (
                 paged_decode(
                     self.params, self.pool["k"], self.pool["v"],
@@ -961,7 +1021,20 @@ class MedVerseEngine:
                     jnp.asarray(slots_p),
                     jnp.asarray(np.pad(np.stack(padded), [(0, pad), (0, 0)])),
                     arr(lens), self.cfg))
+            p_bucket = 0
+            pages = [len(ch.pages) for ch in chains]
         out = np.asarray(logits[:n])   # host sync: dur covers the device
+        if new_shape and obs.enabled:
+            obs.complete(
+                "compile", "compile", t_c, kind="decode",
+                backend=self.ecfg.attention_backend,
+                chain_bucket=s_bucket, page_bucket=p_bucket,
+                after_warmup=self.compiles.warmup_step is not None)
+        if self.cost is not None:
+            if rows_meta is None:
+                rows_meta = [(None, ln, False) for ln in lens]
+            self.cost.note_decode(rows_meta, s_bucket, pages,
+                                  self.ecfg.attention_backend)
         if obs.enabled:
             obs.complete("decode", "engine", t0, n_rows=n,
                          bucket=s_bucket,
@@ -1100,19 +1173,24 @@ class MedVerseEngine:
         for k, v in self.spec_stats.items():
             reg.counter(f"spec_{k}_total",
                         f"speculative decoding: lifetime {k}").inc(v)
-        if self.bucket_hist:
-            h = reg.histogram("decode_chain_bucket",
-                              buckets=self.bucket_ladder(),
-                              help="decode steps per chain bucket width")
-            for b in sorted(self.bucket_hist):
-                h.observe(b, self.bucket_hist[b])
-        if self.page_bucket_hist:
-            h = reg.histogram("decode_page_bucket",
-                              buckets=sorted(self.page_bucket_hist),
-                              help="pallas decode steps per page-table "
-                                   "width")
-            for b in sorted(self.page_bucket_hist):
-                h.observe(b, self.page_bucket_hist[b])
+        # bucket histograms: always exported (empty ones with zero
+        # counts) over the *configured* ladder, so /metrics scrapes see
+        # stable bucket boundaries across runs and restarts
+        ladder = self.bucket_ladder()
+        h = reg.histogram("decode_chain_bucket", buckets=ladder,
+                          help="decode steps per chain bucket width")
+        for b in sorted(self.bucket_hist):
+            h.observe(b, self.bucket_hist[b])
+        page_ladder = sorted({self._page_bucket(-(-s // self.pc.page_size))
+                              for s in ladder})
+        h = reg.histogram("decode_page_bucket", buckets=page_ladder,
+                          help="pallas decode steps per page-table "
+                               "width")
+        for b in sorted(self.page_bucket_hist):
+            h.observe(b, self.page_bucket_hist[b])
+        self.compiles.register(reg)
+        if self.cost is not None:
+            self.cost.register(reg)
         reg.gauge("active_streams",
                   "decode streams currently live").set(len(self._active))
         reg.gauge("live_requests",
@@ -1202,18 +1280,27 @@ class MedVerseEngine:
 
     def warmup(self, buckets: Optional[List[int]] = None) -> List[int]:
         """Pre-compile the batched decode step for each chain bucket so
-        no request pays XLA compilation mid-generation. Under the pallas
-        backend the compiled shapes depend on the page-table width, so
-        each chain bucket warms its corresponding page bucket (chains
-        with many partial pages — deep joins — may still compile one
-        wider table at runtime). Returns the warmed bucket widths."""
+        no request pays XLA compilation mid-generation, plus the first
+        prefill bucket (``PREFILL_BUCKET``-token prompts — longer
+        prompts legitimately compile their wider bucket on first
+        arrival). Under the pallas backend the compiled decode shapes
+        depend on the page-table width, so each chain bucket warms its
+        corresponding page bucket (chains with many partial pages —
+        deep joins — may still compile one wider table at runtime; the
+        ``CompileWatcher`` counts exactly that as
+        ``recompiles_after_warmup``, which CI gates to zero on the
+        smoke workload). Returns the warmed bucket widths."""
+        obs = self.obs
         buckets = buckets or self.bucket_ladder()
         pg = self.alloc.alloc_page()  # scratch page, freed afterwards
         slot = pg * self.pc.page_size
         n = self.ecfg.max_slots
+        backend = self.ecfg.attention_backend
         for s in buckets:
-            if self.ecfg.attention_backend == "pallas":
+            t_c = obs.now() if obs.enabled else 0.0
+            if backend == "pallas":
                 pb = self._page_bucket(-(-s // self.pc.page_size))
+                new_shape = self.compiles.note(("decode", "pallas", pb))
                 pt = np.zeros((n, pb), np.int32)
                 pv = np.zeros((n, pb), np.int32)
                 pt[:, 0] = pg
@@ -1230,6 +1317,8 @@ class MedVerseEngine:
                         page_size=self.pc.page_size,
                         interpret=self.ecfg.kernel_interpret))
             else:
+                pb = 0
+                new_shape = self.compiles.note(("decode", "dense", s))
                 chain = np.zeros((n, s), np.int32)
                 chain[:, 0] = slot
                 _, self.pool["k"], self.pool["v"], self.pool["pos"] = paged_decode(
@@ -1237,7 +1326,33 @@ class MedVerseEngine:
                     jnp.zeros((n,), jnp.int32), jnp.zeros((n,), jnp.int32),
                     jnp.full((n,), slot, jnp.int32), jnp.asarray(chain),
                     jnp.ones((n,), jnp.int32), self.cfg)
+            if new_shape and obs.enabled:
+                obs.complete("compile", "compile", t_c, kind="decode",
+                             backend=backend, chain_bucket=s,
+                             page_bucket=pb,
+                             after_warmup=self.compiles.warmup_step
+                             is not None)
         self.alloc.decref(pg)
+        # warm the smallest prefill bucket too (pure forward, no pool
+        # write), so short-prompt arrivals mid-run never compile
+        if self.compiles.note(("prefill", backend, self.PREFILL_BUCKET)):
+            t_c = obs.now() if obs.enabled else 0.0
+            prefill_forward(
+                self.params,
+                jnp.zeros((1, self.PREFILL_BUCKET), jnp.int32),
+                jnp.arange(self.PREFILL_BUCKET, dtype=jnp.int32)[None],
+                self.cfg, jnp.int32(1), backend=backend,
+                interpret=self.ecfg.kernel_interpret)
+            if obs.enabled:
+                obs.complete("compile", "compile", t_c, kind="prefill",
+                             backend=backend,
+                             bucket=self.PREFILL_BUCKET,
+                             after_warmup=self.compiles.warmup_step
+                             is not None)
+        self.compiles.finish_warmup(self.total_iters)
+        if obs.enabled:
+            obs.meta(warmup_step=self.compiles.warmup_step,
+                     warmup_buckets=list(buckets))
         return buckets
 
     def _finish(self, req: _Request) -> GenResult:
@@ -1289,7 +1404,8 @@ class SerialEngine:
                 tok_in = st.forced.popleft() if st.forced else st.next_input
                 slot = st.chain.next_slot()
                 logits = eng._decode([tok_in], [st.q_pos], [slot],
-                                     [st.chain], [st.chain.length])
+                                     [st.chain], [st.chain.length],
+                                     [(req.rid, st.chain.length, False)])
                 st.generated.append(tok_in)
                 st.q_pos += 1
                 n += 1

@@ -22,8 +22,10 @@ Observability: ``--trace PATH`` records the structured engine trace and
 writes it to ``PATH`` (native JSONL) plus ``PATH``'s Chrome trace-event
 twin, loadable at https://ui.perfetto.dev, and prints the per-request
 DAG timeline summary; ``--metrics`` prints the engine metrics registry
-in Prometheus text format after the run. Both work in closed-batch and
-``--continuous`` mode.
+in Prometheus text format after the run; ``--metrics-port N`` serves
+that registry live over HTTP while the run is in flight (``/metrics``
+Prometheus text — cost counters, bucket histograms, compile counters —
+plus ``/healthz``). All work in closed-batch and ``--continuous`` mode.
 
 On CPU use --host-mesh --smoke; the same entry point drives real pods.
 """
@@ -94,6 +96,14 @@ def run_engine(args) -> None:
         ecfg.attention_backend = args.attention_backend
     ecfg.kernel_interpret = not args.compiled_kernels
     eng = MedVerseEngine(params, cfg, tok, ecfg)
+    metrics_srv = None
+    if args.metrics_port is not None:
+        from ..obs.server import MetricsServer
+        metrics_srv = MetricsServer(
+            lambda: eng.metrics_registry().to_prom_text(),
+            port=args.metrics_port).start()
+        print(f"metrics: {metrics_srv.address}/metrics "
+              f"(healthz: {metrics_srv.address}/healthz)")
     buckets = eng.warmup()
     spec_str = (f" speculative={ecfg.drafter}/{ecfg.draft_len}"
                 if ecfg.speculative else "")
@@ -102,21 +112,26 @@ def run_engine(args) -> None:
           f"attention={ecfg.attention_backend}"
           f"{'' if ecfg.kernel_interpret else ' (compiled)'}"
           f"{spec_str} warmed buckets={buckets}")
-    if args.continuous:
-        _run_continuous(args, eng, prompts, plan)
+    try:
+        if args.continuous:
+            _run_continuous(args, eng, prompts, plan)
+            _print_observability(args, eng)
+            return
+        t0 = time.time()
+        res = eng.generate(prompts)
+        dt = time.time() - t0
+        n_tok = sum(r.n_tokens for r in res)
+        print(f"{len(res)} requests, {n_tok} tokens in {dt:.2f}s "
+              f"({n_tok/dt:.1f} tok/s, {eng.last_iters} decode iters); "
+              f"radix hits={eng.radix.hits} misses={eng.radix.misses}; "
+              f"pages used={eng.alloc.used} "
+              f"pinned={eng.alloc.pinned_pages}; "
+              f"buckets={dict(sorted(eng.bucket_hist.items()))}")
+        _print_spec_stats(eng)
         _print_observability(args, eng)
-        return
-    t0 = time.time()
-    res = eng.generate(prompts)
-    dt = time.time() - t0
-    n_tok = sum(r.n_tokens for r in res)
-    print(f"{len(res)} requests, {n_tok} tokens in {dt:.2f}s "
-          f"({n_tok/dt:.1f} tok/s, {eng.last_iters} decode iters); "
-          f"radix hits={eng.radix.hits} misses={eng.radix.misses}; "
-          f"pages used={eng.alloc.used} pinned={eng.alloc.pinned_pages}; "
-          f"buckets={dict(sorted(eng.bucket_hist.items()))}")
-    _print_spec_stats(eng)
-    _print_observability(args, eng)
+    finally:
+        if metrics_srv is not None:
+            metrics_srv.close()
 
 
 def _print_observability(args, eng) -> None:
@@ -225,6 +240,11 @@ def main():
                     help="engine mode: print the engine metrics "
                          "registry (Prometheus text format) after "
                          "the run")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    metavar="PORT",
+                    help="engine mode: serve /metrics (Prometheus "
+                         "text) and /healthz on 127.0.0.1:PORT for "
+                         "the duration of the run (0 = ephemeral)")
     args = ap.parse_args()
 
     if args.engine:

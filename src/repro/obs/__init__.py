@@ -8,20 +8,30 @@ and how to open a trace in Perfetto. The default recorder is a no-op
 turn recording on.
 """
 
+from .cost import (COST_FIELDS, COST_PHASES, CompileWatcher, CostGeometry,
+                   CostLedger)
 from .metrics import (Counter, Gauge, Histogram, MetricsRegistry,
                       percentile_summary)
+from .server import PROM_CONTENT_TYPE, MetricsServer
 from .timeline import (RequestTimeline, StreamTimeline, request_timelines,
                        summarize)
 from .trace import (NULL_RECORDER, SCHEMA, NullRecorder, TraceRecorder,
                     load_jsonl, to_chrome, validate_spans)
 
 __all__ = [
+    "COST_FIELDS",
+    "COST_PHASES",
+    "CompileWatcher",
+    "CostGeometry",
+    "CostLedger",
     "Counter",
     "Gauge",
     "Histogram",
     "MetricsRegistry",
+    "MetricsServer",
     "NULL_RECORDER",
     "NullRecorder",
+    "PROM_CONTENT_TYPE",
     "RequestTimeline",
     "SCHEMA",
     "StreamTimeline",

@@ -1,0 +1,342 @@
+"""Analytic cost accounting for the MedVerse engine.
+
+The trace layer (``trace.py``) records *when* things happen; this module
+records *what they cost* — computed from engine-native quantities only
+(chain lengths, bucket widths, page runs, GQA head geometry), never from
+device measurements, so every number is a machine-independent integer
+that ``benchmarks/check_regression.py`` can gate **exactly** on the
+smoke workload.
+
+Model
+-----
+
+Work is counted in **(query, key) pair visits summed over layers** (the
+unit both attention FLOPs and KV reads are linear in). With ``H`` query
+heads, ``K`` KV heads, head dim ``D`` and per-token KV footprint
+``2*K*D*itemsize`` bytes per layer:
+
+* ``attn_flops = 4*H*D * pairs`` — QK^T plus AV matmul FLOPs (the
+  softmax itself is O(pairs) and omitted, as is the MLP: the paged KV
+  path is what the engine's scheduling decisions change).
+* ``kv_read_bytes = 2*K*D*itemsize * pairs`` — K and V streamed from
+  the paged pool (decode only; prefill attends over in-flight
+  activations, so its pool reads are 0).
+* ``kv_write_bytes = 2*K*D*itemsize * n_layers`` per token actually
+  written (decode: every batched row; prefill: only the non-cached
+  positions ``[m, n)`` — radix hits show up here as saved writes).
+
+Per decode step the *computed* pairs follow the dispatched schedule:
+
+* dense backend: every one of the ``max_slots`` batch rows (including
+  padding rows) gathers and attends over the full ``s_bucket`` chain
+  width, per layer;
+* pallas backend: each real row streams its whole page run
+  (``n_pages * page_size`` positions); padding rows have no valid pages
+  and are skipped by the kernel.
+
+*Useful* pairs are the positions a row's mask actually exposes
+(``min(visible, window)`` per layer); ``padded_kv = computed - useful``
+is the padding waste the bucket ladder pays for its bounded compile
+count, and ``padded_rows`` counts batch rows carrying no stream.
+Prefill computes the full ``bucket x bucket`` score matrix per layer
+(the dense reference schedule; the chunked Pallas kernel computes at
+most this), useful is the causal lower triangle over the ``n`` prompt
+tokens.
+
+Every quantity is attributed to a **phase** — ``prefill`` /
+``decode`` (row 0 of each stream's block) / ``spec_verify`` (draft and
+extra forced rows) — and to the owning request. Totals land in the
+engine's :class:`~repro.obs.metrics.MetricsRegistry` (snapshot time,
+zero hot-path cost beyond plain-int adds) and, when tracing is on, in
+Perfetto counter tracks (cumulative, one sample per decode step /
+prefill) plus a per-request summary on the ``request`` end event.
+
+:class:`CompileWatcher` is the compile-observability half: the engine
+notes the static shape key of every jitted dispatch (prefill bucket;
+chain bucket for dense decode, page-table bucket for pallas). A key's
+first use is a ``compile`` X-span in the trace, and any first use after
+``warmup()`` finished increments ``recompiles_after_warmup`` — the
+bucket-ladder invariant ("no request hits XLA mid-generation") as a
+counter CI gates to zero. Keys are tracked per engine, which makes the
+counter deterministic and machine-independent (the process-global XLA
+jit cache is not: a second engine in the same process would hit it).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+#: Cost attribution phases, in reporting order.
+COST_PHASES = ("prefill", "decode", "spec_verify")
+
+#: Integer fields accumulated per phase (see module docstring).
+COST_FIELDS = ("steps", "rows", "attn_flops", "kv_read_bytes",
+               "kv_write_bytes", "page_gathers", "useful_kv", "padded_kv",
+               "padded_rows")
+
+_DTYPE_BYTES = {"float64": 8, "float32": 4, "float16": 2, "bfloat16": 2,
+                "int8": 1, "uint8": 1}
+
+
+@dataclasses.dataclass(frozen=True)
+class CostGeometry:
+    """Immutable geometry the analytic formulas need: GQA head layout,
+    per-layer attention windows (0 = global), KV dtype width, and the
+    engine's batch/page shape."""
+
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    windows: Tuple[int, ...]      # per layer; 0 = global attention
+    dtype_bytes: int
+    page_size: int
+    max_slots: int
+
+    @classmethod
+    def from_model(cls, cfg, page_size: int, max_slots: int,
+                   dtype: Optional[str] = None) -> "CostGeometry":
+        from ..models.config import ATTN, LOCAL_ATTN
+        windows = []
+        for kind in cfg.layer_kinds:
+            if kind == ATTN:
+                windows.append(0)
+            elif kind == LOCAL_ATTN:
+                windows.append(int(cfg.sliding_window))
+            # non-attention layers hold no paged KV (the engine asserts
+            # supports_paged, so this branch is future-proofing only)
+        return cls(
+            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.resolved_head_dim, windows=tuple(windows),
+            dtype_bytes=_DTYPE_BYTES.get(str(dtype or cfg.dtype), 4),
+            page_size=page_size, max_slots=max_slots)
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.windows)
+
+    @property
+    def flops_per_pair(self) -> int:
+        """QK^T + AV matmul FLOPs per (query, key) pair per layer."""
+        return 4 * self.n_heads * self.head_dim
+
+    @property
+    def kv_bytes_per_pair(self) -> int:
+        """K + V bytes read per (query, key) pair per layer."""
+        return 2 * self.n_kv_heads * self.head_dim * self.dtype_bytes
+
+    @property
+    def kv_token_write_bytes(self) -> int:
+        """K + V bytes written per token across all layers."""
+        return self.n_layers * 2 * self.n_kv_heads * self.head_dim \
+            * self.dtype_bytes
+
+    def useful_pairs(self, visible: int) -> int:
+        """Mask-exposed pairs for one query row over ``visible`` KV
+        positions, summed over layers (local layers clamp to their
+        window)."""
+        return sum(min(visible, w) if w else visible
+                   for w in self.windows)
+
+    def causal_pairs(self, n: int) -> int:
+        """Causal lower-triangle pairs over an ``n``-token prefix,
+        summed over layers."""
+        total = 0
+        for w in self.windows:
+            if w and w < n:
+                # first w rows are triangular, the rest see w positions
+                total += w * (w + 1) // 2 + (n - w) * w
+            else:
+                total += n * (n + 1) // 2
+        return total
+
+
+class CostLedger:
+    """Per-phase / per-request accumulator over :class:`CostGeometry`.
+
+    The engine calls :meth:`note_prefill` once per prompt prefill and
+    :meth:`note_decode` once per batched decode step; both are pure
+    Python-int arithmetic over values the hot path already holds, so
+    cost accounting is passive — it never touches the schedule, RNG, or
+    page accounting (pinned by ``tests/test_cost.py``).
+    """
+
+    def __init__(self, geom: CostGeometry):
+        self.geom = geom
+        self.totals: Dict[str, Dict[str, int]] = {
+            ph: {f: 0 for f in COST_FIELDS} for ph in COST_PHASES}
+        self.requests: Dict[int, Dict[str, Dict[str, int]]] = {}
+
+    # --------------------------------------------------------- accumulate --
+    def _acc(self, rid: Optional[int], phase: str, **fields: int) -> None:
+        tot = self.totals[phase]
+        for k, v in fields.items():
+            tot[k] += v
+        if rid is not None:
+            per = self.requests.get(rid)
+            if per is None:
+                per = self.requests[rid] = {
+                    ph: {f: 0 for f in COST_FIELDS} for ph in COST_PHASES}
+            dst = per[phase]
+            for k, v in fields.items():
+                dst[k] += v
+
+    def note_prefill(self, rid: Optional[int], n_prompt: int,
+                     n_cached: int, bucket: int) -> None:
+        """One prompt prefill: full ``bucket x bucket`` score matrix per
+        layer computed, causal pairs over the ``n_prompt`` real tokens
+        useful, K/V written only for the non-cached ``[m, n)`` span."""
+        g = self.geom
+        computed = g.n_layers * bucket * bucket
+        useful = g.causal_pairs(n_prompt)
+        self._acc(
+            rid, "prefill", steps=1, rows=n_prompt,
+            attn_flops=g.flops_per_pair * computed,
+            kv_read_bytes=0,
+            kv_write_bytes=(n_prompt - n_cached) * g.kv_token_write_bytes,
+            page_gathers=0, useful_kv=useful,
+            padded_kv=computed - useful, padded_rows=0)
+
+    def note_decode(self, rows: Sequence[Tuple[Optional[int], int, bool]],
+                    s_bucket: int, pages: Sequence[int],
+                    backend: str) -> None:
+        """One batched decode step.
+
+        ``rows`` is the real (non-padding) batch: ``(rid, visible,
+        is_spec)`` per row, where ``visible`` is the KV length the row's
+        position mask exposes and ``is_spec`` marks speculative rows
+        (draft proposals and extra forced rows beyond the stream's
+        committed input). ``pages[i]`` is row i's distinct-page count.
+        Dense attends ``s_bucket`` wide for all ``max_slots`` batch rows
+        (padding rows included); pallas streams each real row's whole
+        page run and skips padding rows.
+        """
+        g = self.geom
+        n = len(rows)
+        pad_rows = g.max_slots - n
+        spec_seen = False
+        for (rid, visible, is_spec), n_pages in zip(rows, pages):
+            phase = "spec_verify" if is_spec else "decode"
+            spec_seen = spec_seen or is_spec
+            computed = (g.n_layers * n_pages * g.page_size
+                        if backend == "pallas"
+                        else g.n_layers * s_bucket)
+            useful = g.useful_pairs(visible)
+            self._acc(
+                rid, phase, rows=1,
+                attn_flops=g.flops_per_pair * computed,
+                kv_read_bytes=g.kv_bytes_per_pair * computed,
+                kv_write_bytes=g.kv_token_write_bytes,
+                page_gathers=n_pages, useful_kv=useful,
+                padded_kv=computed - useful)
+        # batch padding: dense computes (and reads) the full bucket for
+        # padding rows too; pallas skips them (no valid pages)
+        if pad_rows and backend != "pallas":
+            waste = self.geom.n_layers * pad_rows * s_bucket
+            self._acc(None, "decode",
+                      attn_flops=g.flops_per_pair * waste,
+                      kv_read_bytes=g.kv_bytes_per_pair * waste,
+                      padded_kv=waste)
+        self._acc(None, "decode", steps=1, padded_rows=pad_rows)
+        if spec_seen:
+            self._acc(None, "spec_verify", steps=1)
+
+    # ------------------------------------------------------------ export ---
+    def total(self, field: str) -> int:
+        return sum(self.totals[ph][field] for ph in COST_PHASES)
+
+    def padding_waste_ratio(self) -> float:
+        """Padded share of all computed (query, key) pairs."""
+        computed = self.total("useful_kv") + self.total("padded_kv")
+        return self.total("padded_kv") / computed if computed else 0.0
+
+    def emit(self, obs) -> None:
+        """Sample the cumulative totals as Perfetto counter tracks
+        (called by the engine once per decode step and per prefill, so
+        the series are step-indexed and deterministic)."""
+        t = self.totals
+        obs.counter("cost_attn_flops",
+                    {ph: t[ph]["attn_flops"] for ph in COST_PHASES})
+        obs.counter("cost_kv_bytes", {"read": self.total("kv_read_bytes"),
+                                      "written": self.total("kv_write_bytes")})
+        obs.counter("cost_padding", {"useful_kv": self.total("useful_kv"),
+                                     "padded_kv": self.total("padded_kv"),
+                                     "padded_rows": self.total("padded_rows")})
+        obs.counter("cost_pages", {"gathers": self.total("page_gathers")})
+
+    def request_summary(self, rid: int) -> Dict[str, Dict[str, int]]:
+        """Per-phase cost dict for one request (attached to its
+        ``request`` end event; empty phases included for schema
+        stability)."""
+        per = self.requests.get(rid)
+        if per is None:
+            per = {ph: {f: 0 for f in COST_FIELDS} for ph in COST_PHASES}
+        return {ph: dict(per[ph]) for ph in COST_PHASES}
+
+    def summary(self) -> Dict[str, int]:
+        """Flat lifetime summary, the shape the serving bench records
+        (and ``check_regression.py`` gates exactly)."""
+        out: Dict[str, int] = {}
+        for ph in COST_PHASES:
+            out[f"{ph}_attn_flops"] = self.totals[ph]["attn_flops"]
+        for f in ("kv_read_bytes", "kv_write_bytes", "page_gathers",
+                  "useful_kv", "padded_kv", "padded_rows"):
+            out[f] = self.total(f)
+        return out
+
+    def register(self, reg) -> None:
+        """Load the lifetime totals into a
+        :class:`~repro.obs.metrics.MetricsRegistry` (snapshot-time, like
+        every other engine counter)."""
+        for ph in COST_PHASES:
+            for f in COST_FIELDS:
+                reg.counter(
+                    f"cost_{ph}_{f}_total",
+                    f"analytic cost model: lifetime {f} in the {ph} "
+                    f"phase").inc(self.totals[ph][f])
+        reg.gauge("padding_waste_ratio",
+                  "padded share of computed (query, key) attention "
+                  "pairs").set(self.padding_waste_ratio())
+
+
+class CompileWatcher:
+    """Engine-level compiled-shape tracking (see module docstring).
+
+    ``note(key)`` returns True the first time a static shape key is
+    dispatched — the engine then wraps that call in a ``compile`` X-span
+    — and counts first uses after :meth:`finish_warmup` as
+    ``recompiles_after_warmup`` (gated to zero on the smoke workload).
+    """
+
+    def __init__(self):
+        self.seen: set = set()
+        self.keys: List[tuple] = []       # first-use order
+        self.compiles_total = 0
+        self.recompiles_after_warmup = 0
+        self.warmup_step: Optional[int] = None
+
+    def note(self, key: tuple) -> bool:
+        if key in self.seen:
+            return False
+        self.seen.add(key)
+        self.keys.append(key)
+        self.compiles_total += 1
+        if self.warmup_step is not None:
+            self.recompiles_after_warmup += 1
+        return True
+
+    def finish_warmup(self, step: int) -> None:
+        """Mark the warmup ladder complete; key first-uses from here on
+        are recompiles. Idempotent — re-warming keeps the original
+        boundary."""
+        if self.warmup_step is None:
+            self.warmup_step = int(step)
+
+    def register(self, reg) -> None:
+        reg.counter("compiles_total",
+                    "distinct compiled shape keys dispatched").inc(
+                        self.compiles_total)
+        reg.counter("recompiles_after_warmup_total",
+                    "shape keys first dispatched after the warmup "
+                    "ladder finished (bucket-ladder invariant: 0)").inc(
+                        self.recompiles_after_warmup)

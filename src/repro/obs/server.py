@@ -1,0 +1,93 @@
+"""Live metrics endpoint: a stdlib ``http.server`` thread exposing the
+engine's :class:`~repro.obs.metrics.MetricsRegistry` while it serves.
+
+Two routes:
+
+* ``GET /metrics`` — Prometheus text exposition (the registry's
+  ``to_prom_text()``: cost counters, compile counters, the chain/page
+  bucket histograms, KV page gauges, ...). The render callback runs per
+  scrape, so the response always reflects the engine's current plain-int
+  counters — no sampling thread, no hot-path cost between scrapes.
+* ``GET /healthz`` — ``ok`` (liveness).
+
+Anything else is a 404. The server binds ``127.0.0.1`` by default and
+daemonizes its thread, so an exiting process never hangs on it. Wired
+into ``serve.py --metrics-port``; usable standalone::
+
+    srv = MetricsServer(lambda: eng.metrics_registry().to_prom_text(),
+                        port=9095)
+    srv.start()
+    ...
+    srv.close()
+
+``port=0`` binds an ephemeral port (tests); read it back from
+``srv.port`` after ``start()``.
+"""
+
+from __future__ import annotations
+
+import threading
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Callable
+
+#: Prometheus text exposition content type (text format 0.0.4).
+PROM_CONTENT_TYPE = "text/plain; version=0.0.4; charset=utf-8"
+
+
+class MetricsServer:
+    """Background HTTP server for ``/metrics`` + ``/healthz``."""
+
+    def __init__(self, render: Callable[[], str],
+                 host: str = "127.0.0.1", port: int = 0):
+        self._render = render
+        outer = self
+
+        class Handler(BaseHTTPRequestHandler):
+            def do_GET(self):  # noqa: N802 (http.server API)
+                if self.path == "/metrics":
+                    try:
+                        body = outer._render().encode()
+                    except Exception as e:  # render must not kill serving
+                        self.send_error(500, str(e))
+                        return
+                    self.send_response(200)
+                    self.send_header("Content-Type", PROM_CONTENT_TYPE)
+                    self.send_header("Content-Length", str(len(body)))
+                    self.end_headers()
+                    self.wfile.write(body)
+                elif self.path == "/healthz":
+                    body = b"ok\n"
+                    self.send_response(200)
+                    self.send_header("Content-Type", "text/plain")
+                    self.send_header("Content-Length", str(len(body)))
+                    self.end_headers()
+                    self.wfile.write(body)
+                else:
+                    self.send_error(404, "unknown path (try /metrics)")
+
+            def log_message(self, fmt, *args):  # silence per-request logs
+                pass
+
+        self._httpd = ThreadingHTTPServer((host, port), Handler)
+        self._httpd.daemon_threads = True
+        self._thread = threading.Thread(
+            target=self._httpd.serve_forever, name="metrics-server",
+            daemon=True)
+
+    @property
+    def port(self) -> int:
+        return self._httpd.server_address[1]
+
+    @property
+    def address(self) -> str:
+        host, port = self._httpd.server_address[:2]
+        return f"http://{host}:{port}"
+
+    def start(self) -> "MetricsServer":
+        self._thread.start()
+        return self
+
+    def close(self) -> None:
+        self._httpd.shutdown()
+        self._httpd.server_close()
+        self._thread.join(timeout=5)

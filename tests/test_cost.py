@@ -1,0 +1,303 @@
+"""Analytic cost accounting tests: geometry/ledger formula units, the
+engine-integration contract — cost accounting is *passive* (temp-0
+output and step counts bit-identical on/off), its totals close exactly
+against an independent reconstruction from the bucket histogram, the
+CompileWatcher enforces the bucket-ladder invariant (zero recompiles
+after a full warmup, a detected recompile after a partial one) — plus
+the live ``/metrics`` endpoint (scrape, parse, assert cost counters)
+and the offline ``tools/trace_view.py`` renderer."""
+
+import subprocess
+import sys
+import urllib.error
+import urllib.request
+
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.data.tokenizer import Tokenizer
+from repro.engine import EngineConfig, MedVerseEngine
+from repro.models import init_params
+from repro.obs import (COST_FIELDS, COST_PHASES, CompileWatcher,
+                       CostGeometry, CostLedger, MetricsServer)
+
+CFG = get_config("medverse-7b", smoke=True)
+
+DIAMOND = ("<Plan> "
+           "<Outline> Transient Step 1: q -> A ; Dependency: [] </Outline> "
+           "<Outline> Transient Step 2: q -> B ; Dependency: [] </Outline> "
+           "<Outline> Transient Step 3: A , B -> C ; Dependency: [1, 2] "
+           "</Outline> </Plan>")
+
+
+def make_tok():
+    corpus = ["alpha beta gamma delta epsilon zeta eta theta iota kappa "
+              "Transient Step 1: 2: 3: 4: 5: 6: 7: 8: "
+              "Dependency: [] [1] [2] [1, 2] "
+              "A -> B ; C D q x y z"]
+    return Tokenizer.train(corpus)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    tok = make_tok()
+    params = init_params(jax.random.PRNGKey(0), CFG)
+    return tok, params
+
+
+def make_engine(params, tok, **kw):
+    base = dict(max_slots=4, page_size=4, n_pages=512, max_chain_len=256,
+                max_step_tokens=6, max_conclusion_tokens=6)
+    base.update(kw)
+    return MedVerseEngine(params, CFG, tok, EngineConfig(**base))
+
+
+# ------------------------------------------------------- geometry units ----
+def test_geometry_from_model():
+    g = CostGeometry.from_model(CFG, page_size=4, max_slots=4)
+    assert g.n_layers == CFG.n_layers
+    assert g.windows == (0,) * CFG.n_layers          # smoke: all global
+    assert g.flops_per_pair == 4 * CFG.n_heads * CFG.resolved_head_dim
+    assert g.kv_bytes_per_pair == (2 * CFG.n_kv_heads
+                                   * CFG.resolved_head_dim * 4)  # float32
+    assert g.kv_token_write_bytes == CFG.n_layers * g.kv_bytes_per_pair
+    # global windows: every visible position is useful, causal pairs
+    # are the lower triangle
+    assert g.useful_pairs(10) == CFG.n_layers * 10
+    assert g.causal_pairs(5) == CFG.n_layers * 15
+
+
+def test_geometry_windowed_pairs():
+    g = CostGeometry(n_heads=2, n_kv_heads=1, head_dim=4,
+                     windows=(0, 3), dtype_bytes=2, page_size=4,
+                     max_slots=2)
+    assert g.useful_pairs(10) == 10 + 3              # global + clamped
+    assert g.useful_pairs(2) == 2 + 2                # window not reached
+    # windowed causal over n=5: rows see 1,2,3 then 3,3 positions
+    assert g.causal_pairs(5) == 15 + (6 + 2 * 3)
+    assert g.kv_bytes_per_pair == 2 * 1 * 4 * 2
+
+
+def test_ledger_prefill_and_decode_arithmetic():
+    g = CostGeometry(n_heads=1, n_kv_heads=1, head_dim=1,
+                     windows=(0,), dtype_bytes=1, page_size=4,
+                     max_slots=2)
+    led = CostLedger(g)
+    # prefill: bucket 8, 5 real tokens, 2 cached
+    led.note_prefill(rid=0, n_prompt=5, n_cached=2, bucket=8)
+    p = led.totals["prefill"]
+    assert p["attn_flops"] == 4 * 64                 # 4*H*D * bucket^2
+    assert p["useful_kv"] == 15 and p["padded_kv"] == 64 - 15
+    assert p["kv_write_bytes"] == 3 * 2              # (5-2) * 2*K*D*B
+    assert p["kv_read_bytes"] == 0
+    # dense decode: one real row (visible 6) in a 2-slot batch, bucket 8
+    led.note_decode([(0, 6, False)], s_bucket=8, pages=[2],
+                    backend="dense")
+    d = led.totals["decode"]
+    assert d["attn_flops"] == 4 * (8 + 8)            # real row + pad row
+    assert d["useful_kv"] == 6 and d["padded_kv"] == (8 - 6) + 8
+    assert d["padded_rows"] == 1 and d["page_gathers"] == 2
+    assert d["steps"] == 1 and d["rows"] == 1
+    # pallas decode: pad rows skipped, compute follows the page run
+    led2 = CostLedger(g)
+    led2.note_decode([(1, 6, True)], s_bucket=8, pages=[2],
+                     backend="pallas")
+    assert led2.totals["spec_verify"]["attn_flops"] == 4 * 2 * 4
+    assert led2.totals["spec_verify"]["padded_kv"] == 8 - 6
+    assert led2.totals["decode"]["padded_rows"] == 1
+    assert led2.totals["spec_verify"]["steps"] == 1
+    # per-request attribution mirrors the totals it contributed
+    assert led.requests[0]["prefill"]["useful_kv"] == 15
+    summary = led.summary()
+    assert summary["useful_kv"] == 15 + 6
+    assert set(led.request_summary(99)) == set(COST_PHASES)  # zero-filled
+    assert 0.0 < led.padding_waste_ratio() < 1.0
+
+
+# -------------------------------------------------- engine integration -----
+def test_cost_accounting_is_passive(setup):
+    """Temp-0 output text and decode-iteration counts are bit-identical
+    with cost accounting on or off, and the off engine exports no cost
+    metrics."""
+    tok, params = setup
+    prompts = ["q alpha beta", "q beta gamma"]
+    on = make_engine(params, tok, plan_override=DIAMOND)
+    r_on = on.generate(prompts)
+    off = make_engine(params, tok, plan_override=DIAMOND,
+                      cost_accounting=False)
+    r_off = off.generate(prompts)
+    assert [r.text for r in r_on] == [r.text for r in r_off]
+    assert on.total_iters == off.total_iters
+    assert off.cost is None
+    snap_off = off.metrics_registry().snapshot()
+    assert not any(k.startswith("medverse_cost_") for k in snap_off)
+    snap_on = on.metrics_registry().snapshot()
+    assert snap_on["medverse_cost_decode_steps_total"] == on.total_iters
+
+
+def test_dense_totals_close_against_bucket_hist(setup):
+    """Independent reconstruction: under the dense backend every decode
+    step computes max_slots * s_bucket pairs per layer, so the ledger's
+    decode+spec FLOPs must equal flops_per_pair * n_layers * max_slots *
+    sum(bucket * count) exactly — same for KV reads."""
+    tok, params = setup
+    eng = make_engine(params, tok, plan_override=DIAMOND,
+                      attention_backend="dense")
+    eng.generate(["q alpha beta", "q beta gamma"])
+    g = eng.cost.geom
+    pairs = g.n_layers * g.max_slots * sum(
+        b * n for b, n in eng.bucket_hist.items())
+    decode_flops = (eng.cost.totals["decode"]["attn_flops"]
+                    + eng.cost.totals["spec_verify"]["attn_flops"])
+    assert decode_flops == g.flops_per_pair * pairs
+    decode_reads = (eng.cost.totals["decode"]["kv_read_bytes"]
+                    + eng.cost.totals["spec_verify"]["kv_read_bytes"])
+    assert decode_reads == g.kv_bytes_per_pair * pairs
+    # useful + padded = computed, on every phase
+    for ph in COST_PHASES:
+        t = eng.cost.totals[ph]
+        assert t["useful_kv"] >= 0 and t["padded_kv"] >= 0
+    assert eng.cost.total("useful_kv") + eng.cost.total("padded_kv") \
+        == pairs + eng.cost.totals["prefill"]["useful_kv"] \
+        + eng.cost.totals["prefill"]["padded_kv"]
+    # decode writes exactly one token per real row
+    assert eng.cost.total("kv_write_bytes") % g.kv_token_write_bytes == 0
+
+
+def test_cost_totals_deterministic_across_runs(setup):
+    tok, params = setup
+    summaries = []
+    for _ in range(2):
+        eng = make_engine(params, tok, plan_override=DIAMOND)
+        eng.generate(["q alpha beta", "q beta gamma"])
+        summaries.append(eng.cost.summary())
+    assert summaries[0] == summaries[1]
+
+
+@pytest.mark.parametrize("backend", ["dense", "pallas"])
+def test_no_recompiles_after_full_warmup(setup, backend):
+    tok, params = setup
+    eng = make_engine(params, tok, plan_override=DIAMOND,
+                      attention_backend=backend, kernel_interpret=True)
+    eng.warmup()
+    assert eng.compiles.warmup_step is not None
+    eng.generate(["q alpha beta", "q beta gamma"])
+    assert eng.compiles.recompiles_after_warmup == 0
+    snap = eng.metrics_registry().snapshot()
+    assert snap["medverse_recompiles_after_warmup_total"] == 0
+    assert snap["medverse_compiles_total"] == eng.compiles.compiles_total
+
+
+def test_partial_warmup_detects_recompile(setup):
+    """Warming only the smallest bucket makes the first 128-wide dispatch
+    a detected recompile — the counter CI gates to zero actually fires
+    when the invariant is broken."""
+    tok, params = setup
+    eng = make_engine(params, tok, plan_override=DIAMOND,
+                      attention_backend="dense")
+    eng.warmup(buckets=[64])
+    eng.generate(["q alpha beta", "q beta gamma"])
+    assert 128 in eng.bucket_hist                    # wide bucket reached
+    assert eng.compiles.recompiles_after_warmup >= 1
+    assert ("decode", "dense", 128) in eng.compiles.seen
+
+
+def test_compile_watcher_units():
+    w = CompileWatcher()
+    assert w.note(("decode", "dense", 64)) is True
+    assert w.note(("decode", "dense", 64)) is False   # cached
+    w.finish_warmup(step=5)
+    w.finish_warmup(step=9)                           # idempotent
+    assert w.warmup_step == 5
+    assert w.note(("decode", "dense", 128)) is True
+    assert w.compiles_total == 2
+    assert w.recompiles_after_warmup == 1
+
+
+def test_request_end_event_carries_cost(setup):
+    tok, params = setup
+    eng = make_engine(params, tok, plan_override=DIAMOND, trace=True)
+    eng.generate(["q alpha beta"])
+    ends = [ev for ev in eng.obs.events
+            if ev["ph"] == "E" and ev["name"] == "request"]
+    assert len(ends) == 1
+    cost = ends[0]["args"]["cost"]
+    assert set(cost) == set(COST_PHASES)
+    assert set(cost["decode"]) == set(COST_FIELDS)
+    assert cost["decode"]["useful_kv"] > 0
+    assert cost["prefill"]["steps"] == 1
+    # counter tracks sampled: cumulative cost series present in trace
+    names = {ev["name"] for ev in eng.obs.events if ev["ph"] == "C"}
+    assert {"cost_attn_flops", "cost_kv_bytes", "cost_padding",
+            "cost_pages"} <= names
+
+
+# ------------------------------------------------------ /metrics server ----
+def _scrape(url: str) -> str:
+    with urllib.request.urlopen(url, timeout=10) as resp:
+        assert resp.status == 200
+        return resp.read().decode()
+
+
+def test_metrics_server_scrape_and_parse(setup):
+    """Start the live endpoint against a served engine, scrape /metrics,
+    assert the cost counters are present and every sample line parses as
+    Prometheus text exposition."""
+    tok, params = setup
+    eng = make_engine(params, tok, plan_override=DIAMOND)
+    eng.generate(["q alpha beta"])
+    srv = MetricsServer(
+        lambda: eng.metrics_registry().to_prom_text(), port=0).start()
+    try:
+        assert _scrape(f"{srv.address}/healthz").strip() == "ok"
+        text = _scrape(f"{srv.address}/metrics")
+        assert "medverse_cost_decode_attn_flops_total" in text
+        assert "medverse_cost_prefill_kv_write_bytes_total" in text
+        assert "medverse_recompiles_after_warmup_total" in text
+        assert "medverse_padding_waste_ratio" in text
+        assert "medverse_decode_chain_bucket_bucket" in text  # histogram
+        samples = 0
+        for ln in text.splitlines():
+            if not ln or ln.startswith("#"):
+                continue
+            name_part, _, value = ln.rpartition(" ")
+            assert name_part and name_part[0].isalpha(), ln
+            float(value)                          # parseable sample
+            samples += 1
+        assert samples > 20
+        # unknown path -> 404
+        with pytest.raises(urllib.error.HTTPError) as exc:
+            _scrape(f"{srv.address}/nope")
+        assert exc.value.code == 404
+        # cost counters in the scrape match the ledger exactly
+        flops = eng.cost.totals["decode"]["attn_flops"]
+        assert f"medverse_cost_decode_attn_flops_total {flops}" in text
+    finally:
+        srv.close()
+
+
+# ------------------------------------------------------- trace_view CLI ----
+def test_trace_view_render_and_self_diff(setup, tmp_path):
+    tok, params = setup
+    path = str(tmp_path / "t.jsonl")
+    eng = make_engine(params, tok, plan_override=DIAMOND, trace=path)
+    eng.warmup()
+    eng.generate(["q alpha beta", "q beta gamma"])
+    eng.dump_trace()
+    proc = subprocess.run(
+        [sys.executable, "tools/trace_view.py", path],
+        capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    out = proc.stdout
+    assert "prefill" in out and "spec_verify" in out
+    assert "after warmup 0" in out
+    # flops in the table match the ledger
+    assert f"{eng.cost.totals['decode']['attn_flops']:,}" in out
+    # a trace diffed against itself reports no changes
+    proc = subprocess.run(
+        [sys.executable, "tools/trace_view.py", "--diff", path, path],
+        capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "<-- changed" not in proc.stdout
+    assert "recompiles after warmup" in proc.stdout

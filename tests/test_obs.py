@@ -350,7 +350,57 @@ def test_scheduler_trace_and_report_merge(setup):
     assert rep.engine is not None
     assert rep.engine["medverse_decode_steps_total"] == eng.total_iters
     assert rep.engine["medverse_kv_pages_total"] == 512
+    # the bucket histograms and padding-waste ratio ship with it
+    assert rep.engine["medverse_decode_chain_bucket"]["count"] == sum(
+        eng.bucket_hist.values())
+    assert "medverse_decode_page_bucket" in rep.engine
+    assert 0.0 <= rep.engine["medverse_padding_waste_ratio"] < 1.0
     assert "engine" in rep.to_dict()
+
+
+def test_trace_abort_midflight_balanced(setup, tmp_path):
+    """Aborting a request mid-flight must leave the trace structurally
+    clean: every opened span closed, the external validator green, the
+    Chrome export balanced, and the aborted request's end event still
+    carrying its cost summary."""
+    tok, params = setup
+    path = str(tmp_path / "abort.jsonl")
+    eng = make_engine(params, tok, plan_override=DIAMOND, trace=path)
+    rid = eng.add_request("q alpha beta")
+    for _ in range(8):
+        eng.step()
+    assert eng.n_requests() == 1           # genuinely mid-flight
+    assert eng.abort(rid)
+    assert validate_spans(eng.obs.events) == []
+    ends = [ev for ev in eng.obs.events
+            if ev["ph"] == "E" and ev["name"] == "request"]
+    assert len(ends) == 1 and ends[0]["args"]["reason"] == "aborted"
+    assert ends[0]["args"]["cost"]["decode"]["rows"] > 0
+    jsonl_path, chrome_path = eng.dump_trace()
+    proc = subprocess.run(
+        [sys.executable, "tools/check_trace.py", jsonl_path],
+        capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    with open(chrome_path) as f:
+        chrome = json.load(f)
+    assert chrome["traceEvents"]
+
+
+def test_trace_preemption_balanced(setup, tmp_path):
+    """Preemption (page-pool pressure evicts and restarts a request)
+    must also keep spans balanced and the trace file valid."""
+    tok, params = setup
+    path = str(tmp_path / "preempt.jsonl")
+    eng = make_engine(params, tok, plan_override=DIAMOND, trace=path,
+                      n_pages=40)
+    eng.generate(["q alpha beta", "q beta gamma"])
+    assert eng.preemptions > 0             # the path actually exercised
+    assert validate_spans(eng.obs.events) == []
+    jsonl_path, _ = eng.dump_trace()
+    proc = subprocess.run(
+        [sys.executable, "tools/check_trace.py", jsonl_path],
+        capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
 
 
 def test_metrics_registry_matches_engine_counters(setup):

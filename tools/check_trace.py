@@ -12,6 +12,12 @@ traces ``MedVerseEngine.dump_trace`` / ``serve.py --trace`` /
   ``step`` clock value that never decreases across events;
 * every ``B`` span is closed by a matching ``E`` on its ``(rid,
   track)`` lane, LIFO per lane, none left open at EOF;
+* counter series are step-monotone per series name, and the cumulative
+  analytic-cost series (``cost_*``) additionally never decrease in
+  value;
+* when the warmup ladder ran (``meta.warmup_step`` present), every
+  ``compile`` X-span sits at a step <= that boundary — the engine's
+  "no recompiles after warmup" invariant, checkable offline;
 * cross-references resolve: every ``rid`` carried by a stream/spec
   event belongs to a request whose ``request`` span was opened; every
   ``page`` id in a kvcache event lies inside the pool recorded in the
@@ -54,10 +60,15 @@ def load(path: str) -> Tuple[dict, List[dict]]:
 
 def check_events(header: dict, events: List[dict]) -> List[str]:
     problems: List[str] = []
-    n_pages: Optional[int] = header.get("meta", {}).get("n_pages")
+    meta = header.get("meta", {})
+    n_pages: Optional[int] = meta.get("n_pages")
+    warmup_step: Optional[int] = meta.get("warmup_step")
     open_spans: Dict[tuple, List[str]] = {}
     requests_seen = set()
     last_step = -1
+    # per counter-series state: last step and (cost_* only) last values
+    counter_step: Dict[str, int] = {}
+    counter_vals: Dict[str, dict] = {}
     for i, ev in enumerate(events):
         where = f"event {i}"
         ph = ev.get("ph")
@@ -83,8 +94,38 @@ def check_events(header: dict, events: List[dict]) -> List[str]:
         if ph == "X" and not (isinstance(ev.get("dur"), (int, float))
                               and ev["dur"] >= 0):
             problems.append(f"{where}: X without non-negative dur")
-        if ph == "C" and not isinstance(ev.get("values"), dict):
-            problems.append(f"{where}: C without values dict")
+        if ph == "C":
+            vals = ev.get("values")
+            if not isinstance(vals, dict):
+                problems.append(f"{where}: C without values dict")
+            else:
+                name_c = ev.get("name", "")
+                if isinstance(step, int):
+                    prev = counter_step.get(name_c, -1)
+                    if step < prev:
+                        problems.append(
+                            f"{where}: counter {name_c!r} series went "
+                            f"backwards in step ({prev} -> {step})")
+                    counter_step[name_c] = max(prev, step)
+                if name_c.startswith("cost_"):
+                    prev_vals = counter_vals.get(name_c, {})
+                    for k, v in vals.items():
+                        pv = prev_vals.get(k)
+                        if (pv is not None
+                                and isinstance(v, (int, float))
+                                and v < pv):
+                            problems.append(
+                                f"{where}: cumulative counter "
+                                f"{name_c!r}[{k!r}] decreased "
+                                f"({pv} -> {v})")
+                    counter_vals[name_c] = dict(vals)
+        if (ph == "X" and ev.get("name") == "compile"
+                and warmup_step is not None
+                and isinstance(step, int) and step > warmup_step):
+            problems.append(
+                f"{where}: compile span at step {step} after the "
+                f"warmup ladder finished (meta.warmup_step="
+                f"{warmup_step})")
         rid = ev.get("rid")
         name = ev["name"] if isinstance(ev.get("name"), str) else ""
         # request lifecycle / cross-refs

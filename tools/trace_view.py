@@ -1,0 +1,220 @@
+#!/usr/bin/env python3
+"""Offline cost/time attribution for engine traces (``medverse-trace/1``).
+
+Stdlib-only (CI-safe, no repo imports). Reads the JSONL trace that
+``MedVerseEngine.dump_trace`` / ``serve.py --trace`` /
+``benchmarks/serving_bench.py`` write and renders the analytic cost
+model's counter tracks (``cost_*``, emitted by ``repro.obs.cost``) plus
+the X-span wall times into a per-phase attribution table::
+
+    python tools/trace_view.py results/serving_trace.jsonl
+
+    phase        steps    time_s   attn_flops    kv_read_b   kv_write_b
+    prefill          2  0.012345     16777216            0       294912
+    decode          81  0.456789     47900672     47900672       497664
+    spec_verify      0         -            0            0            0
+    ...
+
+Two attribution sources, deliberately separate: *cost* columns come
+from the deterministic counter series (machine-independent integers —
+what CI gates), *time* columns from X-span durations (wall clock —
+machine-dependent, never gated). ``spec_verify`` rows run inside the
+batched decode dispatch, so their wall time is included in ``decode``
+and shown as ``-``.
+
+``--diff A.jsonl B.jsonl`` compares two traces (e.g. before/after a
+perf change) and reports deltas in steps, FLOPs, KV bytes, padding
+waste, page gathers, compiles/recompiles, and event counts.
+
+Exit 0 always for readable traces; exit 1 on unreadable/absent input.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Optional, Tuple
+
+SCHEMA = "medverse-trace/1"
+PHASES = ("prefill", "decode", "spec_verify")
+
+
+def load(path: str) -> Tuple[dict, List[dict]]:
+    with open(path) as f:
+        lines = [json.loads(ln) for ln in f if ln.strip()]
+    if not lines or lines[0].get("schema") != SCHEMA:
+        raise ValueError(f"{path}: not a {SCHEMA} trace file")
+    return lines[0], lines[1:]
+
+
+def analyze(header: dict, events: List[dict]) -> dict:
+    """Reduce a trace to the attribution numbers the renderers use.
+
+    Cost counters are cumulative, so the *last* sample of each series
+    is its lifetime total; wall time per phase is the sum of matching
+    X-span durations.
+    """
+    counters: Dict[str, dict] = {}     # name -> last values dict
+    span_time: Dict[str, float] = {}   # X name -> summed dur
+    span_count: Dict[str, int] = {}
+    compiles = 0
+    compiles_after_warmup = 0
+    warmup_step = header.get("meta", {}).get("warmup_step")
+    n_requests = 0
+    final_step = 0
+    for ev in events:
+        ph = ev.get("ph")
+        final_step = max(final_step, ev.get("step", 0))
+        if ph == "C":
+            counters[ev["name"]] = ev.get("values", {})
+        elif ph == "X":
+            name = ev["name"]
+            span_time[name] = span_time.get(name, 0.0) + ev.get("dur", 0.0)
+            span_count[name] = span_count.get(name, 0) + 1
+            if name == "compile":
+                compiles += 1
+                after = ev.get("args", {}).get("after_warmup")
+                if after or (after is None and warmup_step is not None
+                             and ev.get("step", 0) > warmup_step):
+                    compiles_after_warmup += 1
+        elif ph == "B" and ev.get("name") == "request":
+            n_requests += 1
+
+    flops = counters.get("cost_attn_flops", {})
+    kv = counters.get("cost_kv_bytes", {})
+    pad = counters.get("cost_padding", {})
+    pages = counters.get("cost_pages", {})
+    useful = pad.get("useful_kv", 0)
+    padded = pad.get("padded_kv", 0)
+    return {
+        "n_events": len(events),
+        "n_requests": n_requests,
+        "final_step": final_step,
+        "steps": {"prefill": span_count.get("prefill", 0),
+                  "decode": span_count.get("decode", 0),
+                  "spec_verify": None},
+        "time_s": {"prefill": span_time.get("prefill"),
+                   "decode": span_time.get("decode"),
+                   "spec_verify": None},
+        "attn_flops": {ph: flops.get(ph, 0) for ph in PHASES},
+        "kv_read_bytes": kv.get("read", 0),
+        "kv_write_bytes": kv.get("written", 0),
+        "useful_kv": useful,
+        "padded_kv": padded,
+        "padded_rows": pad.get("padded_rows", 0),
+        "waste_ratio": padded / (useful + padded) if useful + padded else 0.0,
+        "page_gathers": pages.get("gathers", 0),
+        "compiles": compiles,
+        "compiles_after_warmup": compiles_after_warmup,
+        "compile_time_s": span_time.get("compile", 0.0),
+        "warmup_step": warmup_step,
+    }
+
+
+def _fmt(v, width: int) -> str:
+    if v is None:
+        return "-".rjust(width)
+    if isinstance(v, float):
+        return f"{v:.6f}".rjust(width)
+    return f"{v:,}".rjust(width)
+
+
+def render(path: str, a: dict) -> str:
+    lines = [f"{path}: {a['n_events']} events, {a['n_requests']} requests, "
+             f"final step {a['final_step']}"]
+    cols = ("phase", "steps", "time_s", "attn_flops")
+    widths = (12, 8, 12, 18)
+    lines.append("".join(c.rjust(w) if i else c.ljust(w)
+                         for i, (c, w) in enumerate(zip(cols, widths))))
+    for ph in PHASES:
+        row = (ph, a["steps"][ph], a["time_s"][ph], a["attn_flops"][ph])
+        lines.append(row[0].ljust(widths[0])
+                     + "".join(_fmt(v, w) for v, w in
+                               zip(row[1:], widths[1:])))
+    total_flops = sum(a["attn_flops"][ph] for ph in PHASES)
+    lines.append("total".ljust(widths[0])
+                 + _fmt(None, widths[1]) + _fmt(None, widths[2])
+                 + _fmt(total_flops, widths[3]))
+    lines.append("")
+    lines.append(f"kv bytes: read {a['kv_read_bytes']:,}  "
+                 f"written {a['kv_write_bytes']:,}")
+    lines.append(f"padding:  useful_kv {a['useful_kv']:,}  "
+                 f"padded_kv {a['padded_kv']:,}  "
+                 f"waste {a['waste_ratio']:.1%}  "
+                 f"padded_rows {a['padded_rows']:,}")
+    lines.append(f"pages:    gathers {a['page_gathers']:,}")
+    warm = (f" (warmup ended step {a['warmup_step']})"
+            if a["warmup_step"] is not None else "")
+    lines.append(f"compiles: {a['compiles']} "
+                 f"({a['compile_time_s']:.3f}s), "
+                 f"after warmup {a['compiles_after_warmup']}{warm}")
+    return "\n".join(lines)
+
+
+_DIFF_FIELDS = (
+    ("decode steps", lambda a: a["steps"]["decode"]),
+    ("prefills", lambda a: a["steps"]["prefill"]),
+    ("attn_flops total", lambda a: sum(a["attn_flops"][p] for p in PHASES)),
+    ("attn_flops prefill", lambda a: a["attn_flops"]["prefill"]),
+    ("attn_flops decode", lambda a: a["attn_flops"]["decode"]),
+    ("attn_flops spec_verify", lambda a: a["attn_flops"]["spec_verify"]),
+    ("kv_read_bytes", lambda a: a["kv_read_bytes"]),
+    ("kv_write_bytes", lambda a: a["kv_write_bytes"]),
+    ("useful_kv", lambda a: a["useful_kv"]),
+    ("padded_kv", lambda a: a["padded_kv"]),
+    ("padded_rows", lambda a: a["padded_rows"]),
+    ("page_gathers", lambda a: a["page_gathers"]),
+    ("compiles", lambda a: a["compiles"]),
+    ("recompiles after warmup", lambda a: a["compiles_after_warmup"]),
+    ("events", lambda a: a["n_events"]),
+)
+
+
+def render_diff(pa: str, a: dict, pb: str, b: dict) -> str:
+    lines = [f"diff: {pa} -> {pb}",
+             f"{'metric':<24}{'a':>16}{'b':>16}{'delta':>16}  rel"]
+    for label, get in _DIFF_FIELDS:
+        va, vb = get(a), get(b)
+        d = vb - va
+        rel = f"{d / va:+.1%}" if va else ("n/a" if d else "0%")
+        mark = "" if d == 0 else "  <-- changed"
+        lines.append(f"{label:<24}{va:>16,}{vb:>16,}{d:>+16,}  "
+                     f"{rel}{mark}")
+    wa, wb = a["waste_ratio"], b["waste_ratio"]
+    lines.append(f"{'padding waste ratio':<24}{wa:>16.4f}{wb:>16.4f}"
+                 f"{wb - wa:>+16.4f}")
+    return "\n".join(lines)
+
+
+def main(argv: List[str]) -> int:
+    ap = argparse.ArgumentParser(
+        description="per-phase cost/time attribution for engine traces")
+    ap.add_argument("trace", nargs="?", help="trace JSONL to render")
+    ap.add_argument("--diff", nargs=2, metavar=("A", "B"),
+                    help="compare two trace JSONL files instead")
+    args = ap.parse_args(argv)
+    if args.diff:
+        try:
+            ha, ea = load(args.diff[0])
+            hb, eb = load(args.diff[1])
+        except (OSError, ValueError) as e:
+            print(f"error: {e}", file=sys.stderr)
+            return 1
+        print(render_diff(args.diff[0], analyze(ha, ea),
+                          args.diff[1], analyze(hb, eb)))
+        return 0
+    if not args.trace:
+        ap.print_usage()
+        return 1
+    try:
+        header, events = load(args.trace)
+    except (OSError, ValueError) as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 1
+    print(render(args.trace, analyze(header, events)))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
