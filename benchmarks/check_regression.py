@@ -130,6 +130,24 @@ SPECS = {
         # bench additionally asserts this in-process)
         Metric("trace.cost.recompiles_after_warmup", False, 0.0,
                exact=True),
+        # verified-serving pass (stage-typed plans, audit trail on).
+        # The rule-based verdict extractor is deterministic at temp 0,
+        # so decision/verdict/disposition tallies and the per-step
+        # verified rate are exact integers/ratios of the schedule —
+        # pinned bit-for-bit like the cost counters. n_steps gets the
+        # same 10% band as the latency passes (token-level drift across
+        # jax/BLAS versions); the bench asserts audit passivity
+        # (identical step count audited vs unaudited) in-process.
+        Metric("verified.n_steps", False, 0.10),
+        Metric("verified.n_audit_records", False, 0.0, exact=True),
+        Metric("verified.verdicts.pass", False, 0.0, exact=True),
+        Metric("verified.verdicts.fail", False, 0.0, exact=True),
+        Metric("verified.verdicts.abstain", False, 0.0, exact=True),
+        Metric("verified.n_verified", False, 0.0, exact=True),
+        Metric("verified.verified_per_step", False, 0.0, exact=True),
+        Metric("verified.critic_priority_events", False, 0.0,
+               exact=True),
+        Metric("verified.span_problems", False, 0.0),
     ],
     "BENCH_spec.json": [
         # all step/count metrics: deterministic on a given commit (the

@@ -13,6 +13,14 @@ A final *traced* fcfs pass re-runs the same workload with
 (tracing is passive), dumps ``results/serving_trace.jsonl`` plus its
 Perfetto-loadable Chrome twin, and records deterministic event counts
 that ``check_regression.py`` gates against the committed baseline.
+
+A *verified-serving* pass then drives stage-typed plans (critic and
+guardrail steps) through the same scheduler twice — audit trail off,
+then on with tracing — asserting auditing is passive (identical step
+count), dumping ``results/serving_verified_trace.jsonl`` and
+``results/serving_audit.jsonl``, and recording the deterministic
+verdict/disposition tallies plus ``verified_per_step`` and the
+critic-priority event count for the regression gate.
 """
 
 from __future__ import annotations
@@ -32,6 +40,7 @@ if __package__ in (None, ""):  # direct script execution
 
 from .common import default_engine_cfg, emit, eval_prompts, get_artifacts
 from repro.core.plan import OutlineStep, ReasoningPlan
+from repro.data import Tokenizer
 from repro.engine import MedVerseEngine
 from repro.serving import ContinuousScheduler, ServeRequest
 
@@ -59,6 +68,54 @@ def _plan(shape: str) -> str:
 
 SHAPES = ("wide", "deep", "diamond", "serial")
 
+# stage-typed shapes for the verified-serving pass. "gate" is the
+# critic-priority shape: the critic's verdict unblocks two sibling
+# branches at once (unblock count 2), so the engine's stage-aware
+# spawn prioritization fires deterministically on every request.
+STAGED_SHAPES = ("gate", "checked-diamond")
+
+# words the staged plans add over the artifact corpus; the trained
+# bench model reserves 64 embedding rows of slack above the corpus
+# vocabulary exactly so workload extensions like this stay in-bounds
+_STAGE_WORDS = ("Stage:", "critic", "guardrail", "verify", "findings",
+                "screen", "safety", "treatment", "assess", "history",
+                "synthesize", "5:")
+
+
+def _staged_plan(shape: str) -> str:
+    if shape == "gate":
+        steps = [
+            OutlineStep(index=1, label="assess history", dependencies=()),
+            OutlineStep(index=2, label="verify findings",
+                        dependencies=(1,), stage="critic"),
+            OutlineStep(index=3, label="synthesize diagnosis",
+                        dependencies=(2,)),
+            OutlineStep(index=4, label="assess treatment",
+                        dependencies=(2,)),
+            OutlineStep(index=5, label="screen safety",
+                        dependencies=(3, 4), stage="guardrail"),
+        ]
+    else:  # checked-diamond
+        steps = [
+            OutlineStep(index=1, label="history", dependencies=()),
+            OutlineStep(index=2, label="labs", dependencies=()),
+            OutlineStep(index=3, label="verify findings",
+                        dependencies=(1, 2), stage="critic"),
+            OutlineStep(index=4, label="synthesize",
+                        dependencies=(3,)),
+        ]
+    return ReasoningPlan(steps=tuple(steps)).serialize()
+
+
+def _verified_tok(base: Tokenizer) -> Tokenizer:
+    """Extend a copy of the artifact tokenizer with the stage grammar
+    words (appended ids only — every existing id is unchanged, so the
+    trained embeddings still line up)."""
+    vocab = dict(base.vocab)
+    for w in _STAGE_WORDS:
+        vocab.setdefault(w, len(vocab))
+    return Tokenizer(vocab)
+
 
 def make_workload(prompts, n_requests: int, rate: float,
                   seed: int = 0, deadline_s=None):
@@ -80,9 +137,9 @@ def make_workload(prompts, n_requests: int, rate: float,
 
 
 def _serve(art, workload, policy: str, closed_batch: bool, ecfg,
-           clock: str = "wall"):
-    eng = MedVerseEngine(art.params_mask, art.cfg, art.corpus.tokenizer,
-                         ecfg)
+           clock: str = "wall", tok: Tokenizer = None):
+    eng = MedVerseEngine(art.params_mask, art.cfg,
+                         tok or art.corpus.tokenizer, ecfg)
     eng.warmup()   # pre-compile decode buckets: keep XLA out of the SLAs
     sched = ContinuousScheduler(eng, policy=policy, clock=clock,
                                 closed_batch=closed_batch, deadline_s=30.0)
@@ -147,6 +204,83 @@ def _traced_pass(art, workload, ecfg, clock: str, fcfs_report: dict):
     }
 
 
+def _verified_pass(art, prompts, n_requests: int, rate: float, ecfg,
+                   clock: str):
+    """Verified-serving workload: stage-typed plans through the
+    scheduler, audit off then audit+trace on. Asserts auditing is
+    passive (identical step count), dumps the audit JSONL + trace
+    artifacts, and returns the deterministic verdict/disposition
+    section the regression gate pins."""
+    from repro.obs import validate_spans
+
+    tok = _verified_tok(art.corpus.tokenizer)
+    assert tok.vocab_size <= art.cfg.vocab_size, (
+        f"staged vocab {tok.vocab_size} exceeds the trained model's "
+        f"{art.cfg.vocab_size} embedding rows")
+    rng = np.random.default_rng(1)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, size=n_requests))
+    workload = [
+        ServeRequest(prompt=prompts[i % len(prompts)],
+                     plan=_staged_plan(
+                         STAGED_SHAPES[i % len(STAGED_SHAPES)]),
+                     arrival=float(arrivals[i]), deadline_s=30.0)
+        for i in range(n_requests)]
+    # longer step budget than the latency passes: critic bodies need a
+    # few content words for the rule extractor to decide (a 4-token
+    # stub abstains on every decision)
+    ecfg_off = dataclasses.replace(ecfg, max_step_tokens=12)
+    rep_off, _ = _serve(art, workload, "fcfs", False, ecfg_off, clock,
+                        tok=tok)
+    os.makedirs(RESULTS, exist_ok=True)
+    audit_path = os.path.join(RESULTS, "serving_audit.jsonl")
+    trace_path = os.path.join(RESULTS, "serving_verified_trace.jsonl")
+    ecfg_on = dataclasses.replace(ecfg_off, audit=audit_path,
+                                  trace=trace_path)
+    rep, eng = _serve(art, workload, "fcfs", False, ecfg_on, clock,
+                      tok=tok)
+    assert rep.n_steps == rep_off.n_steps, (
+        f"auditing changed the schedule: {rep.n_steps} steps audited "
+        f"vs {rep_off.n_steps} unaudited")
+    jsonl_path, chrome_path = eng.dump_trace()
+    audit_path = eng.dump_audit()
+    problems = validate_spans(eng.obs.events)
+    counts = eng.audit.counts()
+    critic_priority = sum(1 for ev in eng.obs.events
+                          if ev["name"] == "critic_priority")
+    emit("serving_verified",
+         rep.duration_s / max(rep.total_tokens, 1) * 1e6,
+         f"verified={rep.n_verified}/{rep.n_requests};"
+         f"vps={rep.verified_per_step:.5f};"
+         f"pass={counts['verdict_pass']};fail={counts['verdict_fail']};"
+         f"abstain={counts['verdict_abstain']};"
+         f"critic_priority={critic_priority}")
+    print(f"# verified pass: {rep.summary()}")
+    print(f"# audit: {counts['records']} records "
+          f"({counts['decisions']} decisions), "
+          f"{len(problems)} span problems, "
+          f"critic_priority_events={critic_priority} "
+          f"-> {os.path.relpath(audit_path)}, "
+          f"{os.path.relpath(jsonl_path)}")
+    return {
+        "n_steps": rep.n_steps,
+        "n_requests": rep.n_requests,
+        "n_audit_records": counts["records"],
+        "verdicts": {s: counts[f"verdict_{s}"]
+                     for s in ("pass", "fail", "abstain")},
+        "dispositions": {d: counts[d]
+                         for d in ("verified", "refuted", "unverified")},
+        "n_verified": rep.n_verified,
+        "verified_per_step": round(rep.verified_per_step, 6),
+        "critic_priority_events": critic_priority,
+        "span_problems": len(problems),
+        "stage_ttft_steps": rep.stage_ttft_steps,
+        "stage_tpot_steps": rep.stage_tpot_steps,
+        "audit_jsonl": os.path.relpath(audit_path),
+        "jsonl": os.path.relpath(jsonl_path),
+        "chrome": os.path.relpath(chrome_path),
+    }
+
+
 def run(art=None, n_requests: int = 16, rate: float = 4.0,
         smoke: bool = False):
     clock = "wall"
@@ -195,13 +329,18 @@ def run(art=None, n_requests: int = 16, rate: float = 4.0,
     # regression gate diffs, plus the Perfetto-loadable trace artifact
     trace_section = _traced_pass(art, workload, ecfg, clock,
                                  reports["fcfs"])
+    # verified-serving pass: stage-typed plans, audit trail on
+    verified_section = _verified_pass(art, prompts, n_requests, rate,
+                                      ecfg, clock)
     os.makedirs(RESULTS, exist_ok=True)
     out = {"config": {"n_requests": n_requests, "rate": rate,
                       "clock": clock, "max_slots": ecfg.max_slots,
                       "attention_backend": ecfg.attention_backend,
-                      "shapes": SHAPES},
+                      "shapes": SHAPES,
+                      "staged_shapes": STAGED_SHAPES},
            "runs": reports,
-           "trace": trace_section}
+           "trace": trace_section,
+           "verified": verified_section}
     path = os.path.join(RESULTS, "BENCH_serving.json")
     with open(path, "w") as f:
         json.dump(out, f, indent=2)

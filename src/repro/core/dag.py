@@ -13,7 +13,8 @@ conversion helpers used by both the Curator and the Engine.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, FrozenSet, Iterable, List, Mapping, Sequence, Tuple
+from typing import (Dict, FrozenSet, Iterable, List, Mapping, Optional,
+                    Sequence, Tuple)
 
 
 class CycleError(ValueError):
@@ -30,9 +31,15 @@ class ReasoningDAG:
 
     nodes: Tuple[int, ...]
     deps: Mapping[int, Tuple[int, ...]]
+    # Sparse stage typing: only non-default entries are stored, so a DAG
+    # built from a pre-stage plan compares equal to one built with
+    # all-"reason" stages. Query via :meth:`stage_of`.
+    stages: Mapping[int, str] = dataclasses.field(default_factory=dict)
 
     @staticmethod
-    def from_deps(deps: Mapping[int, Sequence[int]]) -> "ReasoningDAG":
+    def from_deps(deps: Mapping[int, Sequence[int]],
+                  stages: Optional[Mapping[int, str]] = None,
+                  ) -> "ReasoningDAG":
         nodes = tuple(sorted(deps.keys()))
         norm = {v: tuple(sorted(set(deps[v]))) for v in nodes}
         for v, ps in norm.items():
@@ -41,9 +48,15 @@ class ReasoningDAG:
                     raise ValueError(f"node {v} depends on unknown node {p}")
                 if p == v:
                     raise CycleError(f"self-loop at node {v}")
-        dag = ReasoningDAG(nodes=nodes, deps=norm)
+        st = {v: s for v, s in (stages or {}).items()
+              if v in norm and s != "reason"}
+        dag = ReasoningDAG(nodes=nodes, deps=norm, stages=st)
         dag.topological_layers()  # raises CycleError if cyclic
         return dag
+
+    def stage_of(self, v: int) -> str:
+        """Stage tag of node ``v`` ("reason" unless tagged otherwise)."""
+        return self.stages.get(v, "reason")
 
     # -- structure queries -------------------------------------------------
     def predecessors(self, v: int) -> Tuple[int, ...]:

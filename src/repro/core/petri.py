@@ -34,6 +34,7 @@ class Transition:
     label: str
     pre: Tuple[int, ...]   # input place ids
     post: Tuple[int, ...]  # output place ids
+    stage: str = "reason"  # "reason" | "critic" | "guardrail"
 
 
 @dataclasses.dataclass
@@ -65,6 +66,7 @@ class PetriNet:
                     label=labels.get(t, f"step_{t}"),
                     pre=pre,
                     post=(place_of[t],),
+                    stage=dag.stage_of(t),
                 )
             )
         places = (ctx,) + tuple(place_of[t] for t in dag.nodes)
@@ -149,6 +151,24 @@ class PetriScheduler:
 
     def claim(self, t: Transition) -> None:
         self._claimed.add(t.tid)
+
+    def unblock_count(self, t: Transition) -> int:
+        """How many unfired, unclaimed transitions become enabled the
+        moment ``t`` fires — i.e. successors of ``t`` whose every *other*
+        input place is already marked. This is the frontier-unblocking
+        count the stage-aware engine uses to prioritize a ready critic
+        whose verdict gates multiple sibling branches."""
+        post = set(t.post)
+        n = 0
+        for u in self.net.transitions:
+            if (u.tid == t.tid or u.tid in self._fired
+                    or u.tid in self._claimed):
+                continue
+            if not post & set(u.pre):
+                continue
+            if all(self.marking.has(p) for p in u.pre if p not in post):
+                n += 1
+        return n
 
     def classify_mode(self, t: Transition, frontier: Optional[Sequence[Transition]] = None) -> str:
         """Fork if it shares a predecessor place with another transition in

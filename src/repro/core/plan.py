@@ -28,9 +28,18 @@ from .dag import ReasoningDAG
 
 PLAN_OPEN = "<Plan>"
 PLAN_CLOSE = "</Plan>"
+# Closed stage vocabulary. "reason" is the default; a step only carries
+# an explicit ``; Stage: critic`` clause when it deviates, so every
+# pre-stage plan/corpus serializes and parses byte-identically.
+STAGES = ("reason", "critic", "guardrail")
+DEFAULT_STAGE = "reason"
 OUTLINE_RE = re.compile(
     r"<Outline>\s*Transient Step\s+(\d+)\s*:\s*(.*?)\s*;?\s*"
-    r"Dependency\s*:\s*\[([^\]]*)\]\s*</Outline>",
+    r"Dependency\s*:\s*\[([^\]]*)\]\s*"
+    # optional stage clause; trailing <unk>s absorb a stage clause whose
+    # words fell out of a stale tokenizer's vocabulary (the outline then
+    # degrades to the default "reason" stage instead of being dropped)
+    r"(?:;?\s*Stage\s*:\s*(\w+|<unk>)\s*)?(?:;?\s*(?:<unk>\s*)*)?</Outline>",
     re.DOTALL,
 )
 STEP_OPEN_RE = re.compile(r"<Step>\s*Transient Step\s+(\d+)\s*:", re.DOTALL)
@@ -49,6 +58,7 @@ class OutlineStep:
     index: int                 # 1-based step index as written
     label: str                 # "A, B -> C" step description
     dependencies: Tuple[int, ...]  # 1-based indices of prerequisite steps
+    stage: str = DEFAULT_STAGE     # "reason" | "critic" | "guardrail"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,21 +77,28 @@ class ReasoningPlan:
                         f"step {s.index} depends on missing step {d}"
                     )
             deps[s.index - 1] = tuple(d - 1 for d in s.dependencies)
-        return ReasoningDAG.from_deps(deps)
+        return ReasoningDAG.from_deps(deps, stages=self.stages())
 
     def labels(self) -> Dict[int, str]:
         return {s.index - 1: s.label for s in self.steps}
 
+    def stages(self) -> Dict[int, str]:
+        return {s.index - 1: s.stage for s in self.steps}
+
     def serialize(self) -> str:
         # Spaced punctuation keeps the word-level tokenizer's entity
-        # vocabulary clean ("A" vs "A;" would be distinct tokens).
+        # vocabulary clean ("A" vs "A;" would be distinct tokens). The
+        # stage clause is emitted only for non-default stages, so plans
+        # written before stage typing round-trip byte-identically.
         parts = [PLAN_OPEN]
         for s in self.steps:
             dep = " , ".join(str(d) for d in s.dependencies)
             dep = f"[ {dep} ]" if dep else "[ ]"
+            stage = (f" ; Stage: {s.stage}"
+                     if s.stage != DEFAULT_STAGE else "")
             parts.append(
                 f"<Outline> Transient Step {s.index}: {s.label} ;"
-                f" Dependency: {dep} </Outline>"
+                f" Dependency: {dep}{stage} </Outline>"
             )
         parts.append(PLAN_CLOSE)
         return " ".join(parts)
@@ -120,7 +137,17 @@ def parse_plan(text: str, lenient: bool = False) -> ReasoningPlan:
                     raise PlanParseError(
                         f"non-integer dependency {x!r} in step {idx}")
             deps = tuple(parsed)
-        steps.append(OutlineStep(index=idx, label=label, dependencies=deps))
+        stage = (m.group(4) or DEFAULT_STAGE).lower()
+        if stage not in STAGES:
+            # model emitted a stage word outside the closed vocabulary
+            # (or the word decoded as <unk> under a stale tokenizer)
+            if lenient:
+                stage = DEFAULT_STAGE
+            else:
+                raise PlanParseError(
+                    f"unknown stage {stage!r} in step {idx}")
+        steps.append(OutlineStep(index=idx, label=label, dependencies=deps,
+                                 stage=stage))
     if not steps:
         raise PlanParseError("plan block contains no <Outline> entries")
     seen = set()
@@ -140,6 +167,7 @@ def parse_plan(text: str, lenient: bool = False) -> ReasoningPlan:
                 index=s.index, label=s.label,
                 dependencies=tuple(d for d in s.dependencies
                                    if d in ids and d != s.index),
+                stage=s.stage,
             )
             for s in steps
         ]

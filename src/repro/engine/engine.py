@@ -102,6 +102,8 @@ from ..core.petri import ColoredToken, PetriNet, PetriScheduler
 from ..core.plan import PlanParseError, parse_plan
 from ..data.tokenizer import EOS, Tokenizer
 from ..models.config import ModelConfig
+from ..obs.audit import (DISPOSITIONS, VERDICT_STATUSES, AuditRecord,
+                         AuditTrail)
 from ..obs.cost import CompileWatcher, CostGeometry, CostLedger
 from ..obs.metrics import MetricsRegistry
 from ..obs.trace import NULL_RECORDER, TraceRecorder
@@ -181,6 +183,18 @@ class EngineConfig:
     # tests/test_cost.py). Default on — the live /metrics endpoint and
     # ServingReport.engine read it.
     cost_accounting: bool = True
+    # Clinical audit trail (src/repro/obs/audit.py): truthy enables the
+    # AuditTrail — one deterministic rule-extracted verdict per finished
+    # critic/guardrail stream, plus a per-request disposition
+    # (verified | refuted | unverified) when the request closes. A
+    # string is the default dump path for ``dump_audit()``
+    # (medverse-audit/1 JSONL); ``True`` records in memory only.
+    # Passive like tracing: temp-0 output and iteration counts are
+    # bit-identical with auditing on or off (pinned by
+    # tests/test_audit.py). Independent of ``trace`` — when both are
+    # on, audit records also mirror into the trace as cat="audit"
+    # instants on the two-clock schema.
+    audit: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -207,23 +221,29 @@ class StepEvent:
     several per stream). ``done``: the request finished; ``result``
     carries its :class:`GenResult` and its pages are already released.
     ``preempted``: the request was evicted under page pressure and must
-    be re-queued for re-prefill by the caller.
+    be re-queued for re-prefill by the caller. ``audit``: the audit
+    trail recorded a decision or disposition; ``audit`` carries the
+    :class:`~repro.obs.audit.AuditRecord` (only with
+    ``EngineConfig.audit`` on).
     """
 
-    kind: str                 # "token" | "done" | "preempted"
+    kind: str                 # "token" | "done" | "preempted" | "audit"
     rid: int
     token: int = -1
     purpose: str = ""         # "plan" | "step" | "conclusion" | "serial"
     tid: int = -1             # DAG transition id for step streams
+    stage: str = ""           # step streams: "reason"|"critic"|"guardrail"
     forced: bool = False
     drafted: bool = False
     result: Optional[GenResult] = None
+    audit: Optional[AuditRecord] = None
 
 
 class _Stream:
     __slots__ = ("chain", "q_pos", "forced", "next_input", "generated",
                  "purpose", "stop_id", "max_new", "done", "finish_after",
-                 "n_generated", "rid", "tid", "history", "seq_ok")
+                 "n_generated", "rid", "tid", "history", "seq_ok",
+                 "stage", "n_header", "priority")
 
     def __init__(self, chain: IndexChain, q_pos: int, purpose: str,
                  rid: int, tid: int = -1, stop_id: int = EOS,
@@ -251,6 +271,12 @@ class _Stream:
         # positions are gap-free iff the stream starts appending exactly
         # where the chain's content ends (join-max can skip positions)
         self.seq_ok = (q_pos == chain.length)
+        # stage typing (step streams only): the transition's stage tag,
+        # the forced <Step> header length (the audit body excludes it),
+        # and whether this stream won stage-aware decode priority
+        self.stage = ""
+        self.n_header = 0
+        self.priority = False
 
 
 class _Request:
@@ -340,6 +366,16 @@ class MedVerseEngine:
                 cfg, pc.page_size, self.ecfg.max_slots, pc.dtype))
             if self.ecfg.cost_accounting else None)
         self.compiles = CompileWatcher()
+        # clinical audit trail (obs/audit.py): one rule-extracted verdict
+        # per finished critic/guardrail stream, one disposition per
+        # request. Passive like tracing — it reads decoded text and the
+        # step clock only, never RNG / pages / scheduling state.
+        self.audit: Optional[AuditTrail] = (
+            AuditTrail(obs=self.obs,
+                       meta={"model": cfg.name,
+                             "attention_backend":
+                                 self.ecfg.attention_backend})
+            if self.ecfg.audit else None)
         # speculative decoding: one drafter shared by every stream; the
         # radix drafter reads (and populates, via generation caching)
         # the same radix tree the prefill cache uses
@@ -484,6 +520,8 @@ class MedVerseEngine:
                      rid=req.rid, tid=t.tid, stop_id=self.id_step_end,
                      max_new=self.ecfg.max_step_tokens + len(header),
                      history=history)
+        st.stage = t.stage
+        st.n_header = len(header)
         st.forced.extend(header)
         if self.obs.enabled:
             self._obs_stream_begin(st)
@@ -499,13 +537,35 @@ class MedVerseEngine:
         ready = req.sched.ready()
         if not ready:
             return []
+        # stage-aware dispatch: a ready critic whose verdict gates >= 2
+        # sibling branches (frontier-unblocking count from the Petri
+        # marking) spawns first and keeps decode priority under slot
+        # over-subscription — its verdict lands sooner, so the branches
+        # it unblocks start sooner. Deterministic (marking-only) and
+        # independent of auditing; plans without critic stages take the
+        # sorted-tid path unchanged.
+        prio: Dict[int, int] = {}
+        for t in ready:
+            if t.stage == "critic":
+                n_unb = req.sched.unblock_count(t)
+                if n_unb >= 2:
+                    prio[t.tid] = n_unb
+                    if self.obs.enabled:
+                        self.obs.instant(
+                            "critic_priority", "engine", rid=req.rid,
+                            tid=t.tid, unblocks=n_unb)
+        if prio:
+            ready = sorted(ready,
+                           key=lambda t: (-prio.get(t.tid, 0), t.tid))
         req.sched.history.append([t.tid for t in ready])
         streams = []
         for t in ready:
             start = (self._start_pos(req, t) if self.ecfg.async_frontier
                      else req.max_end)
             req.sched.claim(t)
-            streams.append(self._spawn_transition(req, t, start))
+            st = self._spawn_transition(req, t, start)
+            st.priority = t.tid in prio
+            streams.append(st)
         req.pending_frontier.extend(s.tid for s in streams)
         fj_delta = req.timings["fork_join"] - fj_before
         req.timings["schedule_parse"] += time.monotonic() - t0 - fj_delta
@@ -688,6 +748,12 @@ class MedVerseEngine:
             return False
         self._drop_streams(rid)
         self._release_request(req)
+        if self.audit is not None:
+            # an aborted request never reached a conclusion: close its
+            # trail with an "unverified" disposition (before the request
+            # trace span ends, keeping the instant inside the span)
+            self.audit.finish_request(rid, completed=False,
+                                      step=self.total_iters)
         if self.obs.enabled:
             extra = ({"cost": self.cost.request_summary(rid)}
                      if self.cost is not None else {})
@@ -908,8 +974,8 @@ class MedVerseEngine:
                     st.finish_after = True
                 events.append(StepEvent(
                     kind="token", rid=st.rid, token=tok_in,
-                    purpose=st.purpose, tid=st.tid, forced=was_forced,
-                    drafted=was_draft))
+                    purpose=st.purpose, tid=st.tid, stage=st.stage,
+                    forced=was_forced, drafted=was_draft))
             if not st.forced and not st.finish_after:
                 sp = req.sampling
                 st.next_input = int(sample_token(
@@ -922,8 +988,22 @@ class MedVerseEngine:
             self._active.remove(st)
             if obs.enabled:
                 self._obs_stream_end(st)
-            self._on_stream_done(self._reqs[st.rid], st, new_streams)
+            req = self._reqs[st.rid]
+            self._on_stream_done(req, st, new_streams)
+            if self.audit is not None:
+                rec = self._audit_stream_end(req, st)
+                if rec is not None:
+                    events.append(StepEvent(
+                        kind="audit", rid=st.rid, purpose="step",
+                        tid=st.tid, stage=rec.stage, audit=rec))
         self._active.extend(new_streams)
+        # stage-aware priority: streams spawned with decode priority (a
+        # critic gating >= 2 branches) move to the front of the active
+        # list, which is exactly the decode order under slot
+        # over-subscription. Stable sort; no-op when nothing holds
+        # priority, so all-"reason" workloads keep the legacy order.
+        if any(s.priority for s in new_streams):
+            self._active.sort(key=lambda s: not s.priority)
         self.total_iters += 1
         if spec_on:
             self.spec_stats["steps"] += 1
@@ -934,6 +1014,13 @@ class MedVerseEngine:
                 self._release_request(req)
                 del self._reqs[req.rid]
                 self._preempt_count.pop(req.rid, None)
+                if self.audit is not None:
+                    # disposition before the request span closes, so the
+                    # trace instant lands inside the open request span
+                    arec = self.audit.finish_request(
+                        req.rid, completed=True, step=self.total_iters)
+                    events.append(StepEvent(kind="audit", rid=req.rid,
+                                            audit=arec))
                 if obs.enabled:
                     extra = ({"cost": self.cost.request_summary(req.rid)}
                              if self.cost is not None else {})
@@ -1073,6 +1160,11 @@ class MedVerseEngine:
         self._release_request(req)
         self.preemptions += 1
         self._preempt_count[rid] = self._preempt_count.get(rid, 0) + 1
+        if self.audit is not None:
+            # verdicts are deferred to the re-run: drop the victim's
+            # partial decision records so re-admission (same rid, full
+            # re-decode) cannot produce duplicates; no disposition yet
+            self.audit.on_preempt(rid)
         if self.obs.enabled:
             self.obs.end("request", "request", rid=rid, reason="preempted")
 
@@ -1096,13 +1188,59 @@ class MedVerseEngine:
         label = req.labels.get(st.tid, "") if req is not None else ""
         self.obs.begin("stream", "stream", rid=st.rid,
                        track=self._track_of(st), purpose=st.purpose,
-                       tid=st.tid, q_pos=st.q_pos, label=label)
+                       tid=st.tid, q_pos=st.q_pos, label=label,
+                       stage=st.stage)
 
     def _obs_stream_end(self, st: _Stream, aborted: bool = False) -> None:
         extra = {"aborted": True} if aborted else {}
         self.obs.end("stream", "stream", rid=st.rid,
                      track=self._track_of(st), n_tokens=st.n_generated,
                      **extra)
+
+    # ----------------------------------------------------------- audit -----
+    def _audit_evidence(self, req: _Request, tr) -> str:
+        """Concatenated predecessor texts of transition ``tr`` — the
+        grounding context the verdict extractor checks a critic body
+        against. Context-sourced transitions ground on the plan text."""
+        parts = []
+        for p in tr.pre:
+            if p == req.sched.net.ctx_place:
+                parts.append(req.plan_text)
+            else:
+                res = req.step_results.get(self._tid_of_place(req, p))
+                if res is not None:
+                    parts.append(res[0])
+        return " ".join(parts)
+
+    def _audit_stream_end(self, req: _Request,
+                          st: _Stream) -> Optional[AuditRecord]:
+        """Feed a finished stream to the audit trail. Step streams count
+        toward per-stage totals; critic/guardrail streams additionally
+        produce a decision record (returned; None otherwise). The body
+        the extractor sees excludes the forced ``<Step>`` header."""
+        if st.purpose != "step" or req.sched is None:
+            return None
+        tr = req.sched.net.transition(st.tid)
+        body = self.tok.decode(st.generated[st.n_header:])
+        return self.audit.on_stream_end(
+            req.rid, node=st.tid, stage=tr.stage, body=body,
+            evidence=self._audit_evidence(req, tr),
+            step=self.total_iters, track=self._track_of(st))
+
+    def dump_audit(self, path: Optional[str] = None) -> str:
+        """Write the audit trail as ``medverse-audit/1`` JSONL at
+        ``path`` (defaults to ``EngineConfig.audit`` when that is a
+        path). Returns the path written."""
+        if self.audit is None:
+            raise ValueError(
+                "auditing is disabled; set EngineConfig.audit")
+        if path is None and isinstance(self.ecfg.audit, str):
+            path = self.ecfg.audit
+        if not path:
+            raise ValueError(
+                "no audit path: pass one, or set EngineConfig.audit "
+                "to a path instead of True")
+        return self.audit.dump_jsonl(path)
 
     def dump_trace(self, path: Optional[str] = None
                    ) -> Tuple[str, str]:
@@ -1191,6 +1329,19 @@ class MedVerseEngine:
         self.compiles.register(reg)
         if self.cost is not None:
             self.cost.register(reg)
+        if self.audit is not None:
+            c = self.audit.counts()
+            reg.counter("audit_records_total",
+                        "audit records emitted (decisions + "
+                        "dispositions)").inc(c["records"])
+            for s in VERDICT_STATUSES:
+                reg.counter(f"audit_verdict_{s}_total",
+                            f"critic/guardrail decisions with verdict "
+                            f"{s}").inc(c[f"verdict_{s}"])
+            for d in DISPOSITIONS:
+                reg.counter(f"audit_disposition_{d}_total",
+                            f"requests closed with disposition "
+                            f"{d}").inc(c[d])
         reg.gauge("active_streams",
                   "decode streams currently live").set(len(self._active))
         reg.gauge("live_requests",

@@ -49,11 +49,18 @@ _ENGINE_PLAN = (
     "<Plan> "
     "<Outline> Transient Step 1: assess history ; Dependency: [] </Outline> "
     "<Outline> Transient Step 2: assess labs ; Dependency: [] </Outline> "
-    "<Outline> Transient Step 3: synthesize diagnosis ; Dependency: [1, 2] "
-    "</Outline> </Plan>")
+    "<Outline> Transient Step 3: check consistency ; Dependency: [1, 2] ; "
+    "Stage: critic </Outline> "
+    "<Outline> Transient Step 4: synthesize diagnosis ; Dependency: [3] "
+    "</Outline> "
+    "<Outline> Transient Step 5: screen contraindications ; "
+    "Dependency: [3] ; Stage: guardrail </Outline> "
+    "</Plan>")
 
 _TOY_CORPUS = ("patient case history labs assess synthesize diagnosis "
-               "Transient Step 1: 2: 3: Dependency: [] [1] [2] [1, 2]")
+               "check consistency screen contraindications "
+               "Transient Step 1: 2: 3: 4: 5: Dependency: Stage: critic "
+               "guardrail [] [1] [2] [3] [1, 2]")
 
 
 def _load_workload(args):
@@ -91,7 +98,8 @@ def run_engine(args) -> None:
         async_frontier=args.async_frontier,
         radix_cache=not args.no_radix, plan_override=plan,
         speculative=args.speculative, drafter=args.drafter,
-        draft_len=args.draft_len, trace=args.trace)
+        draft_len=args.draft_len, trace=args.trace,
+        audit=args.audit_log)
     if args.attention_backend:
         ecfg.attention_backend = args.attention_backend
     ecfg.kernel_interpret = not args.compiled_kernels
@@ -136,7 +144,8 @@ def run_engine(args) -> None:
 
 def _print_observability(args, eng) -> None:
     """--trace: dump JSONL + Chrome exports and the per-request DAG
-    timeline; --metrics: Prometheus text dump of the engine registry."""
+    timeline; --audit-log: dump the clinical audit trail and its verdict
+    tallies; --metrics: Prometheus text dump of the engine registry."""
     if args.trace:
         from ..obs import summarize
         jsonl_path, chrome_path = eng.dump_trace()
@@ -146,6 +155,14 @@ def _print_observability(args, eng) -> None:
         if lines:
             print("DAG timelines (steps, per request):")
             print(lines)
+    if args.audit_log:
+        path = eng.dump_audit()
+        c = eng.audit.counts()
+        print(f"audit: {c['records']} records -> {path}; "
+              f"verdicts pass={c['verdict_pass']} "
+              f"fail={c['verdict_fail']} abstain={c['verdict_abstain']}; "
+              f"dispositions verified={c['verified']} "
+              f"refuted={c['refuted']} unverified={c['unverified']}")
     if args.metrics:
         print(eng.metrics_registry().to_prom_text(), end="")
 
@@ -236,6 +253,11 @@ def main():
                          "write it to PATH (JSONL) plus a Chrome "
                          "trace-event twin for Perfetto; also prints "
                          "per-request DAG timelines")
+    ap.add_argument("--audit-log", default=None, metavar="PATH",
+                    help="engine mode: record the clinical audit trail "
+                         "(per-decision verdicts + per-request "
+                         "dispositions for stage-typed plans) and "
+                         "write it to PATH (medverse-audit/1 JSONL)")
     ap.add_argument("--metrics", action="store_true",
                     help="engine mode: print the engine metrics "
                          "registry (Prometheus text format) after "

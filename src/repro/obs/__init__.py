@@ -8,6 +8,9 @@ and how to open a trace in Perfetto. The default recorder is a no-op
 turn recording on.
 """
 
+from .audit import (AUDIT_SCHEMA, DECISION_STAGES, DISPOSITIONS,
+                    VERDICT_STATUSES, AuditRecord, AuditReport, AuditTrail,
+                    Verdict, load_audit_jsonl, rule_verdict)
 from .cost import (COST_FIELDS, COST_PHASES, CompileWatcher, CostGeometry,
                    CostLedger)
 from .metrics import (Counter, Gauge, Histogram, MetricsRegistry,
@@ -19,12 +22,18 @@ from .trace import (NULL_RECORDER, SCHEMA, NullRecorder, TraceRecorder,
                     load_jsonl, to_chrome, validate_spans)
 
 __all__ = [
+    "AUDIT_SCHEMA",
+    "AuditRecord",
+    "AuditReport",
+    "AuditTrail",
     "COST_FIELDS",
     "COST_PHASES",
     "CompileWatcher",
     "CostGeometry",
     "CostLedger",
     "Counter",
+    "DECISION_STAGES",
+    "DISPOSITIONS",
     "Gauge",
     "Histogram",
     "MetricsRegistry",
@@ -36,9 +45,13 @@ __all__ = [
     "SCHEMA",
     "StreamTimeline",
     "TraceRecorder",
+    "VERDICT_STATUSES",
+    "Verdict",
+    "load_audit_jsonl",
     "load_jsonl",
     "percentile_summary",
     "request_timelines",
+    "rule_verdict",
     "summarize",
     "to_chrome",
     "validate_spans",

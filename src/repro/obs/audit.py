@@ -1,0 +1,324 @@
+"""Clinical audit trail: per-decision audit records and request-level
+dispositions for stage-typed DAG plans.
+
+Every ``critic`` / ``guardrail`` stream that finishes produces one
+:class:`AuditRecord` carrying a :class:`Verdict` (``pass`` | ``fail`` |
+``abstain``) extracted by a pluggable, deterministic rule over the
+stream's generated body and its predecessors' texts — no judge model,
+so verdict counts are CI-gateable at temperature 0. When a request
+finishes (or is aborted) the trail closes it with a disposition record
+(``verified`` | ``refuted`` | ``unverified``) summarized in an
+:class:`AuditReport`.
+
+The trail is strictly *passive*: it only reads decoded text and the
+engine's deterministic step clock, never RNG, page accounting, or
+scheduling state — temp-0 output is bit-identical with auditing on or
+off. Records mirror into the :class:`~repro.obs.trace.TraceRecorder`
+as ``cat="audit"`` instants (two-clock: wall ``ts`` + decode ``step``)
+and dump standalone as ``medverse-audit/1`` JSONL.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Callable, Dict, List, Optional, Tuple
+
+from .trace import NULL_RECORDER
+
+AUDIT_SCHEMA = "medverse-audit/1"
+
+#: stages that produce a decision record when their stream finishes
+DECISION_STAGES = ("critic", "guardrail")
+VERDICT_STATUSES = ("pass", "fail", "abstain")
+DISPOSITIONS = ("verified", "refuted", "unverified")
+
+# Marker vocabularies for the rule-based extractor: an explicit verdict
+# word anywhere in a critic/guardrail body decides the outcome (last
+# marker wins — a closing verdict overrides earlier hedging).
+PASS_MARKERS = frozenset(
+    "confirmed consistent supported verified correct pass passes "
+    "safe plausible".split())
+FAIL_MARKERS = frozenset(
+    "refuted inconsistent contradicted unsupported incorrect fail "
+    "fails violation unsafe contraindicated".split())
+
+# Words ignored by the evidence-overlap fallback: structural grammar
+# plus connectives that would manufacture spurious grounding.
+_STOPWORDS = frozenset(
+    "transient step dependency stage outline plan think conclusion "
+    "answer explanation the and with from this that then when "
+    "assess verify check".split())
+
+
+def _content_words(text: str) -> List[Tuple[str, int]]:
+    """Lowercased alphabetic words of length >= 4 with char offsets."""
+    out = []
+    pos = 0
+    for w in text.split():
+        start = text.index(w, pos)
+        pos = start + len(w)
+        lw = w.lower()
+        if len(lw) >= 4 and lw.isalpha() and lw not in _STOPWORDS:
+            out.append((lw, start))
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class Verdict:
+    """Outcome of one critic/guardrail decision.
+
+    ``span`` is the (start, end) character range in the stream body that
+    grounds the verdict (the deciding marker word or the first shared
+    evidence term); ``(-1, -1)`` when nothing specific grounds it.
+    """
+
+    status: str                       # "pass" | "fail" | "abstain"
+    reason: str                       # human-readable rule explanation
+    evidence: str = ""                # the grounding word(s), if any
+    span: Tuple[int, int] = (-1, -1)  # char offsets into the body
+
+    def to_dict(self) -> dict:
+        return {"status": self.status, "reason": self.reason,
+                "evidence": self.evidence, "span": list(self.span)}
+
+    @staticmethod
+    def from_dict(d: dict) -> "Verdict":
+        return Verdict(status=d["status"], reason=d["reason"],
+                       evidence=d.get("evidence", ""),
+                       span=tuple(d.get("span", (-1, -1))))
+
+
+def rule_verdict(body: str, evidence: str = "",
+                 min_overlap: int = 2) -> Verdict:
+    """Deterministic rule-based verdict extractor (the default).
+
+    Tier 1 — marker scan: an explicit pass/fail word in the body decides
+    (last marker wins). Tier 2 — evidence grounding: the body's content
+    words are intersected with the predecessors' texts; ``min_overlap``
+    shared terms is a pass, a substantive body with zero shared terms is
+    a fail (ungrounded critique), anything shorter abstains.
+    """
+    words = _content_words(body)
+    marker = None
+    for lw, start in words:
+        if lw in PASS_MARKERS:
+            marker = ("pass", lw, start)
+        elif lw in FAIL_MARKERS:
+            marker = ("fail", lw, start)
+    if marker is not None:
+        status, lw, start = marker
+        return Verdict(status=status, reason=f"marker {lw!r}",
+                       evidence=lw, span=(start, start + len(lw)))
+    ev_words = {lw for lw, _ in _content_words(evidence)}
+    shared = [(lw, start) for lw, start in words if lw in ev_words]
+    if len(shared) >= min_overlap:
+        lw, start = shared[0]
+        return Verdict(
+            status="pass",
+            reason=f"evidence overlap: {len(shared)} shared terms",
+            evidence=" ".join(lw for lw, _ in shared),
+            span=(start, start + len(lw)))
+    if len(words) >= 3:
+        return Verdict(status="fail",
+                       reason="no evidential overlap with predecessors")
+    return Verdict(status="abstain", reason="no verdict marker")
+
+
+@dataclasses.dataclass(frozen=True)
+class AuditRecord:
+    """One line of the audit JSONL: a stage decision or a disposition."""
+
+    kind: str                 # "decision" | "disposition"
+    rid: int
+    step: int                 # deterministic decode-step clock
+    node: int = -1            # transition tid (decisions only)
+    stage: str = ""           # "critic" | "guardrail" (decisions only)
+    verdict: Optional[Verdict] = None        # decisions only
+    disposition: str = ""     # dispositions only
+    report: Optional["AuditReport"] = None   # dispositions only
+
+    def to_dict(self) -> dict:
+        d = {"kind": self.kind, "rid": self.rid, "step": self.step}
+        if self.kind == "decision":
+            d.update(node=self.node, stage=self.stage,
+                     verdict=self.verdict.to_dict())
+        else:
+            d.update(disposition=self.disposition,
+                     report=self.report.to_dict())
+        return d
+
+    @staticmethod
+    def from_dict(d: dict) -> "AuditRecord":
+        if d["kind"] == "decision":
+            return AuditRecord(kind="decision", rid=d["rid"],
+                               step=d["step"], node=d["node"],
+                               stage=d["stage"],
+                               verdict=Verdict.from_dict(d["verdict"]))
+        return AuditRecord(kind="disposition", rid=d["rid"],
+                           step=d["step"], disposition=d["disposition"],
+                           report=AuditReport.from_dict(d["report"]))
+
+
+@dataclasses.dataclass(frozen=True)
+class AuditReport:
+    """Per-request audit summary, computed when the request closes.
+
+    Disposition: ``verified`` — the request completed, ran at least one
+    critic, every critic passed and no guardrail failed; ``refuted`` —
+    it completed but a critic or guardrail failed; ``unverified`` —
+    everything else (no critics, critic abstained, or the request never
+    completed). ``critic_coverage`` is the fraction of critic decisions
+    that produced a non-abstain verdict.
+    """
+
+    rid: int
+    disposition: str
+    completed: bool
+    n_stage: Dict[str, int]          # stream count per stage
+    verdicts: Dict[str, int]         # decision count per verdict status
+    critic_coverage: float
+    guardrail_violations: int
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_dict(d: dict) -> "AuditReport":
+        return AuditReport(
+            rid=d["rid"], disposition=d["disposition"],
+            completed=d["completed"], n_stage=dict(d["n_stage"]),
+            verdicts=dict(d["verdicts"]),
+            critic_coverage=d["critic_coverage"],
+            guardrail_violations=d["guardrail_violations"])
+
+
+class AuditTrail:
+    """Consumes stream-end notifications, emits audit records.
+
+    ``extract(body, evidence) -> Verdict`` is pluggable; the default is
+    :func:`rule_verdict`. ``obs`` is a :class:`TraceRecorder` (or the
+    null recorder) that decision/disposition instants mirror into as
+    ``cat="audit"`` events, inside the request's open trace span.
+    """
+
+    def __init__(self, extract: Optional[Callable] = None,
+                 obs=NULL_RECORDER, meta: Optional[dict] = None):
+        self.extract = extract or rule_verdict
+        self.obs = obs
+        self.meta = dict(meta or {})
+        self.records: List[AuditRecord] = []
+        self.reports: Dict[int, AuditReport] = {}
+        self._live: Dict[int, List[AuditRecord]] = {}   # open decisions
+        self._stage_counts: Dict[int, Dict[str, int]] = {}
+
+    # ------------------------------------------------------- ingest ----
+    def on_stream_end(self, rid: int, node: int, stage: str, body: str,
+                      evidence: str, step: int,
+                      track: str = "") -> Optional[AuditRecord]:
+        """Notify the trail that a step stream finished. Returns the
+        decision record for critic/guardrail stages, None otherwise."""
+        counts = self._stage_counts.setdefault(rid, {})
+        counts[stage] = counts.get(stage, 0) + 1
+        if stage not in DECISION_STAGES:
+            return None
+        verdict = self.extract(body, evidence)
+        rec = AuditRecord(kind="decision", rid=rid, step=step, node=node,
+                          stage=stage, verdict=verdict)
+        self.records.append(rec)
+        self._live.setdefault(rid, []).append(rec)
+        if self.obs.enabled:
+            self.obs.instant("audit", "audit", rid=rid, track=track,
+                             node=node, stage=stage,
+                             status=verdict.status, reason=verdict.reason)
+        return rec
+
+    def on_preempt(self, rid: int) -> None:
+        """The request was evicted and will restart from scratch: drop
+        its partial decision records so re-admission does not duplicate
+        them (the verdict is deferred to the re-run, which re-decodes
+        every stream). No disposition is emitted."""
+        dropped = self._live.pop(rid, None)
+        if dropped:
+            drop = {id(r) for r in dropped}
+            self.records = [r for r in self.records if id(r) not in drop]
+        self._stage_counts.pop(rid, None)
+
+    def finish_request(self, rid: int, completed: bool,
+                       step: int) -> AuditRecord:
+        """Close the request with a disposition record (exactly once per
+        request lifetime — on completion or abort, never preemption)."""
+        decisions = self._live.pop(rid, [])
+        n_stage = self._stage_counts.pop(rid, {})
+        verdicts = {s: 0 for s in VERDICT_STATUSES}
+        for r in decisions:
+            verdicts[r.verdict.status] += 1
+        critics = [r for r in decisions if r.stage == "critic"]
+        violations = sum(1 for r in decisions
+                         if r.stage == "guardrail"
+                         and r.verdict.status == "fail")
+        decided = sum(1 for r in critics if r.verdict.status != "abstain")
+        coverage = decided / len(critics) if critics else 0.0
+        failed = any(r.verdict.status == "fail" for r in critics)
+        if not completed or not critics:
+            disposition = "unverified"
+        elif failed or violations:
+            disposition = "refuted"
+        elif decided == len(critics):
+            disposition = "verified"
+        else:
+            disposition = "unverified"   # some critic abstained
+        report = AuditReport(
+            rid=rid, disposition=disposition, completed=completed,
+            n_stage=n_stage, verdicts=verdicts, critic_coverage=coverage,
+            guardrail_violations=violations)
+        rec = AuditRecord(kind="disposition", rid=rid, step=step,
+                          disposition=disposition, report=report)
+        self.records.append(rec)
+        self.reports[rid] = report
+        if self.obs.enabled:
+            self.obs.instant("audit_disposition", "audit", rid=rid,
+                             disposition=disposition,
+                             completed=completed,
+                             critic_coverage=coverage,
+                             guardrail_violations=violations)
+        return rec
+
+    # ------------------------------------------------------ queries ----
+    def counts(self) -> Dict[str, int]:
+        """Aggregate counters for the metrics registry / bench gates."""
+        out = {"records": len(self.records), "decisions": 0,
+               "dispositions": 0}
+        for s in VERDICT_STATUSES:
+            out[f"verdict_{s}"] = 0
+        for d in DISPOSITIONS:
+            out[d] = 0
+        for r in self.records:
+            if r.kind == "decision":
+                out["decisions"] += 1
+                out[f"verdict_{r.verdict.status}"] += 1
+            else:
+                out["dispositions"] += 1
+                out[r.disposition] += 1
+        return out
+
+    # ----------------------------------------------------------- io ----
+    def dump_jsonl(self, path: str) -> str:
+        header = {"schema": AUDIT_SCHEMA, "meta": self.meta}
+        with open(path, "w") as f:
+            f.write(json.dumps(header) + "\n")
+            for r in self.records:
+                f.write(json.dumps(r.to_dict()) + "\n")
+        return path
+
+
+def load_audit_jsonl(path: str) -> Tuple[dict, List[AuditRecord]]:
+    """Round-trip loader for ``medverse-audit/1`` JSONL files."""
+    with open(path) as f:
+        header = json.loads(f.readline())
+        if header.get("schema") != AUDIT_SCHEMA:
+            raise ValueError(
+                f"not a {AUDIT_SCHEMA} file: {header.get('schema')!r}")
+        records = [AuditRecord.from_dict(json.loads(line))
+                   for line in f if line.strip()]
+    return header, records

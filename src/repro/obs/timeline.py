@@ -39,6 +39,11 @@ class StreamTimeline:
     n_tokens: int = 0
     t_spawn: float = 0.0
     t_done: float = 0.0
+    # stage-typed DAG streams ("reason" | "critic" | "guardrail"; empty
+    # for plan/conclusion) and, when the audit trail was on, the verdict
+    # the stream's decision record carried ("pass" | "fail" | "abstain")
+    stage: str = ""
+    verdict: str = ""
 
     @property
     def steps(self) -> int:
@@ -49,6 +54,9 @@ class StreamTimeline:
 class RequestTimeline:
     rid: int
     streams: List[StreamTimeline]
+    # final audit disposition ("verified" | "refuted" | "unverified");
+    # empty when the trace was recorded without the audit trail
+    disposition: str = ""
 
     @property
     def critical_path_steps(self) -> int:
@@ -88,6 +96,7 @@ class RequestTimeline:
             "sum_chain_steps": self.sum_chain_steps,
             "parallelism": self.parallelism,
             "max_overlap": self.max_overlap,
+            "disposition": self.disposition,
             "streams": [dataclasses.asdict(s) for s in self.streams],
         }
 
@@ -100,16 +109,29 @@ def request_timelines(events: List[dict]) -> Dict[int, RequestTimeline]:
     work; a re-admitted request's fresh streams still count."""
     open_streams: Dict[tuple, dict] = {}
     per_rid: Dict[int, List[StreamTimeline]] = {}
+    # audit instants arrive after the stream span they describe closes
+    # (the engine emits the decision once the stream is done), so they
+    # are collected here and attached to the built timelines at the end
+    verdicts: Dict[tuple, str] = {}
+    dispositions: Dict[int, str] = {}
     for ev in events:
+        args = ev.get("args", {})
+        if ev.get("cat") == "audit":
+            if ev.get("name") == "audit":
+                verdicts[(ev.get("rid"), ev.get("track"))] = \
+                    args.get("status", "")
+            elif ev.get("name") == "audit_disposition":
+                dispositions[ev.get("rid")] = args.get("disposition", "")
+            continue
         if ev.get("cat") != "stream":
             continue
         key = (ev.get("rid"), ev.get("track"))
-        args = ev.get("args", {})
         if ev["ph"] == "B" and ev["name"] == "stream":
             open_streams[key] = {
                 "spawn_step": ev["step"], "t_spawn": ev["ts"],
                 "purpose": args.get("purpose", ""),
                 "tid": args.get("tid", -1),
+                "stage": args.get("stage", ""),
                 "first_token_step": -1,
             }
         elif ev["ph"] == "I" and ev["name"] == "first_token":
@@ -128,9 +150,27 @@ def request_timelines(events: List[dict]) -> Dict[int, RequestTimeline]:
                 done_step=ev["step"],
                 first_token_step=st["first_token_step"],
                 n_tokens=args.get("n_tokens", 0),
-                t_spawn=st["t_spawn"], t_done=ev["ts"]))
-    return {rid: RequestTimeline(rid=rid, streams=streams)
+                t_spawn=st["t_spawn"], t_done=ev["ts"],
+                stage=st["stage"]))
+    for rid, streams in per_rid.items():
+        for s in streams:
+            s.verdict = verdicts.get((rid, s.track), "")
+    return {rid: RequestTimeline(rid=rid, streams=streams,
+                                 disposition=dispositions.get(rid, ""))
             for rid, streams in sorted(per_rid.items())}
+
+
+_VERDICT_MARKS = {"pass": "✓", "fail": "✗", "abstain": "?"}
+
+
+def _stream_tag(s: StreamTimeline) -> str:
+    """``t3[12..18]`` plus a ``[critic ✗]``-style stage/verdict suffix
+    for decision stages (only rendered when the stream carried one)."""
+    tag = f"{s.track}[{s.spawn_step}..{s.done_step}]"
+    if s.stage and s.stage != "reason":
+        mark = _VERDICT_MARKS.get(s.verdict, "")
+        tag += f"[{s.stage} {mark}]" if mark else f"[{s.stage}]"
+    return tag
 
 
 def summarize(events: List[dict],
@@ -141,13 +181,15 @@ def summarize(events: List[dict],
     lines = []
     for rid, tl in sorted(timelines.items()):
         tracks = " ".join(
-            f"{s.track}[{s.spawn_step}..{s.done_step}]"
+            _stream_tag(s)
             for s in sorted(tl.streams,
                             key=lambda s: (s.spawn_step, s.track)))
+        verified = (f"verified={tl.disposition} "
+                    if tl.disposition else "")
         lines.append(
             f"rid={rid} streams={len(tl.streams)} "
             f"critical_path={tl.critical_path_steps}st "
             f"sum_chains={tl.sum_chain_steps}st "
             f"parallelism={tl.parallelism:.2f}x "
-            f"max_overlap={tl.max_overlap} | {tracks}")
+            f"max_overlap={tl.max_overlap} {verified}| {tracks}")
     return "\n".join(lines)

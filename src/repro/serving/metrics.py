@@ -32,6 +32,37 @@ class RequestMetrics:
     n_tokens: int = 0             # decoded tokens across all DAG streams
     n_drafted: int = 0            # of those, committed from accepted drafts
     n_preemptions: int = 0
+    # audit trail (empty / zero when EngineConfig.audit is off): final
+    # disposition, decision verdict counts, and per-stage token timing
+    # on the deterministic step clock (stage = "reason" | "critic" |
+    # "guardrail" for DAG step streams; plan/conclusion carry no stage)
+    disposition: str = ""
+    verdicts: Dict[str, int] = dataclasses.field(default_factory=dict)
+    stage_tokens: Dict[str, int] = dataclasses.field(default_factory=dict)
+    stage_first_step: Dict[str, int] = dataclasses.field(
+        default_factory=dict)
+    stage_last_step: Dict[str, int] = dataclasses.field(
+        default_factory=dict)
+
+    def note_stage_token(self, stage: str, step: int) -> None:
+        self.stage_tokens[stage] = self.stage_tokens.get(stage, 0) + 1
+        if stage not in self.stage_first_step:
+            self.stage_first_step[stage] = step
+        self.stage_last_step[stage] = step
+
+    def stage_ttft_steps(self, stage: str) -> float:
+        """Steps from engine admission to the stage's first token."""
+        if stage not in self.stage_first_step or self.admit_step < 0:
+            return NAN
+        return float(self.stage_first_step[stage] - self.admit_step)
+
+    def stage_tpot_steps(self, stage: str) -> float:
+        """Steps per token after the stage's first, across its streams."""
+        n = self.stage_tokens.get(stage, 0)
+        if n <= 1:
+            return NAN
+        return (self.stage_last_step[stage]
+                - self.stage_first_step[stage]) / (n - 1)
 
     @property
     def ttft_s(self) -> float:
@@ -113,6 +144,21 @@ class ServingReport:
     # deterministic-clock TPOT (decode steps per token after the first);
     # mean/p50/p95/p99 like the wall-clock stats above
     tpot_steps: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # verified serving (audit trail on; zero / NaN / empty otherwise):
+    # requests whose AuditReport closed "verified", as a wall-clock rate
+    # (verified_goodput, machine-dependent) and per deterministic decode
+    # step (verified_per_step, CI-gateable), plus the disposition and
+    # decision-verdict tallies and per-stage step-clock latency
+    # breakdowns keyed by stage name
+    n_verified: int = 0
+    verified_goodput: float = NAN       # verified requests per wall second
+    verified_per_step: float = NAN      # verified requests per decode step
+    dispositions: Dict[str, int] = dataclasses.field(default_factory=dict)
+    verdicts: Dict[str, int] = dataclasses.field(default_factory=dict)
+    stage_ttft_steps: Dict[str, Dict[str, float]] = dataclasses.field(
+        default_factory=dict)
+    stage_tpot_steps: Dict[str, Dict[str, float]] = dataclasses.field(
+        default_factory=dict)
     # engine telemetry snapshot (MedVerseEngine.metrics_registry().
     # snapshot()): page-pool lifetime counters, radix hit/miss, spec
     # stats, bucket histograms. None when the caller has no engine.
@@ -130,6 +176,16 @@ class ServingReport:
         spec_stats = spec_stats or {}
         proposed = int(spec_stats.get("proposed", 0))
         accepted = int(spec_stats.get("accepted", 0))
+        dispositions: Dict[str, int] = {}
+        verdicts: Dict[str, int] = {}
+        for m in metrics:
+            if m.disposition:
+                dispositions[m.disposition] = (
+                    dispositions.get(m.disposition, 0) + 1)
+            for k, v in m.verdicts.items():
+                verdicts[k] = verdicts.get(k, 0) + v
+        n_verified = dispositions.get("verified", 0)
+        stages = sorted({s for m in metrics for s in m.stage_tokens})
         return ServingReport(
             policy=policy, closed_batch=closed_batch,
             n_requests=len(metrics), n_completed=len(done),
@@ -151,6 +207,19 @@ class ServingReport:
             spec_accepted=accepted,
             spec_acceptance=accepted / proposed if proposed > 0 else NAN,
             tpot_steps=_stats([m.tpot_steps for m in done]),
+            n_verified=n_verified,
+            verified_goodput=(n_verified / max(duration_s, 1e-9)
+                              if dispositions else NAN),
+            verified_per_step=(n_verified / n_steps
+                               if dispositions and n_steps > 0 else NAN),
+            dispositions=dispositions,
+            verdicts=verdicts,
+            stage_ttft_steps={
+                s: _stats([m.stage_ttft_steps(s) for m in done])
+                for s in stages},
+            stage_tpot_steps={
+                s: _stats([m.stage_tpot_steps(s) for m in done])
+                for s in stages},
             engine=engine_metrics,
         )
 
@@ -170,4 +239,7 @@ class ServingReport:
                 f"preempt={self.n_preemptions}"
                 + (f" spec={self.spec_accepted}/{self.spec_proposed}"
                    f"({self.spec_acceptance:.0%})"
-                   if self.spec_proposed > 0 else ""))
+                   if self.spec_proposed > 0 else "")
+                + (f" verified={self.n_verified}/{self.n_requests}"
+                   f"(vgp={self.verified_goodput:.2f}/s)"
+                   if self.dispositions else ""))

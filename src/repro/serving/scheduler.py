@@ -18,6 +18,14 @@ Two clocks:
 baseline (admit only into an idle engine, i.e. ``generate()`` called
 batch after batch) so continuous-vs-closed is measured on identical
 code paths.
+
+The scheduler is stage-aware: token events from stage-typed DAG
+streams feed per-stage TTFT/TPOT breakdowns, audit events (decisions
+and dispositions from the engine's :class:`~repro.obs.audit.AuditTrail`)
+update per-request verdict tallies and the report's verified-goodput
+block, and the engine itself prioritizes a ready critic transition
+whose verdict unblocks >= 2 sibling branches (``critic_priority``
+trace instants carry the frontier-unblocking count).
 """
 
 from __future__ import annotations
@@ -43,6 +51,9 @@ class ServeRequest:
     deadline_s: Optional[float] = None
     # streaming callback: (rid, token_id, text_piece) per decoded token
     on_token: Optional[Callable[[int, int, str], None]] = None
+    # audit callback: (rid, AuditRecord) per stage decision / disposition
+    # (fires only when the engine runs with EngineConfig.audit on)
+    on_audit: Optional[Callable[[int, object], None]] = None
     rid: int = -1
     # pending|queued|running|preempted|done|failed (failed = could never
     # fit the page pool, even with nothing else running)
@@ -153,9 +164,23 @@ class ContinuousScheduler:
             m.n_tokens += 1
             if ev.drafted:
                 m.n_drafted += 1
+            if ev.stage:
+                # stage-typed DAG step stream: per-stage token counts
+                # and first/last step marks back the report's per-stage
+                # TTFT/TPOT breakdowns (deterministic step clock)
+                m.note_stage_token(ev.stage, self.step_count)
             if req.on_token is not None:
                 req.on_token(ev.rid, ev.token,
                              self.engine.tok.decode([ev.token]))
+        elif ev.kind == "audit":
+            rec = ev.audit
+            if rec.kind == "decision":
+                m.verdicts[rec.verdict.status] = (
+                    m.verdicts.get(rec.verdict.status, 0) + 1)
+            else:
+                m.disposition = rec.disposition
+            if req.on_audit is not None:
+                req.on_audit(ev.rid, rec)
         elif ev.kind == "done":
             m.t_done_s = time.monotonic() - (self._t0 or 0.0)
             m.done_step = self.step_count
@@ -228,6 +253,14 @@ class ContinuousScheduler:
         reqs = (self.finished + list(self._running.values())
                 + self.queue.pending() + self._pending)
         duration = time.monotonic() - (self._t0 or time.monotonic())
+        # requests closed outside the event stream (failure-path aborts)
+        # still got a disposition from the engine's trail: backfill it
+        if self.engine.audit is not None:
+            for r in reqs:
+                if r.rid >= 0 and not r.metrics.disposition:
+                    rep = self.engine.audit.reports.get(r.rid)
+                    if rep is not None:
+                        r.metrics.disposition = rep.disposition
         return ServingReport.build(
             [r.metrics for r in reqs], duration_s=duration,
             n_steps=self.step_count,

@@ -1,0 +1,407 @@
+"""Clinical audit-trail tests: stage-typed plan grammar, the
+deterministic rule-based verdict extractor, audit passivity (temp-0
+output bit-identical with auditing on/off, on every scheduling path and
+both attention backends), edge paths (preemption mid-critic, abort
+before conclusion), the stage-aware critic-priority scheduler, the
+verified-serving report, and the audit JSONL round-trip + validator."""
+
+import json
+import subprocess
+import sys
+
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.core.dag import ReasoningDAG
+from repro.core.petri import ColoredToken, PetriNet, PetriScheduler
+from repro.core.plan import DEFAULT_STAGE, PlanParseError, parse_plan
+from repro.data.tokenizer import Tokenizer
+from repro.engine import EngineConfig, MedVerseEngine
+from repro.models import init_params
+from repro.obs import (AUDIT_SCHEMA, AuditTrail, load_audit_jsonl,
+                       request_timelines, rule_verdict, summarize,
+                       validate_spans)
+from repro.serving import ContinuousScheduler, ServeRequest
+
+CFG = get_config("medverse-7b", smoke=True)
+
+# 5-step staged plan: the critic (step 2) gates two sibling branches
+# (steps 3 and 4 both depend on it — unblock count 2), the guardrail
+# (step 5) joins them. Spaced punctuation per the word-level tokenizer.
+STAGED = (
+    "<Plan> "
+    "<Outline> Transient Step 1: q -> A ; Dependency: [ ] </Outline> "
+    "<Outline> Transient Step 2: verify A ; Dependency: [ 1 ] ; "
+    "Stage: critic </Outline> "
+    "<Outline> Transient Step 3: A -> B ; Dependency: [ 2 ] </Outline> "
+    "<Outline> Transient Step 4: A -> C ; Dependency: [ 2 ] </Outline> "
+    "<Outline> Transient Step 5: safety screen ; Dependency: [ 3 , 4 ] ; "
+    "Stage: guardrail </Outline> "
+    "</Plan>")
+
+REASON_ONLY = (
+    "<Plan> "
+    "<Outline> Transient Step 1: q -> A ; Dependency: [ ] </Outline> "
+    "<Outline> Transient Step 2: q -> B ; Dependency: [ ] </Outline> "
+    "<Outline> Transient Step 3: A , B -> C ; Dependency: [ 1 , 2 ] "
+    "</Outline> </Plan>")
+
+
+def make_tok():
+    corpus = ["alpha beta gamma delta epsilon zeta eta theta iota kappa "
+              "Transient Step 1: 2: 3: 4: 5: 6: 7: 8: 1 2 3 4 5 , [ ] "
+              "Dependency: [] [1] [2] [1, 2] "
+              "Stage: critic guardrail verify safety screen "
+              "A -> B ; C D q x y z"]
+    return Tokenizer.train(corpus)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    tok = make_tok()
+    params = init_params(jax.random.PRNGKey(0), CFG)
+    return tok, params
+
+
+def make_engine(params, tok, **kw):
+    base = dict(max_slots=4, page_size=4, n_pages=512, max_chain_len=256,
+                max_step_tokens=6, max_conclusion_tokens=6)
+    base.update(kw)
+    return MedVerseEngine(params, CFG, tok, EngineConfig(**base))
+
+
+# ------------------------------------------------- stage grammar units -----
+def test_stage_parse_and_default():
+    plan = parse_plan(STAGED)
+    assert [s.stage for s in plan.steps] == [
+        "reason", "critic", "reason", "reason", "guardrail"]
+    legacy = parse_plan(REASON_ONLY)
+    assert all(s.stage == DEFAULT_STAGE for s in legacy.steps)
+
+
+def test_stage_serialize_round_trip():
+    plan = parse_plan(STAGED)
+    again = parse_plan(plan.serialize())
+    assert [(s.index, s.stage, s.dependencies) for s in again.steps] == \
+        [(s.index, s.stage, s.dependencies) for s in plan.steps]
+    # default-stage steps serialize without a Stage clause: the legacy
+    # grammar is emitted unchanged for legacy plans
+    assert "Stage:" not in parse_plan(REASON_ONLY).serialize()
+
+
+def test_unknown_stage_strict_vs_lenient():
+    bad = STAGED.replace("Stage: critic", "Stage: judge")
+    with pytest.raises(PlanParseError):
+        parse_plan(bad)             # strict: closed vocabulary
+    plan = parse_plan(bad, lenient=True)   # engine-side: degrade
+    assert plan.steps[1].stage == "reason"
+
+
+def test_unk_stage_degrades_to_reason():
+    """A staged plan decoded through a stale tokenizer turns the stage
+    clause into <unk> tokens; the outline must survive with the default
+    stage rather than being dropped."""
+    for mangled in (STAGED.replace("Stage: critic", "Stage: <unk>"),
+                    STAGED.replace("Stage: critic", "<unk> <unk>")):
+        plan = parse_plan(mangled, lenient=True)
+        assert len(plan.steps) == 5
+        assert plan.steps[1].stage == "reason"
+
+
+def test_dag_stages_sparse_and_backward_compatible():
+    plan = parse_plan(STAGED)
+    dag = plan.to_dag()
+    assert dag.stage_of(1) == "critic"
+    assert dag.stage_of(0) == "reason"
+    assert 0 not in dag.stages       # default stages are not stored...
+    legacy = parse_plan(REASON_ONLY).to_dag()
+    # ...so an all-reason DAG equals its stage-free construction
+    assert legacy == ReasoningDAG.from_deps(
+        {0: (), 1: (), 2: (0, 1)})
+
+
+def test_petri_stage_and_unblock_count():
+    dag = parse_plan(STAGED).to_dag()
+    net = PetriNet.from_dag(dag)
+    by_tid = {t.tid: t for t in net.transitions}
+    assert by_tid[1].stage == "critic"
+    sched = PetriScheduler(net, ColoredToken(history="ctx"))
+    sched.fire(by_tid[0], ColoredToken(history="h0"))
+    # firing the critic enables both siblings (steps 3 and 4)
+    assert sched.unblock_count(by_tid[1]) == 2
+    assert sched.unblock_count(by_tid[4]) == 0
+
+
+# --------------------------------------------- verdict extractor units -----
+def test_rule_verdict_markers_last_wins():
+    v = rule_verdict("finding looks inconsistent but ultimately "
+                     "confirmed against labs")
+    assert v.status == "pass" and "confirmed" in v.reason
+    assert v.span[0] >= 0
+    v = rule_verdict("initially plausible yet finally contraindicated")
+    assert v.status == "fail" and v.evidence == "contraindicated"
+
+
+def test_rule_verdict_evidence_overlap():
+    ev = "elevated troponin suggests cardiac injury"
+    assert rule_verdict("troponin elevated matches cardiac marker",
+                        ev).status == "pass"
+    # substantive body, zero shared content words: ungrounded critique
+    assert rule_verdict("glucose ferritin albumin bilirubin",
+                        ev).status == "fail"
+    # too short to decide anything
+    assert rule_verdict("brief note", ev).status == "abstain"
+
+
+def test_rule_verdict_deterministic():
+    body, ev = "troponin elevated matches cardiac marker", "troponin cardiac"
+    assert rule_verdict(body, ev) == rule_verdict(body, ev)
+
+
+# -------------------------------------------------- trail unit + jsonl -----
+def test_audit_trail_dispositions():
+    trail = AuditTrail()
+    # verified: critic passes, guardrail clean
+    trail.on_stream_end(0, 0, "reason", "q alpha", "", step=1)
+    trail.on_stream_end(0, 1, "critic", "finding confirmed correct", "",
+                        step=2)
+    trail.on_stream_end(0, 2, "guardrail", "dose safe", "", step=3)
+    rep = trail.finish_request(0, completed=True, step=4).report
+    assert rep.disposition == "verified" and rep.critic_coverage == 1.0
+    # refuted: guardrail violation
+    trail.on_stream_end(1, 0, "critic", "finding confirmed correct", "",
+                        step=5)
+    trail.on_stream_end(1, 1, "guardrail",
+                        "combination contraindicated here", "", step=6)
+    rep = trail.finish_request(1, completed=True, step=7).report
+    assert rep.disposition == "refuted"
+    assert rep.guardrail_violations == 1
+    # unverified: no critics at all
+    trail.on_stream_end(2, 0, "reason", "q beta", "", step=8)
+    rep = trail.finish_request(2, completed=True, step=9).report
+    assert rep.disposition == "unverified"
+    # unverified: abort before conclusion
+    trail.on_stream_end(3, 0, "critic", "finding confirmed correct", "",
+                        step=10)
+    rep = trail.finish_request(3, completed=False, step=11).report
+    assert rep.disposition == "unverified" and rep.completed is False
+
+
+def test_audit_preempt_drops_partial_decisions():
+    trail = AuditTrail()
+    trail.on_stream_end(0, 1, "critic", "finding confirmed", "", step=2)
+    trail.on_preempt(0)
+    assert trail.records == []       # deferred to the re-run
+    # re-admission re-decodes and re-records; exactly one decision and
+    # one disposition survive
+    trail.on_stream_end(0, 1, "critic", "finding confirmed", "", step=9)
+    trail.finish_request(0, completed=True, step=10)
+    kinds = [r.kind for r in trail.records]
+    assert kinds == ["decision", "disposition"]
+
+
+def test_audit_jsonl_round_trip(tmp_path):
+    trail = AuditTrail(meta={"model": "t"})
+    trail.on_stream_end(0, 1, "critic", "finding confirmed correct", "",
+                        step=2, track="t1")
+    trail.finish_request(0, completed=True, step=3)
+    path = trail.dump_jsonl(str(tmp_path / "audit.jsonl"))
+    header, records = load_audit_jsonl(path)
+    assert header["schema"] == AUDIT_SCHEMA
+    assert header["meta"] == {"model": "t"}
+    assert [r.to_dict() for r in records] == \
+        [r.to_dict() for r in trail.records]
+    with pytest.raises(ValueError):
+        bad = tmp_path / "bad.jsonl"
+        bad.write_text(json.dumps({"schema": "other/1"}) + "\n")
+        load_audit_jsonl(str(bad))
+
+
+# ------------------------------------------------- engine integration ------
+PARITY_CASES = [
+    ("dense", {}),
+    ("dense", {"async_frontier": True}),
+    ("dense", {"speculative": True}),
+    ("dense", {"n_pages": 48}),             # tight pool forces preemption
+    ("pallas", {}),
+]
+
+
+@pytest.mark.parametrize(
+    "backend,variant", PARITY_CASES,
+    ids=["dense", "async", "spec", "preempt", "pallas"])
+def test_temp0_parity_audit_on_off(setup, backend, variant):
+    """Auditing is passive on every scheduling path (sync, async,
+    speculative, preemption) under both attention backends: temp-0
+    output text and decode-iteration counts are bit-identical with the
+    audit trail on or off."""
+    tok, params = setup
+    kw = dict(plan_override=STAGED, attention_backend=backend,
+              kernel_interpret=True, **variant)
+    prompts = ["q alpha beta", "q beta gamma"]
+    off = make_engine(params, tok, **kw)
+    r_off = off.generate(prompts)
+    on = make_engine(params, tok, audit=True, **kw)
+    r_on = on.generate(prompts)
+    assert [r.text for r in r_on] == [r.text for r in r_off]
+    assert [r.step_texts for r in r_on] == [r.step_texts for r in r_off]
+    assert on.total_iters == off.total_iters
+    assert len(on.audit.records) > 0       # ...while actually auditing
+    # every request closed with exactly one disposition, and no stream
+    # produced a duplicate decision (preemption defers, never doubles)
+    per_rid = {}
+    seen = set()
+    for r in on.audit.records:
+        if r.kind == "disposition":
+            per_rid[r.rid] = per_rid.get(r.rid, 0) + 1
+        else:
+            assert (r.rid, r.node) not in seen
+            seen.add((r.rid, r.node))
+    assert per_rid == {0: 1, 1: 1}
+    if variant.get("n_pages") == 48:
+        assert on.preemptions > 0          # the path actually exercised
+
+
+def test_spec_decoding_bit_identical_verdicts(setup):
+    """Speculative decoding commits the same temp-0 text, so the audit
+    trail's verdicts are bit-identical with the drafter on or off."""
+    tok, params = setup
+    base = dict(plan_override=STAGED, audit=True)
+    plain = make_engine(params, tok, **base)
+    plain.generate(["q alpha beta", "q beta gamma"])
+    spec = make_engine(params, tok, speculative=True, **base)
+    spec.generate(["q alpha beta", "q beta gamma"])
+
+    def sig(eng):
+        return [(r.rid, r.node, r.stage, r.verdict.status,
+                 r.verdict.reason) if r.kind == "decision"
+                else (r.rid, r.disposition)
+                for r in eng.audit.records]
+
+    assert sig(spec) == sig(plain)
+
+
+def test_abort_yields_unverified_and_balanced_spans(setup):
+    tok, params = setup
+    eng = make_engine(params, tok, plan_override=STAGED, audit=True,
+                      trace=True)
+    rid = eng.add_request("q alpha beta")
+    for _ in range(3):
+        eng.step()
+    eng.abort(rid)
+    rep = eng.audit.reports[rid]
+    assert rep.disposition == "unverified" and rep.completed is False
+    assert validate_spans(eng.obs.events) == []
+
+
+def test_critic_priority_fires_on_gate_plan(setup):
+    """A ready critic whose verdict unblocks >= 2 sibling branches is
+    prioritized, and the decision is visible in the trace; all-reason
+    plans never trigger it (legacy schedule untouched)."""
+    tok, params = setup
+    eng = make_engine(params, tok, plan_override=STAGED, trace=True)
+    eng.generate(["q alpha beta"])
+    prios = [ev for ev in eng.obs.events
+             if ev["name"] == "critic_priority"]
+    assert prios and all(ev["args"]["unblocks"] >= 2 for ev in prios)
+
+    legacy = make_engine(params, tok, plan_override=REASON_ONLY,
+                         trace=True)
+    legacy.generate(["q alpha beta"])
+    assert not [ev for ev in legacy.obs.events
+                if ev["name"] == "critic_priority"]
+
+
+def test_metrics_registry_exposes_audit_counters(setup):
+    tok, params = setup
+    eng = make_engine(params, tok, plan_override=STAGED, audit=True)
+    eng.generate(["q alpha beta"])
+    text = eng.metrics_registry().to_prom_text()
+    assert "medverse_audit_records_total" in text
+    assert "medverse_audit_verdict_abstain_total" in text
+    assert "medverse_audit_disposition_unverified_total" in text
+
+
+# -------------------------------------------- timeline + serving layer -----
+def test_timeline_stage_and_verdict_annotations(setup):
+    tok, params = setup
+    eng = make_engine(params, tok, plan_override=STAGED, audit=True,
+                      trace=True)
+    eng.generate(["q alpha beta"])
+    tls = request_timelines(eng.obs.events)
+    tl = tls[0]
+    assert tl.disposition in ("verified", "refuted", "unverified")
+    by_track = {s.track: s for s in tl.streams}
+    assert by_track["t2"].stage == "critic"
+    assert by_track["t2"].verdict in ("pass", "fail", "abstain")
+    assert by_track["t1"].stage == "reason" and not by_track["t1"].verdict
+    text = summarize(eng.obs.events, tls)
+    assert "[critic" in text and "verified=" in text
+
+
+def test_serving_report_verified_block(setup):
+    tok, params = setup
+    eng = make_engine(params, tok, plan_override=STAGED, audit=True)
+    sched = ContinuousScheduler(eng, clock="step")
+    seen = []
+    rep = sched.run([
+        ServeRequest(prompt="q alpha beta", plan=STAGED, arrival=0.0,
+                     on_audit=lambda rid, rec: seen.append(rec.kind)),
+        ServeRequest(prompt="q beta gamma", plan=STAGED, arrival=3.0)])
+    assert sum(rep.dispositions.values()) == 2
+    assert sum(rep.verdicts.values()) == 4      # 2 x (critic + guardrail)
+    assert set(rep.stage_ttft_steps) == {"reason", "critic", "guardrail"}
+    assert "critic" in rep.stage_tpot_steps
+    assert rep.n_verified == rep.dispositions.get("verified", 0)
+    assert "verified=" in rep.summary()
+    assert "decision" in seen and "disposition" in seen
+    d = rep.to_dict()
+    assert "verified_goodput" in d and "verified_per_step" in d
+
+
+def test_serving_report_without_audit_unchanged(setup):
+    tok, params = setup
+    eng = make_engine(params, tok, plan_override=STAGED)
+    rep = ContinuousScheduler(eng, clock="step").run(
+        [ServeRequest(prompt="q alpha beta", plan=STAGED, arrival=0.0)])
+    assert rep.dispositions == {} and rep.verdicts == {}
+    assert "verified=" not in rep.summary()
+
+
+# -------------------------------------------------- validator coverage -----
+def test_check_trace_accepts_audited_artifacts(setup, tmp_path):
+    tok, params = setup
+    eng = make_engine(params, tok, plan_override=STAGED, audit=True,
+                      trace=True)
+    eng.generate(["q alpha beta", "q beta gamma"])
+    trace = str(tmp_path / "trace.jsonl")
+    audit = str(tmp_path / "audit.jsonl")
+    eng.dump_trace(trace)
+    eng.dump_audit(audit)
+    proc = subprocess.run(
+        [sys.executable, "tools/check_trace.py", trace, audit],
+        capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_check_trace_rejects_bad_audit(setup, tmp_path):
+    tok, params = setup
+    eng = make_engine(params, tok, plan_override=STAGED, audit=True)
+    eng.generate(["q alpha beta"])
+    audit = str(tmp_path / "audit.jsonl")
+    eng.dump_audit(audit)
+    lines = open(audit).read().splitlines()
+    doc = [json.loads(ln) for ln in lines]
+    # corrupt a verdict and drop the disposition
+    for d in doc[1:]:
+        if d.get("kind") == "decision":
+            d["verdict"]["status"] = "maybe"
+    doc = [d for d in doc if d.get("kind") != "disposition"]
+    with open(audit, "w") as f:
+        f.write("\n".join(json.dumps(d) for d in doc) + "\n")
+    proc = subprocess.run(
+        [sys.executable, "tools/check_trace.py", audit],
+        capture_output=True, text=True)
+    assert proc.returncode == 1
+    assert "status" in proc.stdout and "disposition" in proc.stdout

@@ -22,11 +22,24 @@ traces ``MedVerseEngine.dump_trace`` / ``serve.py --trace`` /
   event belongs to a request whose ``request`` span was opened; every
   ``page`` id in a kvcache event lies inside the pool recorded in the
   header (``meta.n_pages``);
-* ``X`` events carry a non-negative ``dur``.
+* ``X`` events carry a non-negative ``dur``;
+* audit events (``cat="audit"``, emitted when ``EngineConfig.audit`` is
+  on) are instants landing inside their request's open span, decision
+  events reference a stream track the request actually ran and carry a
+  stage/status from the closed vocabularies, and every audited request
+  that finished (completed or aborted — not one that ended the trace
+  preempted) carries its final disposition exactly once.
+
+Standalone audit files (``medverse-audit/1`` JSONL, written by
+``MedVerseEngine.dump_audit`` / ``serve.py --audit-log``) are detected
+by their header schema and get their own structural checks: known
+record kinds, closed verdict/disposition/stage vocabularies, a
+non-decreasing step clock, and exactly one disposition per request.
 
 Usage::
 
     python tools/check_trace.py results/serving_trace.jsonl [more...]
+    python tools/check_trace.py results/serving_audit.jsonl
 
 Exit 0 and a one-line summary per file when clean; exit 1 with every
 problem listed otherwise. A sibling ``*.chrome.json`` export, when
@@ -42,7 +55,12 @@ import sys
 from typing import Dict, List, Optional, Tuple
 
 SCHEMA = "medverse-trace/1"
+AUDIT_SCHEMA = "medverse-audit/1"
 PHASES = ("B", "E", "I", "X", "C")
+# closed vocabularies mirroring repro.obs.audit (stdlib-only: no import)
+DECISION_STAGES = ("critic", "guardrail")
+VERDICT_STATUSES = ("pass", "fail", "abstain")
+DISPOSITIONS = ("verified", "refuted", "unverified")
 
 
 def load(path: str) -> Tuple[dict, List[dict]]:
@@ -51,10 +69,10 @@ def load(path: str) -> Tuple[dict, List[dict]]:
     if not lines:
         raise ValueError("empty file")
     header, events = lines[0], lines[1:]
-    if header.get("schema") != SCHEMA:
+    if header.get("schema") not in (SCHEMA, AUDIT_SCHEMA):
         raise ValueError(
             f"bad header schema: {header.get('schema')!r} "
-            f"(want {SCHEMA!r})")
+            f"(want {SCHEMA!r} or {AUDIT_SCHEMA!r})")
     return header, events
 
 
@@ -65,6 +83,14 @@ def check_events(header: dict, events: List[dict]) -> List[str]:
     warmup_step: Optional[int] = meta.get("warmup_step")
     open_spans: Dict[tuple, List[str]] = {}
     requests_seen = set()
+    # audit cross-ref state: request spans currently open, the stream
+    # tracks each request ran, disposition counts, and how each rid's
+    # request span last ended (completed / "aborted" / "preempted")
+    requests_open = set()
+    stream_tracks: Dict[int, set] = {}
+    disposition_count: Dict[int, int] = {}
+    rids_with_decisions = set()
+    last_end_reason: Dict[int, Optional[str]] = {}
     last_step = -1
     # per counter-series state: last step and (cost_* only) last values
     counter_step: Dict[str, int] = {}
@@ -131,11 +157,56 @@ def check_events(header: dict, events: List[dict]) -> List[str]:
         # request lifecycle / cross-refs
         if ph == "B" and name == "request":
             requests_seen.add(rid)
+            requests_open.add(rid)
+        elif ph == "E" and name == "request":
+            requests_open.discard(rid)
+            last_end_reason[rid] = ev.get("args", {}).get("reason")
         elif rid is not None and ev.get("cat") in ("stream", "spec"):
             if rid not in requests_seen:
                 problems.append(
                     f"{where}: {name} references rid={rid} with no "
                     f"request span opened")
+        if (ph == "B" and name == "stream"
+                and ev.get("track") is not None):
+            stream_tracks.setdefault(rid, set()).add(ev["track"])
+        # audit events: instants inside the request's open span, closed
+        # vocabularies, decisions cross-referencing a real stream track
+        if ev.get("cat") == "audit":
+            if ph != "I":
+                problems.append(f"{where}: audit event with phase "
+                                f"{ph!r} (want I)")
+            if rid not in requests_open:
+                problems.append(
+                    f"{where}: audit {name!r} for rid={rid} outside "
+                    f"any open request span")
+            args = ev.get("args", {})
+            if name == "audit":
+                rids_with_decisions.add(rid)
+                if args.get("stage") not in DECISION_STAGES:
+                    problems.append(
+                        f"{where}: audit decision with stage "
+                        f"{args.get('stage')!r} (want one of "
+                        f"{DECISION_STAGES})")
+                if args.get("status") not in VERDICT_STATUSES:
+                    problems.append(
+                        f"{where}: audit decision with status "
+                        f"{args.get('status')!r} (want one of "
+                        f"{VERDICT_STATUSES})")
+                track = ev.get("track")
+                if track not in stream_tracks.get(rid, ()):
+                    problems.append(
+                        f"{where}: audit decision references stream "
+                        f"track {track!r} rid={rid} that never opened")
+            elif name == "audit_disposition":
+                if args.get("disposition") not in DISPOSITIONS:
+                    problems.append(
+                        f"{where}: disposition "
+                        f"{args.get('disposition')!r} (want one of "
+                        f"{DISPOSITIONS})")
+                disposition_count[rid] = disposition_count.get(rid, 0) + 1
+            else:
+                problems.append(
+                    f"{where}: unknown audit event name {name!r}")
         page = ev.get("args", {}).get("page")
         if page is not None and n_pages is not None:
             if not (isinstance(page, int) and 0 <= page < n_pages):
@@ -162,6 +233,84 @@ def check_events(header: dict, events: List[dict]) -> List[str]:
     for lane, stack in open_spans.items():
         for name in stack:
             problems.append(f"span {name!r} on lane {lane} never closed")
+    # every audited request that finished (its last request span did not
+    # end in preemption) must carry its disposition exactly once; a
+    # preempted-then-readmitted request legitimately re-emits decision
+    # instants, but never a second disposition
+    for rid, n in disposition_count.items():
+        if n > 1:
+            problems.append(
+                f"rid={rid} carries {n} audit dispositions (want 1)")
+    for rid in sorted(rids_with_decisions):
+        if (disposition_count.get(rid, 0) == 0
+                and last_end_reason.get(rid) != "preempted"):
+            problems.append(
+                f"rid={rid} has audit decisions but no final "
+                f"disposition")
+    return problems
+
+
+def check_audit_records(records: List[dict]) -> List[str]:
+    """Structural checks for a ``medverse-audit/1`` record list."""
+    problems: List[str] = []
+    last_step = -1
+    disposition_count: Dict[int, int] = {}
+    rids = set()
+    for i, rec in enumerate(records):
+        where = f"record {i}"
+        kind = rec.get("kind")
+        rid = rec.get("rid")
+        if not isinstance(rid, int) or rid < 0:
+            problems.append(f"{where}: bad rid {rid!r}")
+            continue
+        rids.add(rid)
+        step = rec.get("step")
+        if not isinstance(step, int) or step < 0:
+            problems.append(f"{where}: bad step {step!r}")
+        else:
+            if step < last_step:
+                problems.append(
+                    f"{where}: step clock went backwards "
+                    f"({last_step} -> {step})")
+            last_step = max(last_step, step)
+        if kind == "decision":
+            if rec.get("stage") not in DECISION_STAGES:
+                problems.append(
+                    f"{where}: decision stage {rec.get('stage')!r} "
+                    f"(want one of {DECISION_STAGES})")
+            if not isinstance(rec.get("node"), int) or rec["node"] < 0:
+                problems.append(f"{where}: bad node {rec.get('node')!r}")
+            verdict = rec.get("verdict")
+            if not isinstance(verdict, dict):
+                problems.append(f"{where}: decision without verdict")
+            elif verdict.get("status") not in VERDICT_STATUSES:
+                problems.append(
+                    f"{where}: verdict status {verdict.get('status')!r} "
+                    f"(want one of {VERDICT_STATUSES})")
+        elif kind == "disposition":
+            d = rec.get("disposition")
+            if d not in DISPOSITIONS:
+                problems.append(
+                    f"{where}: disposition {d!r} (want one of "
+                    f"{DISPOSITIONS})")
+            report = rec.get("report")
+            if not isinstance(report, dict):
+                problems.append(f"{where}: disposition without report")
+            elif report.get("disposition") != d:
+                problems.append(
+                    f"{where}: report disposition "
+                    f"{report.get('disposition')!r} != record {d!r}")
+            disposition_count[rid] = disposition_count.get(rid, 0) + 1
+        else:
+            problems.append(f"{where}: unknown kind {kind!r}")
+    # exactly one disposition per request appearing anywhere in the file
+    # (preempted requests have their partial decisions dropped by the
+    # trail, so any surviving decision implies the request finished)
+    for rid in sorted(rids):
+        n = disposition_count.get(rid, 0)
+        if n != 1:
+            problems.append(
+                f"rid={rid} has {n} dispositions (want exactly 1)")
     return problems
 
 
@@ -187,6 +336,14 @@ def check_file(path: str) -> List[str]:
         header, events = load(path)
     except (OSError, ValueError) as e:
         return [f"{path}: {e}"]
+    if header.get("schema") == AUDIT_SCHEMA:
+        problems = [f"{path}: {p}" for p in check_audit_records(events)]
+        if not problems:
+            n_disp = sum(1 for r in events
+                         if r.get("kind") == "disposition")
+            print(f"{path}: OK — {len(events)} audit records, "
+                  f"{n_disp} dispositions")
+        return problems
     problems = [f"{path}: {p}" for p in check_events(header, events)]
     base = path[: -len(".jsonl")] if path.endswith(".jsonl") else path
     chrome = base + ".chrome.json"

@@ -67,9 +67,9 @@ def analyze(header: dict, events: List[dict]) -> dict:
         ph = ev.get("ph")
         final_step = max(final_step, ev.get("step", 0))
         if ph == "C":
-            counters[ev["name"]] = ev.get("values", {})
+            counters[ev.get("name", "")] = ev.get("values", {})
         elif ph == "X":
-            name = ev["name"]
+            name = ev.get("name", "")
             span_time[name] = span_time.get(name, 0.0) + ev.get("dur", 0.0)
             span_count[name] = span_count.get(name, 0) + 1
             if name == "compile":
@@ -88,6 +88,10 @@ def analyze(header: dict, events: List[dict]) -> dict:
     useful = pad.get("useful_kv", 0)
     padded = pad.get("padded_kv", 0)
     return {
+        # traces recorded with cost_accounting=False carry no cost_*
+        # counter tracks at all — the renderers fall back to wall-time /
+        # step attribution instead of printing misleading zeros
+        "has_cost": any(n.startswith("cost_") for n in counters),
         "n_events": len(events),
         "n_requests": n_requests,
         "final_step": final_step,
@@ -120,30 +124,42 @@ def _fmt(v, width: int) -> str:
     return f"{v:,}".rjust(width)
 
 
+NO_COST_NOTE = ("note: no cost_* counter tracks in this trace (recorded "
+                "with cost_accounting=False); showing step/time "
+                "attribution only")
+
+
 def render(path: str, a: dict) -> str:
     lines = [f"{path}: {a['n_events']} events, {a['n_requests']} requests, "
              f"final step {a['final_step']}"]
+    if not a["has_cost"]:
+        lines.append(NO_COST_NOTE)
     cols = ("phase", "steps", "time_s", "attn_flops")
     widths = (12, 8, 12, 18)
+    if not a["has_cost"]:
+        cols, widths = cols[:3], widths[:3]
     lines.append("".join(c.rjust(w) if i else c.ljust(w)
                          for i, (c, w) in enumerate(zip(cols, widths))))
     for ph in PHASES:
         row = (ph, a["steps"][ph], a["time_s"][ph], a["attn_flops"][ph])
         lines.append(row[0].ljust(widths[0])
                      + "".join(_fmt(v, w) for v, w in
-                               zip(row[1:], widths[1:])))
-    total_flops = sum(a["attn_flops"][ph] for ph in PHASES)
-    lines.append("total".ljust(widths[0])
-                 + _fmt(None, widths[1]) + _fmt(None, widths[2])
-                 + _fmt(total_flops, widths[3]))
-    lines.append("")
-    lines.append(f"kv bytes: read {a['kv_read_bytes']:,}  "
-                 f"written {a['kv_write_bytes']:,}")
-    lines.append(f"padding:  useful_kv {a['useful_kv']:,}  "
-                 f"padded_kv {a['padded_kv']:,}  "
-                 f"waste {a['waste_ratio']:.1%}  "
-                 f"padded_rows {a['padded_rows']:,}")
-    lines.append(f"pages:    gathers {a['page_gathers']:,}")
+                               zip(row[1:len(cols)], widths[1:])))
+    if a["has_cost"]:
+        total_flops = sum(a["attn_flops"][ph] for ph in PHASES)
+        lines.append("total".ljust(widths[0])
+                     + _fmt(None, widths[1]) + _fmt(None, widths[2])
+                     + _fmt(total_flops, widths[3]))
+        lines.append("")
+        lines.append(f"kv bytes: read {a['kv_read_bytes']:,}  "
+                     f"written {a['kv_write_bytes']:,}")
+        lines.append(f"padding:  useful_kv {a['useful_kv']:,}  "
+                     f"padded_kv {a['padded_kv']:,}  "
+                     f"waste {a['waste_ratio']:.1%}  "
+                     f"padded_rows {a['padded_rows']:,}")
+        lines.append(f"pages:    gathers {a['page_gathers']:,}")
+    else:
+        lines.append("")
     warm = (f" (warmup ended step {a['warmup_step']})"
             if a["warmup_step"] is not None else "")
     lines.append(f"compiles: {a['compiles']} "
@@ -152,38 +168,51 @@ def render(path: str, a: dict) -> str:
     return "\n".join(lines)
 
 
+# (label, getter, needs_cost) — cost rows only render when both traces
+# carry the cost_* counter tracks
 _DIFF_FIELDS = (
-    ("decode steps", lambda a: a["steps"]["decode"]),
-    ("prefills", lambda a: a["steps"]["prefill"]),
-    ("attn_flops total", lambda a: sum(a["attn_flops"][p] for p in PHASES)),
-    ("attn_flops prefill", lambda a: a["attn_flops"]["prefill"]),
-    ("attn_flops decode", lambda a: a["attn_flops"]["decode"]),
-    ("attn_flops spec_verify", lambda a: a["attn_flops"]["spec_verify"]),
-    ("kv_read_bytes", lambda a: a["kv_read_bytes"]),
-    ("kv_write_bytes", lambda a: a["kv_write_bytes"]),
-    ("useful_kv", lambda a: a["useful_kv"]),
-    ("padded_kv", lambda a: a["padded_kv"]),
-    ("padded_rows", lambda a: a["padded_rows"]),
-    ("page_gathers", lambda a: a["page_gathers"]),
-    ("compiles", lambda a: a["compiles"]),
-    ("recompiles after warmup", lambda a: a["compiles_after_warmup"]),
-    ("events", lambda a: a["n_events"]),
+    ("decode steps", lambda a: a["steps"]["decode"], False),
+    ("prefills", lambda a: a["steps"]["prefill"], False),
+    ("attn_flops total",
+     lambda a: sum(a["attn_flops"][p] for p in PHASES), True),
+    ("attn_flops prefill", lambda a: a["attn_flops"]["prefill"], True),
+    ("attn_flops decode", lambda a: a["attn_flops"]["decode"], True),
+    ("attn_flops spec_verify",
+     lambda a: a["attn_flops"]["spec_verify"], True),
+    ("kv_read_bytes", lambda a: a["kv_read_bytes"], True),
+    ("kv_write_bytes", lambda a: a["kv_write_bytes"], True),
+    ("useful_kv", lambda a: a["useful_kv"], True),
+    ("padded_kv", lambda a: a["padded_kv"], True),
+    ("padded_rows", lambda a: a["padded_rows"], True),
+    ("page_gathers", lambda a: a["page_gathers"], True),
+    ("compiles", lambda a: a["compiles"], False),
+    ("recompiles after warmup", lambda a: a["compiles_after_warmup"], False),
+    ("events", lambda a: a["n_events"], False),
 )
 
 
 def render_diff(pa: str, a: dict, pb: str, b: dict) -> str:
-    lines = [f"diff: {pa} -> {pb}",
-             f"{'metric':<24}{'a':>16}{'b':>16}{'delta':>16}  rel"]
-    for label, get in _DIFF_FIELDS:
+    lines = [f"diff: {pa} -> {pb}"]
+    both_cost = a["has_cost"] and b["has_cost"]
+    if not both_cost:
+        missing = [p for p, x in ((pa, a), (pb, b)) if not x["has_cost"]]
+        lines.append(f"note: no cost_* counter tracks in "
+                     f"{' and '.join(missing)} (cost_accounting=False); "
+                     f"diffing steps/time only")
+    lines.append(f"{'metric':<24}{'a':>16}{'b':>16}{'delta':>16}  rel")
+    for label, get, needs_cost in _DIFF_FIELDS:
+        if needs_cost and not both_cost:
+            continue
         va, vb = get(a), get(b)
         d = vb - va
         rel = f"{d / va:+.1%}" if va else ("n/a" if d else "0%")
         mark = "" if d == 0 else "  <-- changed"
         lines.append(f"{label:<24}{va:>16,}{vb:>16,}{d:>+16,}  "
                      f"{rel}{mark}")
-    wa, wb = a["waste_ratio"], b["waste_ratio"]
-    lines.append(f"{'padding waste ratio':<24}{wa:>16.4f}{wb:>16.4f}"
-                 f"{wb - wa:>+16.4f}")
+    if both_cost:
+        wa, wb = a["waste_ratio"], b["waste_ratio"]
+        lines.append(f"{'padding waste ratio':<24}{wa:>16.4f}{wb:>16.4f}"
+                     f"{wb - wa:>+16.4f}")
     return "\n".join(lines)
 
 
