@@ -108,9 +108,10 @@ from ..obs.cost import CompileWatcher, CostGeometry, CostLedger
 from ..obs.metrics import MetricsRegistry
 from ..obs.trace import NULL_RECORDER, TraceRecorder
 from .kvcache import (IndexChain, OutOfPagesError, PageAllocator, PoolConfig,
-                      init_pool)
+                      init_pool, pages_for_budget)
 from .paged_model import (check_backend, paged_decode, prefill_forward,
-                          prefix_pool_write, supports_paged)
+                          prefix_pool_write, prefix_pool_write_quant,
+                          supports_paged)
 from .radix import RadixTree
 from .sampling import SamplingParams, sample_token
 from .spec import Drafter, make_drafter
@@ -121,6 +122,34 @@ class EngineConfig:
     max_slots: int = 8
     page_size: int = 16
     n_pages: int = 4096
+    # KV pool storage dtype: "f32" keeps K/V in the model dtype;
+    # "int8" stores K/V as int8 with one float32 absmax scale per
+    # (layer, page, kv_head) — the pool body shrinks 4x, both attention
+    # backends dequantize on read (the pallas path in VMEM, inside the
+    # kernel), and temperature-0 decoding stays on the same argmax
+    # (quantization noise is bounded by the per-page absmax contract;
+    # pinned by tests/test_kv_quant.py). Defaults from $ENGINE_KV_DTYPE
+    # so the full test/bench surface runs under either pool unmodified
+    # (the CI matrix sets it).
+    kv_dtype: str = dataclasses.field(
+        default_factory=lambda: os.environ.get("ENGINE_KV_DTYPE", "f32"))
+    # byte budget for the KV pool: when set, ``n_pages`` is ignored and
+    # derived as kv_pool_bytes // PoolConfig.page_bytes (int8 scale
+    # arrays included) — the honest way to compare pool dtypes at equal
+    # memory: an int8 pool holds ~4x the pages, so the same budget
+    # admits more live chains and preempts strictly less often under
+    # pressure.
+    kv_pool_bytes: Optional[int] = None
+    # chunked prefill: when > 0, a prompt whose uncached suffix is
+    # longer than this many tokens skips the monolithic
+    # ``prefill_forward`` call and instead queues the suffix on its
+    # stream; the regular batched decode step ingests it as prompt rows
+    # (at most ``prefill_chunk`` per stream per step, and only into
+    # batch rows the step would otherwise pad), so admitted requests
+    # keep decoding while a long prompt fills its pages incrementally —
+    # no head-of-line stall, no new compiled shapes. 0 keeps every
+    # prompt on the monolithic bucketed prefill.
+    prefill_chunk: int = 0
     max_chain_len: int = 640
     min_chain_bucket: int = 64     # smallest power-of-two decode bucket
     max_plan_tokens: int = 256
@@ -243,7 +272,8 @@ class _Stream:
     __slots__ = ("chain", "q_pos", "forced", "next_input", "generated",
                  "purpose", "stop_id", "max_new", "done", "finish_after",
                  "n_generated", "rid", "tid", "history", "seq_ok",
-                 "stage", "n_header", "priority")
+                 "stage", "n_header", "priority", "pending_prompt",
+                 "n_prompt", "n_cached", "chunk_seq")
 
     def __init__(self, chain: IndexChain, q_pos: int, purpose: str,
                  rid: int, tid: int = -1, stop_id: int = EOS,
@@ -277,6 +307,15 @@ class _Stream:
         self.stage = ""
         self.n_header = 0
         self.priority = False
+        # chunked prefill (EngineConfig.prefill_chunk): the not-yet-
+        # ingested prompt suffix. While non-empty the stream feeds
+        # prompt rows (no sampling, no token events) through the decode
+        # step; n_prompt/n_cached/chunk_seq back the per-chunk trace
+        # spans and the deferred radix insert.
+        self.pending_prompt: deque = deque()
+        self.n_prompt = 0
+        self.n_cached = 0
+        self.chunk_seq = 0
 
 
 class _Request:
@@ -329,12 +368,23 @@ class MedVerseEngine:
         self.tok = tok
         self.ecfg = ecfg or EngineConfig()
         check_backend(cfg, self.ecfg.attention_backend)
+        if self.ecfg.kv_dtype not in ("f32", "int8"):
+            raise ValueError(
+                f"kv_dtype={self.ecfg.kv_dtype!r}: expected 'f32' or "
+                "'int8'")
         pc = PoolConfig(
             n_layers=cfg.n_layers, n_pages=self.ecfg.n_pages,
             page_size=self.ecfg.page_size, n_kv_heads=cfg.n_kv_heads,
             head_dim=cfg.resolved_head_dim, dtype=cfg.dtype,
+            kv_dtype=self.ecfg.kv_dtype,
         )
+        if self.ecfg.kv_pool_bytes is not None:
+            # size the pool by bytes, not pages: page_bytes includes the
+            # int8 scale arrays, so dtypes compare at honest equal memory
+            pc = dataclasses.replace(
+                pc, n_pages=pages_for_budget(pc, self.ecfg.kv_pool_bytes))
         self.pc = pc
+        self._quantized = pc.quantized
         self.pool = init_pool(pc)
         self.alloc = PageAllocator(pc)
         self.radix = RadixTree(page_size=pc.page_size,
@@ -351,7 +401,9 @@ class MedVerseEngine:
             self.obs.meta(
                 model=cfg.name,
                 attention_backend=self.ecfg.attention_backend,
-                n_pages=self.ecfg.n_pages, page_size=self.ecfg.page_size,
+                kv_dtype=self.ecfg.kv_dtype,
+                prefill_chunk=self.ecfg.prefill_chunk,
+                n_pages=pc.n_pages, page_size=self.ecfg.page_size,
                 max_slots=self.ecfg.max_slots,
                 speculative=self.ecfg.speculative,
                 async_frontier=self.ecfg.async_frontier)
@@ -363,7 +415,8 @@ class MedVerseEngine:
         # always on (its counters back the bucket-ladder CI gate)
         self.cost: Optional[CostLedger] = (
             CostLedger(CostGeometry.from_model(
-                cfg, pc.page_size, self.ecfg.max_slots, pc.dtype))
+                cfg, pc.page_size, self.ecfg.max_slots,
+                "int8" if pc.quantized else pc.dtype))
             if self.ecfg.cost_accounting else None)
         self.compiles = CompileWatcher()
         # clinical audit trail (obs/audit.py): one rule-extracted verdict
@@ -423,8 +476,22 @@ class MedVerseEngine:
             # of allocating; always recompute >= 1 token for the logits
             cached, path = self.radix.match_prefix(ids)
             cached = cached[: n - 1]
+            # adopt whole pages only (block-aligned, vLLM-style). With a
+            # quantized pool this is load-bearing, not just tidy: a
+            # partially matched page dequantizes under a scale computed
+            # from the writer's co-resident rows — rows this request
+            # never matched — so its values would depend on batch
+            # history. Whole-page adoption keeps every adopted scale a
+            # pure function of the matched tokens, and doing it for f32
+            # too keeps adoption (and the exact byte accounting)
+            # identical across kv dtypes.
+            keep = (cached.size // self.pc.page_size) * self.pc.page_size
+            cached = cached[:keep]
             chain.adopt(cached)
         m = int(cached.size)
+        if (self.ecfg.prefill_chunk > 0
+                and n - m > self.ecfg.prefill_chunk):
+            return self._admit_chunked(req, chain, path, m)
         try:
             new_slots = chain.reserve(n - m)
         except OutOfPagesError:
@@ -457,9 +524,19 @@ class MedVerseEngine:
         # sentinel slot and are dropped device-side
         wslots = np.full((bucket,), self.pc.n_slots, np.int32)
         wslots[m:n] = new_slots
-        self.pool["k"], self.pool["v"], self.pool["pos"] = prefix_pool_write(
-            self.pool["k"], self.pool["v"], self.pool["pos"],
-            ks, vs, jnp.asarray(wslots), jnp.asarray(pos_p))
+        if self._quantized:
+            (self.pool["k"], self.pool["v"], self.pool["pos"],
+             self.pool["k_scale"], self.pool["v_scale"]) = (
+                prefix_pool_write_quant(
+                    self.pool["k"], self.pool["v"], self.pool["pos"],
+                    self.pool["k_scale"], self.pool["v_scale"],
+                    ks, vs, jnp.asarray(wslots), jnp.asarray(pos_p),
+                    page_size=self.pc.page_size))
+        else:
+            self.pool["k"], self.pool["v"], self.pool["pos"] = (
+                prefix_pool_write(
+                    self.pool["k"], self.pool["v"], self.pool["pos"],
+                    ks, vs, jnp.asarray(wslots), jnp.asarray(pos_p)))
         if self.ecfg.radix_cache:
             self.radix.insert(ids, chain.idx[:n])
             # pages are pinned via the allocator; lookup refs can go
@@ -484,6 +561,54 @@ class MedVerseEngine:
             obs.complete("prefill", "engine", t0, rid=req.rid,
                          n_prompt=n, n_cached=m, bucket=bucket)
         return st
+
+    def _admit_chunked(self, req: _Request, chain: IndexChain,
+                       path: List, m: int) -> _Stream:
+        """Admit a long prompt without running monolithic prefill.
+
+        The uncached suffix ``ids[m:]`` is queued on the stream and
+        flows through the regular batched decode step as prompt rows —
+        at most ``prefill_chunk`` per step, only into batch rows the
+        step would otherwise pad (:meth:`_plan_blocks`), writing pool
+        pages incrementally with the ordinary per-row decode writes.
+        No pages are reserved here (the step's slot reservation handles
+        pressure, so a preemption mid-prefill rolls back like any other
+        step) and no new shapes compile (chunk rows reuse the decode
+        bucket ladder). Prompt ingest cost lands on the ledger's
+        ``prefill`` phase via the per-row decode attribution. The radix
+        insert is deferred until the last prompt row commits
+        (:meth:`_finish_chunked_prefill`) — the tree never indexes a
+        half-prefilled prompt; the lookup leases can go now because
+        ``adopt`` already increfed the cached pages."""
+        ids = req.prompt_ids
+        n = len(ids)
+        if self.ecfg.radix_cache:
+            self.radix.release(path)
+        st = _Stream(chain, q_pos=m, purpose="plan", rid=req.rid,
+                     stop_id=self.id_plan_end,
+                     max_new=self.ecfg.max_plan_tokens,
+                     history=list(ids))
+        st.pending_prompt = deque(int(t) for t in ids[m:])
+        st.n_prompt = n
+        st.n_cached = m
+        if req.plan_spec is not None:
+            forced = self.tok.encode(req.plan_spec)
+            st.forced.extend(forced)
+            st.max_new = len(forced) + 2
+        if self.obs.enabled:
+            self.obs.instant("prefill_chunked", "engine", rid=req.rid,
+                             n_prompt=n, n_cached=m,
+                             chunk=self.ecfg.prefill_chunk)
+        return st
+
+    def _finish_chunked_prefill(self, req: _Request, st: _Stream) -> None:
+        """Last prompt row of a chunked prefill just committed: the
+        chain now covers the whole prompt gap-free, so it is safe to
+        index in the radix tree (same insert the monolithic path does
+        eagerly)."""
+        if self.ecfg.radix_cache:
+            ids = req.prompt_ids
+            self.radix.insert(ids, st.chain.idx[: len(ids)])
 
     # --------------------------------------------------------- fork/join ---
     def _start_pos(self, req: _Request, t) -> int:
@@ -766,7 +891,16 @@ class MedVerseEngine:
         committed input plus up to ``draft_len`` lookahead rows, capped
         by its remaining token budget. Temperature>0 streams batch only
         queued forced tokens (teacher-forced text is distribution-free);
-        drafting there would perturb the sampled distribution."""
+        drafting there would perturb the sampled distribution. A stream
+        still ingesting a chunked prompt wants up to ``prefill_chunk``
+        prompt rows instead (prompt rows are distribution-free too — no
+        temperature cap)."""
+        if st.pending_prompt:
+            return min(len(st.pending_prompt),
+                       max(self.ecfg.prefill_chunk, 1),
+                       max(self.ecfg.max_chain_len - st.chain.length, 1))
+        if self._drafter is None:
+            return 1
         cap = min(1 + self.ecfg.draft_len,
                   max(st.max_new - st.n_generated, 1),
                   # lookahead must not push the chain past the compiled
@@ -776,27 +910,34 @@ class MedVerseEngine:
             cap = min(cap, max(len(st.forced), 1))
         return cap
 
-    def _build_block(self, st: _Stream, budget: int) -> List[Tuple[int, bool, bool]]:
-        """Rows ``(token, was_forced, is_draft)`` stream ``st`` feeds
-        into this decode step. Row 0 is the committed input (head of the
-        forced queue, else ``next_input``); further rows are queued
-        forced tokens, then (temperature 0 only) drafter proposals.
-        Forced rows always precede draft rows, so the accepted prefix
-        can only break at a draft. The block truncates at any terminal
-        token (stop id / ``max_new``) — a terminal row is always last.
+    def _build_block(self, st: _Stream, budget: int) -> List[Tuple[int, bool, bool, bool]]:
+        """Rows ``(token, was_forced, is_draft, is_prompt)`` stream
+        ``st`` feeds into this decode step. A stream mid-chunked-prefill
+        contributes only prompt rows (the next ``budget`` tokens of its
+        pending suffix — ingested silently, no sampling). Otherwise row
+        0 is the committed input (head of the forced queue, else
+        ``next_input``); further rows are queued forced tokens, then
+        (temperature 0 only) drafter proposals. Forced rows always
+        precede draft rows, so the accepted prefix can only break at a
+        draft. The block truncates at any terminal token (stop id /
+        ``max_new``) — a terminal row is always last.
         """
+        if st.pending_prompt:
+            k = min(budget, len(st.pending_prompt))
+            return [(int(st.pending_prompt[i]), False, False, True)
+                    for i in range(k)]
         if st.forced:
-            rows = [(int(st.forced[0]), True, False)]
+            rows = [(int(st.forced[0]), True, False, False)]
             n_forced = 1
         else:
-            rows = [(int(st.next_input), False, False)]
+            rows = [(int(st.next_input), False, False, False)]
             n_forced = 0
         ngen = st.n_generated + 1
         if rows[0][0] == st.stop_id or ngen >= st.max_new:
             return rows
         while len(rows) < budget and n_forced < len(st.forced):
             tok = int(st.forced[n_forced])
-            rows.append((tok, True, False))
+            rows.append((tok, True, False, False))
             n_forced += 1
             ngen += 1
             if tok == st.stop_id or ngen >= st.max_new:
@@ -808,21 +949,26 @@ class MedVerseEngine:
                    + st.generated + [r[0] for r in rows])
             for tok in self._drafter.propose(ctx, budget - len(rows)):
                 tok = int(tok)
-                rows.append((tok, False, True))
+                rows.append((tok, False, True, False))
                 ngen += 1
                 if tok == st.stop_id or ngen >= st.max_new:
                     break
         return rows
 
-    def _plan_blocks(self, batch: List[_Stream]) -> List[List[Tuple[int, bool, bool]]]:
+    def _plan_blocks(self, batch: List[_Stream]) -> List[List[Tuple[int, bool, bool, bool]]]:
         """Split the step's ``max_slots`` batch rows across the active
         streams. Every stream gets its committed-input row; the spare
         rows (the ones a non-speculative step would pad) are dealt
         round-robin to streams that can use them, so every live DAG
         branch speculates in parallel and speculation never displaces a
-        stream's real decode. With speculation off every block is one
-        row — the legacy single-token step, byte for byte."""
-        if self._drafter is None:
+        stream's real decode. Chunked-prefill streams draw on the same
+        spare pool for their prompt rows (capacity ``prefill_chunk``) —
+        a long prompt fills the step's padding, never another stream's
+        decode row. With speculation off and no prompt pending every
+        block is one row — the legacy single-token step, byte for
+        byte."""
+        if (self._drafter is None
+                and not any(st.pending_prompt for st in batch)):
             return [self._build_block(st, 1) for st in batch]
         n = len(batch)
         want = [self._block_capacity(st) for st in batch]
@@ -895,11 +1041,11 @@ class MedVerseEngine:
         t_step0 = time.monotonic()
         events: List[StepEvent] = []
         tokens, q_pos, chains, lens = [], [], [], []
-        rows_meta: List[Tuple[Optional[int], int, bool]] = []
+        rows_meta: List[Tuple[Optional[int], int, str]] = []
         spans: List[int] = []          # base row index of each block
         for st, rows in zip(batch, blocks):
             spans.append(len(tokens))
-            for j, (tok_in, _, _) in enumerate(rows):
+            for j, (tok_in, _, _, is_prompt) in enumerate(rows):
                 tokens.append(tok_in)
                 q_pos.append(st.q_pos + j)
                 chains.append(st.chain)
@@ -909,11 +1055,18 @@ class MedVerseEngine:
                 # later rows are hidden by the same mask
                 lens.append(st.chain.length)
                 # cost attribution: row j's mask exposes the chain minus
-                # the block rows after it; rows past the committed input
-                # are the speculative (draft / extra forced) portion
+                # the block rows after it; prompt rows are chunked
+                # prefill work, rows past the committed input are the
+                # speculative (draft / extra forced) portion
+                if is_prompt:
+                    phase = "prefill"
+                elif j > 0:
+                    phase = "spec_verify"
+                else:
+                    phase = "decode"
                 rows_meta.append((st.rid,
                                   st.chain.length - (len(rows) - 1 - j),
-                                  j > 0))
+                                  phase))
         logits_np = self._decode(tokens, q_pos, slots, chains, lens,
                                  rows_meta)
         n = len(batch)
@@ -930,7 +1083,7 @@ class MedVerseEngine:
             # greedy sample_token would have produced sequentially)
             n_acc = 1
             while n_acc < len(rows):
-                tok, _, isd = rows[n_acc]
+                tok, _, isd, _ = rows[n_acc]
                 if isd and tok != int(np.argmax(logits_np[base + n_acc - 1])):
                     break
                 n_acc += 1
@@ -941,7 +1094,8 @@ class MedVerseEngine:
                     1 for r in rows[:n_acc] if r[2])
                 self.spec_stats["forced_batched"] += sum(
                     1 for r in rows[1:n_acc] if r[1])
-                self.spec_stats["tokens"] += n_acc
+                self.spec_stats["tokens"] += sum(
+                    1 for r in rows[:n_acc] if not r[3])
                 if obs.enabled:
                     n_prop = sum(1 for r in rows if r[2])
                     if n_prop:
@@ -959,8 +1113,19 @@ class MedVerseEngine:
                      "conclusion": "conclusion",
                      "serial": "planning"}[st.purpose]
             req.timings[phase] += step_dt / n
+            n_prompt_rows = 0
             for j in range(n_acc):
-                tok_in, was_forced, was_draft = rows[j]
+                tok_in, was_forced, was_draft, was_prompt = rows[j]
+                if was_prompt:
+                    # chunked prefill: the prompt token is now in the
+                    # pool — advance the write position silently (no
+                    # token event, no generation budget consumed)
+                    st.pending_prompt.popleft()
+                    st.q_pos += 1
+                    n_prompt_rows += 1
+                    if not st.pending_prompt:
+                        self._finish_chunked_prefill(req, st)
+                    continue
                 if was_forced:
                     st.forced.popleft()
                 st.generated.append(tok_in)
@@ -976,7 +1141,15 @@ class MedVerseEngine:
                     kind="token", rid=st.rid, token=tok_in,
                     purpose=st.purpose, tid=st.tid, stage=st.stage,
                     forced=was_forced, drafted=was_draft))
-            if not st.forced and not st.finish_after:
+            if n_prompt_rows:
+                if obs.enabled:
+                    obs.complete(
+                        "prefill_chunk", "engine", t_trace0, rid=st.rid,
+                        seq=st.chunk_seq, offset=st.q_pos - n_prompt_rows,
+                        n_rows=n_prompt_rows, n_prompt=st.n_prompt,
+                        n_cached=st.n_cached)
+                st.chunk_seq += 1
+            if not st.pending_prompt and not st.forced and not st.finish_after:
                 sp = req.sampling
                 st.next_input = int(sample_token(
                     logits_np[base + n_acc - 1], sp.temperature, req.rng,
@@ -1045,7 +1218,7 @@ class MedVerseEngine:
     def _decode(self, tokens: List[int], q_pos: List[int],
                 slots: List[int], chains: List[IndexChain],
                 lens: List[int],
-                rows_meta: Optional[List[Tuple[Optional[int], int, bool]]]
+                rows_meta: Optional[List[Tuple[Optional[int], int, object]]]
                 = None) -> np.ndarray:
         """One batched decode call over ``n <= max_slots`` streams,
         dispatched to the configured attention backend. Handles
@@ -1054,9 +1227,12 @@ class MedVerseEngine:
         width), batch-row padding with the out-of-range write-slot
         sentinel, the bucket histograms, the compiled-shape watcher and
         the analytic cost ledger. ``rows_meta`` is the cost attribution
-        per row — ``(rid, visible_kv_len, is_spec_row)`` — defaulting
-        to unattributed non-spec rows over the full chain length.
-        Returns host logits (n, V)."""
+        per row — ``(rid, visible_kv_len, phase)`` where phase is a
+        string ("prefill" | "decode" | "spec_verify") or the legacy
+        is_spec bool — defaulting to unattributed decode rows over the
+        full chain length. With an int8 pool the layer scales flow
+        through ``paged_decode`` alongside the pool buffers (donated
+        and rebound every call). Returns host logits (n, V)."""
         n = len(tokens)
         obs = self.obs
         t0 = obs.now() if obs.enabled else 0.0
@@ -1073,6 +1249,8 @@ class MedVerseEngine:
         slots_p = np.full((self.ecfg.max_slots,), self.pc.n_slots,
                           np.int32)
         slots_p[:n] = slots
+        k_sc, v_sc = ((self.pool["k_scale"], self.pool["v_scale"])
+                      if self._quantized else (None, None))
         if self.ecfg.attention_backend == "pallas":
             runs = [ch.page_runs() for ch in chains]
             p_bucket = self._page_bucket(max(r[0].size for r in runs))
@@ -1087,29 +1265,31 @@ class MedVerseEngine:
             # page-table width, not the chain bucket
             new_shape = self.compiles.note(("decode", "pallas", p_bucket))
             t_c = obs.now() if (obs.enabled and new_shape) else 0.0
-            logits, self.pool["k"], self.pool["v"], self.pool["pos"] = (
-                paged_decode(
-                    self.params, self.pool["k"], self.pool["v"],
-                    self.pool["pos"], arr(tokens), arr(q_pos),
-                    jnp.asarray(slots_p), None, None, self.cfg,
-                    backend="pallas", page_table=jnp.asarray(pt),
-                    page_valid=jnp.asarray(pv),
-                    page_size=self.pc.page_size,
-                    interpret=self.ecfg.kernel_interpret))
+            (logits, self.pool["k"], self.pool["v"], self.pool["pos"],
+             k_sc, v_sc) = paged_decode(
+                self.params, self.pool["k"], self.pool["v"],
+                self.pool["pos"], k_sc, v_sc, arr(tokens), arr(q_pos),
+                jnp.asarray(slots_p), None, None, self.cfg,
+                backend="pallas", page_table=jnp.asarray(pt),
+                page_valid=jnp.asarray(pv),
+                page_size=self.pc.page_size,
+                interpret=self.ecfg.kernel_interpret)
             pages = [r[0].size for r in runs]
         else:
             padded = [ch.padded(s_bucket) for ch in chains]
             new_shape = self.compiles.note(("decode", "dense", s_bucket))
             t_c = obs.now() if (obs.enabled and new_shape) else 0.0
-            logits, self.pool["k"], self.pool["v"], self.pool["pos"] = (
-                paged_decode(
-                    self.params, self.pool["k"], self.pool["v"],
-                    self.pool["pos"], arr(tokens), arr(q_pos),
-                    jnp.asarray(slots_p),
-                    jnp.asarray(np.pad(np.stack(padded), [(0, pad), (0, 0)])),
-                    arr(lens), self.cfg))
+            (logits, self.pool["k"], self.pool["v"], self.pool["pos"],
+             k_sc, v_sc) = paged_decode(
+                self.params, self.pool["k"], self.pool["v"],
+                self.pool["pos"], k_sc, v_sc, arr(tokens), arr(q_pos),
+                jnp.asarray(slots_p),
+                jnp.asarray(np.pad(np.stack(padded), [(0, pad), (0, 0)])),
+                arr(lens), self.cfg, page_size=self.pc.page_size)
             p_bucket = 0
             pages = [len(ch.pages) for ch in chains]
+        if self._quantized:
+            self.pool["k_scale"], self.pool["v_scale"] = k_sc, v_sc
         out = np.asarray(logits[:n])   # host sync: dur covers the device
         if new_shape and obs.enabled:
             obs.complete(
@@ -1119,7 +1299,7 @@ class MedVerseEngine:
                 after_warmup=self.compiles.warmup_step is not None)
         if self.cost is not None:
             if rows_meta is None:
-                rows_meta = [(None, ln, False) for ln in lens]
+                rows_meta = [(None, ln, "decode") for ln in lens]
             self.cost.note_decode(rows_meta, s_bucket, pages,
                                   self.ecfg.attention_backend)
         if obs.enabled:
@@ -1449,6 +1629,8 @@ class MedVerseEngine:
         backend = self.ecfg.attention_backend
         for s in buckets:
             t_c = obs.now() if obs.enabled else 0.0
+            k_sc, v_sc = ((self.pool["k_scale"], self.pool["v_scale"])
+                          if self._quantized else (None, None))
             if backend == "pallas":
                 pb = self._page_bucket(-(-s // self.pc.page_size))
                 new_shape = self.compiles.note(("decode", "pallas", pb))
@@ -1456,27 +1638,33 @@ class MedVerseEngine:
                 pv = np.zeros((n, pb), np.int32)
                 pt[:, 0] = pg
                 pv[:, 0] = 1
-                _, self.pool["k"], self.pool["v"], self.pool["pos"] = (
-                    paged_decode(
-                        self.params, self.pool["k"], self.pool["v"],
-                        self.pool["pos"], jnp.zeros((n,), jnp.int32),
-                        jnp.zeros((n,), jnp.int32),
-                        jnp.full((n,), slot, jnp.int32), None, None,
-                        self.cfg, backend="pallas",
-                        page_table=jnp.asarray(pt),
-                        page_valid=jnp.asarray(pv),
-                        page_size=self.pc.page_size,
-                        interpret=self.ecfg.kernel_interpret))
+                (_, self.pool["k"], self.pool["v"], self.pool["pos"],
+                 k_sc, v_sc) = paged_decode(
+                    self.params, self.pool["k"], self.pool["v"],
+                    self.pool["pos"], k_sc, v_sc,
+                    jnp.zeros((n,), jnp.int32),
+                    jnp.zeros((n,), jnp.int32),
+                    jnp.full((n,), slot, jnp.int32), None, None,
+                    self.cfg, backend="pallas",
+                    page_table=jnp.asarray(pt),
+                    page_valid=jnp.asarray(pv),
+                    page_size=self.pc.page_size,
+                    interpret=self.ecfg.kernel_interpret)
             else:
                 pb = 0
                 new_shape = self.compiles.note(("decode", "dense", s))
                 chain = np.zeros((n, s), np.int32)
                 chain[:, 0] = slot
-                _, self.pool["k"], self.pool["v"], self.pool["pos"] = paged_decode(
-                    self.params, self.pool["k"], self.pool["v"], self.pool["pos"],
+                (_, self.pool["k"], self.pool["v"], self.pool["pos"],
+                 k_sc, v_sc) = paged_decode(
+                    self.params, self.pool["k"], self.pool["v"],
+                    self.pool["pos"], k_sc, v_sc,
                     jnp.zeros((n,), jnp.int32), jnp.zeros((n,), jnp.int32),
                     jnp.full((n,), slot, jnp.int32), jnp.asarray(chain),
-                    jnp.ones((n,), jnp.int32), self.cfg)
+                    jnp.ones((n,), jnp.int32), self.cfg,
+                    page_size=self.pc.page_size)
+            if self._quantized:
+                self.pool["k_scale"], self.pool["v_scale"] = k_sc, v_sc
             if new_shape and obs.enabled:
                 obs.complete("compile", "compile", t_c, kind="decode",
                              backend=backend, chain_bucket=s,
@@ -1534,6 +1722,10 @@ class SerialEngine:
     def __init__(self, params, cfg: ModelConfig, tok: Tokenizer,
                  ecfg: Optional[EngineConfig] = None):
         self.inner = MedVerseEngine(params, cfg, tok, ecfg)
+        if self.inner.ecfg.prefill_chunk > 0:
+            raise ValueError(
+                "SerialEngine drives _prefill directly and does not "
+                "ingest chunked prompts; use prefill_chunk=0")
 
     def generate(self, prompts: List[str], max_tokens: Optional[int] = None
                  ) -> List[GenResult]:

@@ -42,21 +42,59 @@ class PoolConfig:
     n_kv_heads: int
     head_dim: int
     dtype: str = "float32"
+    # storage dtype of the K/V pool itself: "f32" stores `dtype`, "int8"
+    # stores int8 K/V plus per-page-per-head float32 absmax scales
+    kv_dtype: str = "f32"
 
     @property
     def n_slots(self) -> int:
         return self.n_pages * self.page_size
 
+    @property
+    def quantized(self) -> bool:
+        return self.kv_dtype == "int8"
+
+    @property
+    def kv_itemsize(self) -> int:
+        return 1 if self.quantized else jnp.dtype(self.dtype).itemsize
+
+    @property
+    def page_bytes(self) -> int:
+        """Device bytes one page costs across all layers (K + V, plus the
+        per-page-per-head scale rows under int8) — the unit for sizing a
+        pool from a byte budget."""
+        body = (self.n_layers * 2 * self.page_size * self.n_kv_heads
+                * self.head_dim * self.kv_itemsize)
+        scales = self.n_layers * 2 * self.n_kv_heads * 4 if self.quantized else 0
+        return body + scales
+
+
+def pages_for_budget(pc: PoolConfig, budget_bytes: int) -> int:
+    """How many pages fit in ``budget_bytes`` under ``pc``'s layout.
+
+    The same byte budget buys ~4x the pages under int8 — the capacity
+    side of KV quantization (fewer out-of-pages preemptions)."""
+    return max(int(budget_bytes) // pc.page_bytes, 1)
+
 
 def init_pool(pc: PoolConfig) -> Dict[str, jnp.ndarray]:
     shape = (pc.n_layers, pc.n_slots, pc.n_kv_heads, pc.head_dim)
-    dt = jnp.dtype(pc.dtype)
-    return {
-        "k": jnp.zeros(shape, dt),
-        "v": jnp.zeros(shape, dt),
-        # adaptive position of each stored token (shared across layers)
-        "pos": jnp.zeros((pc.n_slots,), jnp.int32),
-    }
+    if pc.quantized:
+        pool = {
+            "k": jnp.zeros(shape, jnp.int8),
+            "v": jnp.zeros(shape, jnp.int8),
+            # per-(layer, page, kv_head) absmax scales; 0 = empty page
+            "k_scale": jnp.zeros((pc.n_layers, pc.n_pages, pc.n_kv_heads),
+                                 jnp.float32),
+            "v_scale": jnp.zeros((pc.n_layers, pc.n_pages, pc.n_kv_heads),
+                                 jnp.float32),
+        }
+    else:
+        dt = jnp.dtype(pc.dtype)
+        pool = {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+    # adaptive position of each stored token (shared across layers)
+    pool["pos"] = jnp.zeros((pc.n_slots,), jnp.int32)
+    return pool
 
 
 class PageAllocator:
@@ -383,3 +421,88 @@ def pool_write_span(pool_k, pool_v, pool_pos, kv_k, kv_v, slots, positions):
     pool_v = pool_v.at[:, slots].set(kv_v)
     pool_pos = pool_pos.at[slots].set(positions)
     return pool_k, pool_v, pool_pos
+
+
+# -- int8 quantized writes ------------------------------------------------
+#
+# Pages quantize per (layer, page, kv_head) with a float32 absmax scale:
+# stored = round(x / scale), scale = absmax/127, dequant = int8 * scale.
+# Pages fill append-only from in-page offset 0 (adopt/fork never re-enter
+# an inherited page), so a write at offset 0 is always the first token of
+# a freshly (re)allocated page: it RESETS the scale and zeroes the stale
+# page body. Later writes into the page may only GROW the scale; when it
+# grows, the already-stored int8 rows are requantized in place
+# (round(old * s_old/s_new)) — a bounded, deterministic precision loss
+# covered by the temp-0 parity contract in tests/test_kv_quant.py.
+#
+# Writes are sequential over rows (fori_loop), never a batched scatter:
+# two rows of one speculative block (or one prefill chunk) can land in
+# the same page, and each write can bump that page's scale — a duplicate
+# scatter index would silently drop the earlier row's rescale.
+
+def _quant_put(pool_l, scale_l, row, slot, page_size):
+    """Write one (n_kv, hd) float32 row into a single layer's int8 pool at
+    ``slot`` (sentinel ``>= n_slots`` drops the write)."""
+    n_slots = pool_l.shape[0]
+    ok = slot < n_slots
+    slot_c = jnp.minimum(slot, n_slots - 1)
+    page = slot_c // page_size
+    pstart = page * page_size
+    first = (slot_c - pstart) == 0
+    amax = jnp.max(jnp.abs(row), axis=-1)                    # (n_kv,)
+    s_old = scale_l[page]                                    # (n_kv,)
+    s_new = jnp.where(first, amax / 127.0,
+                      jnp.maximum(s_old, amax / 127.0))
+    denom = jnp.maximum(s_new, 1e-30)
+    # requant factor for rows already in the page; 0 wipes a fresh page
+    factor = jnp.where(first, 0.0,
+                       jnp.where(s_new > 0, s_old / denom, 1.0))
+    pg = jax.lax.dynamic_slice_in_dim(pool_l, pstart, page_size)
+    pg2 = jnp.clip(jnp.round(pg.astype(jnp.float32) * factor[None, :, None]),
+                   -127, 127).astype(jnp.int8)
+    q = jnp.clip(jnp.round(row / denom[:, None]), -127, 127).astype(jnp.int8)
+    pg2 = jax.lax.dynamic_update_slice_in_dim(
+        pg2, q[None], slot_c - pstart, axis=0)
+    pool_l = jax.lax.dynamic_update_slice_in_dim(
+        pool_l, jnp.where(ok, pg2, pg), pstart, axis=0)
+    scale_l = scale_l.at[page].set(jnp.where(ok, s_new, s_old))
+    return pool_l, scale_l
+
+
+def quant_write_rows(pool_l, scale_l, rows, slots, page_size):
+    """Quantize-write one token per batch row into one layer's int8 pool.
+
+    pool_l: (n_slots, n_kv, hd) int8; scale_l: (n_pages, n_kv) f32;
+    rows: (N, n_kv, hd) f32; slots: (N,) int32 (``n_slots`` = drop).
+    Traced inline by ``paged_decode`` — not independently jitted."""
+    def body(i, carry):
+        p, s = carry
+        return _quant_put(p, s, rows[i], slots[i], page_size)
+    return jax.lax.fori_loop(0, rows.shape[0], body, (pool_l, scale_l))
+
+
+def quant_write_span(pool_k, pool_v, k_scale, v_scale, kv_k, kv_v, slots,
+                     page_size):
+    """Quantize-write a prefill span across all layers.
+
+    pool_k/v: (L, n_slots, n_kv, hd) int8; k/v_scale: (L, n_pages, n_kv);
+    kv_k/v: (L, S, n_kv, hd) f32; slots: (S,) (``n_slots`` = drop)."""
+    n_layers = pool_k.shape[0]
+
+    def body(i, carry):
+        pk, pv, ks, vs = carry
+        slot = slots[i]
+
+        def per_layer(li, c):
+            pk_, pv_, ks_, vs_ = c
+            pkl, ksl = _quant_put(pk_[li], ks_[li], kv_k[li, i], slot,
+                                  page_size)
+            pvl, vsl = _quant_put(pv_[li], vs_[li], kv_v[li, i], slot,
+                                  page_size)
+            return (pk_.at[li].set(pkl), pv_.at[li].set(pvl),
+                    ks_.at[li].set(ksl), vs_.at[li].set(vsl))
+
+        return jax.lax.fori_loop(0, n_layers, per_layer, (pk, pv, ks, vs))
+
+    return jax.lax.fori_loop(0, slots.shape[0], body,
+                             (pool_k, pool_v, k_scale, v_scale))

@@ -43,6 +43,7 @@ import numpy as np
 from ..core.masks import NEG_INF
 from ..kernels.dag_attention.ops import causal_prefill_attention
 from ..kernels.decode_attention.ops import paged_decode_attention_flat
+from .kvcache import quant_write_rows, quant_write_span
 from ..models.attention import TopoBatch
 from ..models.config import ATTN, LOCAL_ATTN, ModelConfig
 from ..models.layers import apply_mlp, apply_norm, apply_rope, embed_tokens, unembed
@@ -121,7 +122,8 @@ def _sdpa(q, k, v, bias, softcap=0.0):
 
 def decode_attention_dense(q, k_slots, v_slots, pool_pos, chain_idx,
                            chain_len, q_pos, *, window: int = 0,
-                           softcap: float = 0.0):
+                           softcap: float = 0.0, k_scale=None, v_scale=None,
+                           page_size: int = 0):
     """Per-layer decode attention of the ``"dense"`` backend: gather each
     stream's index chain out of the flat slot pool and run the masked
     SDPA. Visibility is the length mask composed with the adaptive-
@@ -130,6 +132,9 @@ def decode_attention_dense(q, k_slots, v_slots, pool_pos, chain_idx,
 
     q: (N, 1, NH, HD); k_slots/v_slots: (n_slots, NKV, HD) — one layer
     of the pool; chain_idx: (N, S_max); returns (N, 1, NH*HD) float32.
+    With an int8 pool, ``k_scale``/``v_scale`` are the layer's
+    (n_pages, NKV) absmax scales and the gather dequantizes in float32
+    (``int8 * scale[slot // page_size]``) before the SDPA.
     This is also the reference tier ``benchmarks/kernel_bench.py`` times
     the paged schedule against — keep it the shipped dense path.
     """
@@ -141,7 +146,13 @@ def decode_attention_dense(q, k_slots, v_slots, pool_pos, chain_idx,
         diff = q_pos[:, None] - kv_pos
         vis = vis & (diff >= 0) & (diff < window)
     bias = jnp.where(vis, 0.0, NEG_INF)[:, None, None, None, :]
-    return _sdpa(q, k_slots[chain_idx], v_slots[chain_idx], bias, softcap)
+    k = k_slots[chain_idx]
+    v = v_slots[chain_idx]
+    if k_scale is not None:
+        pages = chain_idx // page_size                       # (N, S_max)
+        k = k.astype(jnp.float32) * k_scale[pages][..., None]
+        v = v.astype(jnp.float32) * v_scale[pages][..., None]
+    return _sdpa(q, k, v, bias, softcap)
 
 
 # ------------------------------------------------------------- prefill -----
@@ -221,14 +232,29 @@ def prefix_pool_write(pool_k, pool_v, pool_pos, ks, vs, slots, pos):
     return pool_k, pool_v, pool_pos
 
 
+@partial(jax.jit, static_argnames=("page_size",),
+         donate_argnums=(0, 1, 2, 3, 4))
+def prefix_pool_write_quant(pool_k, pool_v, pool_pos, k_scale, v_scale,
+                            ks, vs, slots, pos, *, page_size: int):
+    """Int8 variant of :func:`prefix_pool_write`: quantize the prefill
+    span page by page (absmax scales, see ``kvcache.quant_write_span``)
+    with the same sentinel-slot drop semantics."""
+    pool_k, pool_v, k_scale, v_scale = quant_write_span(
+        pool_k, pool_v, k_scale, v_scale, ks, vs, slots, page_size)
+    pool_pos = pool_pos.at[slots].set(pos, mode="drop")
+    return pool_k, pool_v, pool_pos, k_scale, v_scale
+
+
 # -------------------------------------------------------------- decode -----
 @partial(jax.jit,
          static_argnames=("cfg", "backend", "page_size", "interpret"),
-         donate_argnums=(1, 2, 3))
+         donate_argnums=(1, 2, 3, 4, 5))
 def paged_decode(params: dict,
                  pool_k: jnp.ndarray,     # (L, n_slots, nkv, hd)
                  pool_v: jnp.ndarray,
                  pool_pos: jnp.ndarray,   # (n_slots,)
+                 k_scale,                 # (L, n_pages, nkv) f32 | None
+                 v_scale,                 # int8 pool absmax scales
                  token_ids: jnp.ndarray,  # (N,)
                  q_pos: jnp.ndarray,      # (N,)
                  write_slots: jnp.ndarray,  # (N,) flat pool slot per stream
@@ -261,9 +287,16 @@ def paged_decode(params: dict,
 
     Batch padding rows carry an out-of-range write slot (the ``n_slots``
     sentinel) and must not scatter into the pool (``mode="drop"``).
+
+    With an int8 pool (``k_scale``/``v_scale`` not None) each layer's new
+    K/V rows are quantize-written sequentially (two block rows can share
+    a page and bump its scale — see ``kvcache.quant_write_rows``) and
+    both backends dequantize on read; the f32 path passes ``None`` and is
+    byte-identical to before.
     """
     check_backend(cfg, backend)  # trace-time: softcap is dense-only
     n = token_ids.shape[0]
+    quantized = k_scale is not None
     x = embed_tokens(params["embed"], token_ids)[:, None, :]
     if cfg.pos_embedding == "learned":
         from ..models.layers import learned_pos
@@ -273,21 +306,38 @@ def paged_decode(params: dict,
         p, kind = layer["params"], layer["kind"]
         h = apply_norm(p["norm1"], x, cfg.norm_type, cfg.norm_eps)
         q, k_t, v_t = _proj_qkv(p["mixer"], h, cfg, q_pos[:, None])
-        pool_k = pool_k.at[li, write_slots].set(
-            k_t[:, 0].astype(pool_k.dtype), mode="drop")
-        pool_v = pool_v.at[li, write_slots].set(
-            v_t[:, 0].astype(pool_v.dtype), mode="drop")
+        if quantized:
+            pk_l, ks_l = quant_write_rows(
+                pool_k[li], k_scale[li], k_t[:, 0].astype(jnp.float32),
+                write_slots, page_size)
+            pv_l, vs_l = quant_write_rows(
+                pool_v[li], v_scale[li], v_t[:, 0].astype(jnp.float32),
+                write_slots, page_size)
+            pool_k = pool_k.at[li].set(pk_l)
+            pool_v = pool_v.at[li].set(pv_l)
+            k_scale = k_scale.at[li].set(ks_l)
+            v_scale = v_scale.at[li].set(vs_l)
+        else:
+            pool_k = pool_k.at[li, write_slots].set(
+                k_t[:, 0].astype(pool_k.dtype), mode="drop")
+            pool_v = pool_v.at[li, write_slots].set(
+                v_t[:, 0].astype(pool_v.dtype), mode="drop")
         win = cfg.sliding_window if kind == LOCAL_ATTN else 0
         if backend == "pallas":
             att = paged_decode_attention_flat(
                 q[:, 0], pool_k[li], pool_v[li], pool_pos,
                 page_table, page_valid, q_pos,
                 page_size=page_size, window=win,
+                k_scale=k_scale[li] if quantized else None,
+                v_scale=v_scale[li] if quantized else None,
                 interpret=interpret).reshape(n, 1, -1)
         else:
             att = decode_attention_dense(
                 q, pool_k[li], pool_v[li], pool_pos, chain_idx, chain_len,
-                q_pos, window=win, softcap=cfg.attn_logit_softcap)
+                q_pos, window=win, softcap=cfg.attn_logit_softcap,
+                k_scale=k_scale[li] if quantized else None,
+                v_scale=v_scale[li] if quantized else None,
+                page_size=page_size)
         x = x + att.astype(x.dtype) @ p["mixer"]["wo"]
         h2 = apply_norm(p["norm2"], x, cfg.norm_type, cfg.norm_eps)
         if layer["moe"]:
@@ -298,7 +348,7 @@ def paged_decode(params: dict,
     x = apply_norm(params["final_norm"], x, cfg.norm_type, cfg.norm_eps)
     head = params["lm_head"] if "lm_head" in params else params["embed"]["table"].T
     logits = unembed(head, x[:, 0], cfg.logit_softcap)       # (N, V)
-    return logits, pool_k, pool_v, pool_pos
+    return logits, pool_k, pool_v, pool_pos, k_scale, v_scale
 
 
 def supports_paged(cfg: ModelConfig) -> bool:

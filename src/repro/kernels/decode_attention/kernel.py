@@ -32,20 +32,17 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _paged_decode_kernel(
-    # scalar prefetch
-    page_table_ref, page_valid_ref, q_pos_ref,
-    # tensors
-    q_ref,        # (1, 1, G, HD)
-    k_page_ref,   # (1, page_size, 1, HD)
-    v_page_ref,
-    pos_page_ref,  # (1, page_size)
-    # out
-    o_ref,        # (1, 1, G, HD)
-    # scratch
-    m_ref, l_ref, acc_ref,
+def _flash_page_step(
+    load_kv, page_valid_ref, q_pos_ref, q_ref, pos_page_ref,
+    o_ref, m_ref, l_ref, acc_ref,
     *, page_size: int, n_pages_max: int, scale: float, window: int,
 ):
+    """Shared running-softmax body over one streamed page.
+
+    ``load_kv()`` returns the page's K/V as float32 ``(page, HD)`` —
+    the f32 kernel casts, the int8 kernel dequantizes with its page
+    scales. Only invoked under ``n_valid > 0``, so a skipped page never
+    pays the dequant."""
     b = pl.program_id(0)
     pi = pl.program_id(2)
 
@@ -60,8 +57,7 @@ def _paged_decode_kernel(
     @pl.when(n_valid > 0)
     def _compute():
         q = q_ref[0, 0].astype(jnp.float32)               # (G, HD)
-        k = k_page_ref[0, :, 0].astype(jnp.float32)       # (page, HD)
-        v = v_page_ref[0, :, 0].astype(jnp.float32)
+        k, v = load_kv()                                  # (page, HD) f32
         kv_pos = pos_page_ref[0]                          # (page,)
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
@@ -90,6 +86,60 @@ def _paged_decode_kernel(
         o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
 
 
+def _paged_decode_kernel(
+    # scalar prefetch
+    page_table_ref, page_valid_ref, q_pos_ref,
+    # tensors
+    q_ref,        # (1, 1, G, HD)
+    k_page_ref,   # (1, page_size, 1, HD)
+    v_page_ref,
+    pos_page_ref,  # (1, page_size)
+    # out
+    o_ref,        # (1, 1, G, HD)
+    # scratch
+    m_ref, l_ref, acc_ref,
+    *, page_size: int, n_pages_max: int, scale: float, window: int,
+):
+    def load_kv():
+        return (k_page_ref[0, :, 0].astype(jnp.float32),
+                v_page_ref[0, :, 0].astype(jnp.float32))
+
+    _flash_page_step(
+        load_kv, page_valid_ref, q_pos_ref, q_ref, pos_page_ref,
+        o_ref, m_ref, l_ref, acc_ref, page_size=page_size,
+        n_pages_max=n_pages_max, scale=scale, window=window)
+
+
+def _paged_decode_kernel_int8(
+    # scalar prefetch
+    page_table_ref, page_valid_ref, q_pos_ref,
+    # tensors
+    q_ref,          # (1, 1, G, HD)
+    k_page_ref,     # (1, page_size, 1, HD) int8
+    v_page_ref,
+    k_scale_ref,    # (1, 1) f32 — this page's absmax scale for head h
+    v_scale_ref,
+    pos_page_ref,   # (1, page_size)
+    # out
+    o_ref,          # (1, 1, G, HD)
+    # scratch
+    m_ref, l_ref, acc_ref,
+    *, page_size: int, n_pages_max: int, scale: float, window: int,
+):
+    """Int8-aware variant: identical flash schedule, but each streamed
+    page dequantizes in VMEM (``int8 * page_scale``) before the f32
+    accumulation — HBM traffic is a quarter of the f32 kernel's."""
+    def load_kv():
+        k = k_page_ref[0, :, 0].astype(jnp.float32) * k_scale_ref[0, 0]
+        v = v_page_ref[0, :, 0].astype(jnp.float32) * v_scale_ref[0, 0]
+        return k, v
+
+    _flash_page_step(
+        load_kv, page_valid_ref, q_pos_ref, q_ref, pos_page_ref,
+        o_ref, m_ref, l_ref, acc_ref, page_size=page_size,
+        n_pages_max=n_pages_max, scale=scale, window=window)
+
+
 def paged_decode_attention_kernel(
     q: jnp.ndarray,           # (B, NKV, G, HD)
     k_pool: jnp.ndarray,      # (n_pages, page_size, NKV, HD)
@@ -99,29 +149,43 @@ def paged_decode_attention_kernel(
     page_valid: jnp.ndarray,  # (B, P_max) int32
     q_pos: jnp.ndarray,       # (B,) int32
     *, window: int = 0, interpret: bool = False,
+    k_scale: jnp.ndarray = None,  # (n_pages, NKV) f32 — int8 pool only
+    v_scale: jnp.ndarray = None,
 ) -> jnp.ndarray:
     b, nkv, g, hd = q.shape
     n_pages, page_size = k_pool.shape[:2]
     p_max = page_table.shape[1]
     scale = 1.0 / math.sqrt(hd)
+    quantized = k_scale is not None
     kernel = functools.partial(
-        _paged_decode_kernel, page_size=page_size, n_pages_max=p_max,
+        _paged_decode_kernel_int8 if quantized else _paged_decode_kernel,
+        page_size=page_size, n_pages_max=p_max,
         scale=scale, window=window,
     )
+    kv_spec = pl.BlockSpec(
+        (1, page_size, 1, hd),
+        lambda b_, h, pi, pt, pv, qp: (pt[b_, pi], 0, h, 0))
+    in_specs = [
+        pl.BlockSpec((1, 1, g, hd),
+                     lambda b_, h, pi, pt, pv, qp: (b_, h, 0, 0)),
+        # the page streamed in is chosen BY the prefetched table
+        kv_spec,
+        kv_spec,
+    ]
+    operands = [q, k_pool, v_pool]
+    if quantized:
+        # per-(page, head) scale rides the same table-driven index map
+        scale_spec = pl.BlockSpec(
+            (1, 1), lambda b_, h, pi, pt, pv, qp: (pt[b_, pi], h))
+        in_specs += [scale_spec, scale_spec]
+        operands += [k_scale, v_scale]
+    in_specs.append(pl.BlockSpec(
+        (1, page_size), lambda b_, h, pi, pt, pv, qp: (pt[b_, pi], 0)))
+    operands.append(pool_pos)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=(b, nkv, p_max),
-        in_specs=[
-            pl.BlockSpec((1, 1, g, hd),
-                         lambda b_, h, pi, pt, pv, qp: (b_, h, 0, 0)),
-            # the page streamed in is chosen BY the prefetched table
-            pl.BlockSpec((1, page_size, 1, hd),
-                         lambda b_, h, pi, pt, pv, qp: (pt[b_, pi], 0, h, 0)),
-            pl.BlockSpec((1, page_size, 1, hd),
-                         lambda b_, h, pi, pt, pv, qp: (pt[b_, pi], 0, h, 0)),
-            pl.BlockSpec((1, page_size),
-                         lambda b_, h, pi, pt, pv, qp: (pt[b_, pi], 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, g, hd),
                                lambda b_, h, pi, pt, pv, qp: (b_, h, 0, 0)),
         scratch_shapes=[
@@ -136,4 +200,4 @@ def paged_decode_attention_kernel(
         out_shape=jax.ShapeDtypeStruct((b, nkv, g, hd), q.dtype),
         interpret=interpret,
     )(page_table.astype(jnp.int32), page_valid.astype(jnp.int32),
-      q_pos.astype(jnp.int32), q, k_pool, v_pool, pool_pos)
+      q_pos.astype(jnp.int32), *operands)

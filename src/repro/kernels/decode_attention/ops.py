@@ -33,15 +33,19 @@ def paged_decode_attention(
     page_valid: jnp.ndarray,  # (B, P_max)
     q_pos: jnp.ndarray,       # (B,)
     *, window: int = 0, interpret: bool = True,
+    k_scale: jnp.ndarray = None,  # (n_pages, NKV) — int8 pools only
+    v_scale: jnp.ndarray = None,
 ) -> jnp.ndarray:
-    """Returns (B, NH, HD)."""
+    """Returns (B, NH, HD). With an int8 pool, pass the per-page-per-head
+    absmax scales and the int8 kernel variant dequantizes in VMEM."""
     b, nh, hd = q.shape
     nkv = k_pool.shape[2]
     g = nh // nkv
     qg = q.reshape(b, nkv, g, hd)
     out = paged_decode_attention_kernel(
         qg, k_pool, v_pool, pool_pos, page_table, page_valid, q_pos,
-        window=window, interpret=interpret)
+        window=window, interpret=interpret,
+        k_scale=k_scale, v_scale=v_scale)
     return out.reshape(b, nh, hd)
 
 
@@ -85,6 +89,8 @@ def paged_decode_attention_flat(
     page_valid: jnp.ndarray,  # (B, P_max) referenced slots per page
     q_pos: jnp.ndarray,       # (B,)
     *, page_size: int, window: int = 0, interpret: bool = True,
+    k_scale: jnp.ndarray = None,  # (n_pages, NKV) — int8 pools only
+    v_scale: jnp.ndarray = None,
 ) -> jnp.ndarray:
     """Paged decode attention over the engine's flat slot pool.
 
@@ -94,7 +100,8 @@ def paged_decode_attention_flat(
     first-appearance order and ``page_valid[b]`` how many leading slots
     of each page the chain references (engine chains always reference a
     contiguous slot prefix of every page they touch — pages are
-    single-writer and append-only). Returns (B, NH, HD).
+    single-writer and append-only). Returns (B, NH, HD). ``k_scale``/
+    ``v_scale`` select the int8 kernel variant (dequant in VMEM).
     """
     n_slots = k_slots.shape[0]
     assert n_slots % page_size == 0, (n_slots, page_size)
@@ -104,4 +111,5 @@ def paged_decode_attention_flat(
     pp = pool_pos.reshape(n_pages, page_size)
     return paged_decode_attention(
         q, kp, vp, pp, page_table, page_valid, q_pos,
-        window=window, interpret=interpret)
+        window=window, interpret=interpret,
+        k_scale=k_scale, v_scale=v_scale)

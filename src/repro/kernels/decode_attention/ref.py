@@ -11,14 +11,20 @@ NEG_INF = -1e30
 
 
 def paged_decode_attention_ref(q, k_pool, v_pool, pool_pos, page_table,
-                               page_valid, q_pos, *, window: int = 0):
-    """Dense gather + masked softmax. Shapes as in kernel.py."""
+                               page_valid, q_pos, *, window: int = 0,
+                               k_scale=None, v_scale=None):
+    """Dense gather + masked softmax. Shapes as in kernel.py. With an
+    int8 pool, ``k_scale``/``v_scale`` are (n_pages, NKV) absmax scales
+    and the gather dequantizes before the softmax."""
     b, nkv, g, hd = q.shape
     n_pages, page_size = k_pool.shape[:2]
     p_max = page_table.shape[1]
     # gather chain tokens: (B, P_max, page, NKV, HD)
     k = k_pool[page_table]
     v = v_pool[page_table]
+    if k_scale is not None:
+        k = k.astype(jnp.float32) * k_scale[page_table][:, :, None, :, None]
+        v = v.astype(jnp.float32) * v_scale[page_table][:, :, None, :, None]
     pos = pool_pos[page_table]                       # (B, P_max, page)
     i = jnp.arange(page_size)
     visible = i[None, None, :] < page_valid[:, :, None]

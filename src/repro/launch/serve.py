@@ -99,9 +99,11 @@ def run_engine(args) -> None:
         radix_cache=not args.no_radix, plan_override=plan,
         speculative=args.speculative, drafter=args.drafter,
         draft_len=args.draft_len, trace=args.trace,
-        audit=args.audit_log)
+        audit=args.audit_log, prefill_chunk=args.prefill_chunk)
     if args.attention_backend:
         ecfg.attention_backend = args.attention_backend
+    if args.kv_dtype:
+        ecfg.kv_dtype = args.kv_dtype
     ecfg.kernel_interpret = not args.compiled_kernels
     eng = MedVerseEngine(params, cfg, tok, ecfg)
     metrics_srv = None
@@ -119,6 +121,8 @@ def run_engine(args) -> None:
           f"radix={ecfg.radix_cache} "
           f"attention={ecfg.attention_backend}"
           f"{'' if ecfg.kernel_interpret else ' (compiled)'}"
+          f" kv={ecfg.kv_dtype}"
+          f"{f' prefill_chunk={ecfg.prefill_chunk}' if ecfg.prefill_chunk else ''}"
           f"{spec_str} warmed buckets={buckets}")
     try:
         if args.continuous:
@@ -221,6 +225,20 @@ def main():
     ap.add_argument("--compiled-kernels", action="store_true",
                     help="engine mode: run Pallas kernels compiled "
                          "(Mosaic, real TPU) instead of interpret mode")
+    ap.add_argument("--kv-dtype", default=None,
+                    choices=["f32", "int8"],
+                    help="engine mode: KV page-pool storage dtype — "
+                         "int8 stores 1-byte K/V cells with per-page-"
+                         "per-head f32 absmax scales (4x fewer KV "
+                         "bytes, ~4x pages per byte budget, temp-0 "
+                         "output unchanged; default: $ENGINE_KV_DTYPE "
+                         "or f32)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="engine mode: ingest prompts longer than this "
+                         "many tokens in chunk-sized pieces interleaved "
+                         "with decode steps, so admitted requests never "
+                         "stall behind a long prompt (0 = monolithic "
+                         "prefill at admission)")
     ap.add_argument("--speculative", action="store_true",
                     help="engine mode: per-chain speculative decoding "
                          "(temp-0 output unchanged, fewer decode iters)")

@@ -203,21 +203,26 @@ class CostLedger:
         """One batched decode step.
 
         ``rows`` is the real (non-padding) batch: ``(rid, visible,
-        is_spec)`` per row, where ``visible`` is the KV length the row's
-        position mask exposes and ``is_spec`` marks speculative rows
-        (draft proposals and extra forced rows beyond the stream's
-        committed input). ``pages[i]`` is row i's distinct-page count.
-        Dense attends ``s_bucket`` wide for all ``max_slots`` batch rows
-        (padding rows included); pallas streams each real row's whole
-        page run and skips padding rows.
+        phase)`` per row, where ``visible`` is the KV length the row's
+        position mask exposes and ``phase`` attributes the row — a bool
+        (legacy: True marks speculative rows — draft proposals and extra
+        forced rows beyond the stream's committed input) or a phase
+        string; chunked prefill feeds prompt rows through the decode
+        step and attributes them ``"prefill"``. ``pages[i]`` is row i's
+        distinct-page count. Dense attends ``s_bucket`` wide for all
+        ``max_slots`` batch rows (padding rows included); pallas streams
+        each real row's whole page run and skips padding rows.
         """
         g = self.geom
         n = len(rows)
         pad_rows = g.max_slots - n
         spec_seen = False
-        for (rid, visible, is_spec), n_pages in zip(rows, pages):
-            phase = "spec_verify" if is_spec else "decode"
-            spec_seen = spec_seen or is_spec
+        for (rid, visible, flag), n_pages in zip(rows, pages):
+            if isinstance(flag, str):
+                phase = flag
+            else:
+                phase = "spec_verify" if flag else "decode"
+            spec_seen = spec_seen or phase == "spec_verify"
             computed = (g.n_layers * n_pages * g.page_size
                         if backend == "pallas"
                         else g.n_layers * s_bucket)

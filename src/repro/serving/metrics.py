@@ -29,6 +29,14 @@ class RequestMetrics:
     admit_step: int = -1
     first_token_step: int = -1
     done_step: int = -1
+    # compute clock (engine-lifetime attention FLOPs from the analytic
+    # cost ledger, snapshotted by the scheduler; -1 when cost accounting
+    # is off): deterministic like the step clock, but sensitive to
+    # head-of-line prefill stalls the step clock cannot see — a
+    # monolithic long-prompt prefill costs zero steps but all of its
+    # FLOPs land inside every concurrent request's TTFT window
+    arrival_flops: int = -1
+    first_token_flops: int = -1
     n_tokens: int = 0             # decoded tokens across all DAG streams
     n_drafted: int = 0            # of those, committed from accepted drafts
     n_preemptions: int = 0
@@ -73,6 +81,15 @@ class RequestMetrics:
         if self.first_token_step < 0 or self.arrival_step < 0:
             return -1
         return self.first_token_step - self.arrival_step
+
+    @property
+    def ttft_flops(self) -> float:
+        """Engine attention FLOPs spent between this request's arrival
+        and its first token — the deterministic TTFT that exposes
+        prefill head-of-line blocking (see the field comment)."""
+        if self.first_token_flops < 0 or self.arrival_flops < 0:
+            return NAN
+        return float(self.first_token_flops - self.arrival_flops)
 
     @property
     def tpot_s(self) -> float:
@@ -144,6 +161,10 @@ class ServingReport:
     # deterministic-clock TPOT (decode steps per token after the first);
     # mean/p50/p95/p99 like the wall-clock stats above
     tpot_steps: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # compute-clock TTFT (engine attention FLOPs between arrival and
+    # first token; NaN when cost accounting is off) — deterministic AND
+    # stall-sensitive, the tail metric chunked prefill improves
+    ttft_flops: Dict[str, float] = dataclasses.field(default_factory=dict)
     # verified serving (audit trail on; zero / NaN / empty otherwise):
     # requests whose AuditReport closed "verified", as a wall-clock rate
     # (verified_goodput, machine-dependent) and per deterministic decode
@@ -207,6 +228,7 @@ class ServingReport:
             spec_accepted=accepted,
             spec_acceptance=accepted / proposed if proposed > 0 else NAN,
             tpot_steps=_stats([m.tpot_steps for m in done]),
+            ttft_flops=_stats([m.ttft_flops for m in done]),
             n_verified=n_verified,
             verified_goodput=(n_verified / max(duration_s, 1e-9)
                               if dispositions else NAN),

@@ -97,6 +97,15 @@ class ContinuousScheduler:
             return 0.0
         return time.monotonic() - self._t0
 
+    def _flops_now(self) -> int:
+        """Engine-lifetime attention FLOPs — the deterministic compute
+        clock behind ``RequestMetrics.ttft_flops`` (machine-independent
+        like the step clock, but it advances through prefill work, so
+        head-of-line prompt stalls are visible). -1 when the engine runs
+        without cost accounting."""
+        c = self.engine.cost
+        return int(c.total("attn_flops")) if c is not None else -1
+
     # ------------------------------------------------------- submission ----
     def submit(self, req: ServeRequest) -> ServeRequest:
         """Register a request; it enters the queue at ``req.arrival``."""
@@ -111,6 +120,7 @@ class ContinuousScheduler:
             req.state = "queued"
             req.metrics.t_arrival_s = time.monotonic() - (self._t0 or 0.0)
             req.metrics.arrival_step = self.step_count
+            req.metrics.arrival_flops = self._flops_now()
             self.queue.push(req)
             if self.obs.enabled:
                 self.obs.instant("arrival", "serving",
@@ -161,6 +171,7 @@ class ContinuousScheduler:
             if m.first_token_step < 0:
                 m.first_token_step = self.step_count
                 m.t_first_token_s = time.monotonic() - (self._t0 or 0.0)
+                m.first_token_flops = self._flops_now()
             m.n_tokens += 1
             if ev.drafted:
                 m.n_drafted += 1

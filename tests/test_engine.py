@@ -78,8 +78,8 @@ def test_paged_decode_matches_dense(setup):
         ci = jnp.asarray(np.pad(chain.padded(s_max)[None],
                                 [(0, n_slots_batch - 1), (0, 0)]))
         cl = jnp.asarray(np.pad([chain.length], (0, n_slots_batch - 1)))
-        logits, pool["k"], pool["v"], pool["pos"] = paged_decode(
-            params, pool["k"], pool["v"], pool["pos"],
+        logits, pool["k"], pool["v"], pool["pos"], _, _ = paged_decode(
+            params, pool["k"], pool["v"], pool["pos"], None, None,
             tokens, qp, sl, ci, cl, CFG)
         np.testing.assert_allclose(
             np.asarray(logits[0]), np.asarray(full[0, i]),

@@ -1,0 +1,252 @@
+"""KV quantization tests: int8 page-pool round-trip and scale
+semantics, engine temp-0 parity against the f32 pool on both attention
+backends, exact 4x byte accounting, and the capacity side — the same
+byte budget buys ~4x the pages and strictly fewer preemptions under
+page pressure."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data.tokenizer import Tokenizer
+from repro.engine import EngineConfig, MedVerseEngine, PoolConfig
+from repro.engine.kvcache import (
+    init_pool,
+    pages_for_budget,
+    quant_write_span,
+)
+from repro.engine.paged_model import decode_attention_dense
+from repro.models import init_params
+from repro.serving import ContinuousScheduler, ServeRequest
+
+CFG = get_config("medverse-7b", smoke=True)
+
+DIAMOND = ("<Plan> "
+           "<Outline> Transient Step 1: q -> A ; Dependency: [] </Outline> "
+           "<Outline> Transient Step 2: q -> B ; Dependency: [] </Outline> "
+           "<Outline> Transient Step 3: A , B -> C ; Dependency: [1, 2] "
+           "</Outline> </Plan>")
+
+
+def make_tok():
+    corpus = ["alpha beta gamma delta epsilon zeta eta theta iota kappa "
+              "Transient Step 1: 2: 3: Dependency: [] [1] [2] [1, 2] "
+              "A -> B ; C D q x y z"]
+    return Tokenizer.train(corpus)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    tok = make_tok()
+    params = init_params(jax.random.PRNGKey(0), CFG)
+    return tok, params
+
+
+def make_engine(params, tok, **kw):
+    # kv_dtype pinned to f32 so the f32 side of every comparison stays
+    # f32 even on the ENGINE_KV_DTYPE=int8 CI leg; int8 tests override
+    base = dict(max_slots=4, page_size=4, n_pages=512, max_chain_len=256,
+                max_step_tokens=6, max_conclusion_tokens=6, kv_dtype="f32")
+    base.update(kw)
+    return MedVerseEngine(params, CFG, tok, EngineConfig(**base))
+
+
+# ------------------------------------------------------------- pool -------
+
+def _quant_pc(**kw):
+    base = dict(n_layers=2, n_pages=8, page_size=4, n_kv_heads=2,
+                head_dim=8, kv_dtype="int8")
+    base.update(kw)
+    return PoolConfig(**base)
+
+
+def test_pool_roundtrip_within_quant_error():
+    """Write f32 rows into the int8 pool and dequantize: every element
+    stays within the compounded quantization error. One bin is
+    absmax/127 per (layer, page, kv_head); a row quantized at write
+    time carries <= 0.5 bin, and every later same-page write that grows
+    the scale requantizes it in place for up to another 0.5 bin each —
+    at most page_size - 1 times."""
+    pc = _quant_pc()
+    pool = init_pool(pc)
+    rng = np.random.default_rng(0)
+    s = 10   # spans 3 pages, last one partial
+    kv_k = jnp.asarray(rng.normal(size=(pc.n_layers, s, pc.n_kv_heads,
+                                        pc.head_dim)), jnp.float32)
+    kv_v = jnp.asarray(rng.normal(size=kv_k.shape), jnp.float32)
+    slots = jnp.arange(s, dtype=jnp.int32)
+    pk, pv, ks, vs = quant_write_span(
+        pool["k"], pool["v"], pool["k_scale"], pool["v_scale"],
+        kv_k, kv_v, slots, pc.page_size)
+    pages = np.arange(s) // pc.page_size
+    deq_k = np.asarray(pk, np.float32)[:, :s] * np.asarray(
+        ks)[:, pages][:, :, :, None]
+    deq_v = np.asarray(pv, np.float32)[:, :s] * np.asarray(
+        vs)[:, pages][:, :, :, None]
+    bins = 0.5 * pc.page_size + 0.01   # write + up to S-1 requants
+    tol_k = np.asarray(ks)[:, pages][:, :, :, None] * bins + 1e-7
+    tol_v = np.asarray(vs)[:, pages][:, :, :, None] * bins + 1e-7
+    assert np.all(np.abs(deq_k - np.asarray(kv_k)) <= tol_k)
+    assert np.all(np.abs(deq_v - np.asarray(kv_v)) <= tol_v)
+
+
+def test_scale_grows_and_requantizes_in_place():
+    """A mid-page write with a larger absmax grows the page scale and
+    requantizes the rows already stored there — the earlier row stays
+    within the (coarser) new bin, and the scale never shrinks."""
+    pc = _quant_pc(n_layers=1)
+    pool = init_pool(pc)
+    small = np.full((1, 1, pc.n_kv_heads, pc.head_dim), 0.1, np.float32)
+    big = np.full((1, 1, pc.n_kv_heads, pc.head_dim), 10.0, np.float32)
+    pk, pv, ks, vs = quant_write_span(
+        pool["k"], pool["v"], pool["k_scale"], pool["v_scale"],
+        jnp.asarray(small), jnp.asarray(small),
+        jnp.asarray([0], jnp.int32), pc.page_size)
+    s0 = float(np.asarray(ks)[0, 0, 0])
+    assert s0 == pytest.approx(0.1 / 127.0)
+    pk, pv, ks, vs = quant_write_span(
+        pk, pv, ks, vs, jnp.asarray(big), jnp.asarray(big),
+        jnp.asarray([1], jnp.int32), pc.page_size)
+    s1 = float(np.asarray(ks)[0, 0, 0])
+    assert s1 == pytest.approx(10.0 / 127.0)
+    deq0 = np.asarray(pk, np.float32)[0, 0] * s1
+    assert np.all(np.abs(deq0 - 0.1) <= s1 * 0.51 + 1e-7)
+
+
+def test_offset_zero_write_resets_page_scale():
+    """Reusing a freed page (offset-0 write) must wipe the stale scale,
+    not max against it — otherwise one old outlier page would coarsen
+    every future resident forever."""
+    pc = _quant_pc(n_layers=1)
+    pool = init_pool(pc)
+    big = np.full((1, 1, pc.n_kv_heads, pc.head_dim), 10.0, np.float32)
+    small = np.full((1, 1, pc.n_kv_heads, pc.head_dim), 0.1, np.float32)
+    pk, pv, ks, vs = quant_write_span(
+        pool["k"], pool["v"], pool["k_scale"], pool["v_scale"],
+        jnp.asarray(big), jnp.asarray(big),
+        jnp.asarray([0], jnp.int32), pc.page_size)
+    pk, pv, ks, vs = quant_write_span(
+        pk, pv, ks, vs, jnp.asarray(small), jnp.asarray(small),
+        jnp.asarray([0], jnp.int32), pc.page_size)
+    assert float(np.asarray(ks)[0, 0, 0]) == pytest.approx(0.1 / 127.0)
+
+
+def test_dense_gather_dequant_matches_prescaled_pool():
+    """The dense backend's in-gather dequant (int8 * scale at the page
+    index) computes on exactly the values an f32 pool holding the
+    dequantized rows would — same attention output bit-for-bit."""
+    pc = _quant_pc(n_layers=1)
+    pool = init_pool(pc)
+    rng = np.random.default_rng(1)
+    s = 7
+    kv_k = jnp.asarray(rng.normal(size=(1, s, pc.n_kv_heads, pc.head_dim)),
+                       jnp.float32)
+    kv_v = jnp.asarray(rng.normal(size=kv_k.shape), jnp.float32)
+    slots = jnp.arange(s, dtype=jnp.int32)
+    pk, pv, ks, vs = quant_write_span(
+        pool["k"], pool["v"], pool["k_scale"], pool["v_scale"],
+        kv_k, kv_v, slots, pc.page_size)
+    pos = pool["pos"].at[:s].set(jnp.arange(s, dtype=jnp.int32))
+    q = jnp.asarray(rng.normal(size=(1, 1, 4, pc.head_dim)), jnp.float32)
+    ci = jnp.arange(8, dtype=jnp.int32)[None, :]
+    cl = jnp.asarray([s], jnp.int32)
+    qp = jnp.asarray([s - 1], jnp.int32)
+    out_q = decode_attention_dense(
+        q, pk[0], pv[0], pos, ci, cl, qp,
+        k_scale=ks[0], v_scale=vs[0], page_size=pc.page_size)
+    pages = jnp.arange(pc.n_slots) // pc.page_size
+    deq_k = pk[0].astype(jnp.float32) * ks[0][pages][:, :, None]
+    deq_v = pv[0].astype(jnp.float32) * vs[0][pages][:, :, None]
+    out_f = decode_attention_dense(q, deq_k, deq_v, pos, ci, cl, qp)
+    np.testing.assert_array_equal(np.asarray(out_q), np.asarray(out_f))
+
+
+# ----------------------------------------------------------- engine -------
+
+def test_kv_dtype_validated(setup):
+    tok, params = setup
+    with pytest.raises(ValueError, match="kv_dtype"):
+        make_engine(params, tok, kv_dtype="int4")
+
+
+@pytest.mark.parametrize("backend", ["dense", "pallas"])
+def test_temp0_parity_and_exact_byte_ratio(setup, backend):
+    """int8 KV pages must not change a single temp-0 token on either
+    backend, and the analytic KV byte counters must show exactly 4x
+    fewer bytes (1-byte cells vs 4-byte f32 — no slack anywhere)."""
+    tok, params = setup
+    prompts = ["alpha beta gamma delta q x",
+               "kappa iota theta eta zeta epsilon delta gamma beta q"]
+    e_f = make_engine(params, tok, attention_backend=backend)
+    e_q = make_engine(params, tok, attention_backend=backend,
+                      kv_dtype="int8")
+    r_f = e_f.generate(prompts, plans=[DIAMOND, DIAMOND])
+    r_q = e_q.generate(prompts, plans=[DIAMOND, DIAMOND])
+    assert [r.text for r in r_f] == [r.text for r in r_q]
+    assert e_f.total_iters == e_q.total_iters
+    for field in ("kv_write_bytes", "kv_read_bytes"):
+        f, q = e_f.cost.total(field), e_q.cost.total(field)
+        assert f > 0 and q * 4 == f, (field, q, f)
+
+
+def test_no_page_leak_int8(setup):
+    tok, params = setup
+    eng = make_engine(params, tok, kv_dtype="int8", radix_cache=False)
+    eng.generate(["alpha beta gamma q"], plans=[DIAMOND])
+    assert eng.alloc.used == 0
+    st = eng.alloc.stats()
+    assert st["allocs"] - st["frees"] == 0
+
+
+# --------------------------------------------------------- capacity -------
+
+def _probe_pc(page_size: int, kv_dtype: str) -> PoolConfig:
+    return PoolConfig(
+        n_layers=CFG.n_layers, n_pages=1, page_size=page_size,
+        n_kv_heads=CFG.n_kv_heads, head_dim=CFG.resolved_head_dim,
+        dtype=CFG.dtype, kv_dtype=kv_dtype)
+
+
+def test_byte_budget_buys_4x_pages(setup):
+    """`kv_pool_bytes` sizes the pool in bytes: int8 (plus its scale
+    rows) packs >= 3.5x the pages of f32 into the same budget, and the
+    engine's live pool reflects it."""
+    tok, params = setup
+    budget = 64 * _probe_pc(4, "f32").page_bytes
+    e_f = make_engine(params, tok, kv_pool_bytes=budget)
+    e_q = make_engine(params, tok, kv_pool_bytes=budget, kv_dtype="int8")
+    assert e_f.pc.n_pages == 64
+    assert e_q.pc.n_pages >= int(3.5 * e_f.pc.n_pages)
+    assert e_q.pc.n_pages == pages_for_budget(_probe_pc(4, "int8"), budget)
+
+
+def test_equal_budget_strictly_fewer_preemptions(setup):
+    """The pressure workload: a byte budget tight enough to force f32
+    out-of-pages preemptions. int8 buys ~4x the pages from the same
+    bytes and must preempt strictly less (the capacity claim of KV
+    quantization, end to end through scheduler re-admission)."""
+    tok, params = setup
+    # 40 f32 pages: tight enough that f32 preempts heavily (and finishes
+    # almost nothing), roomy enough that nobody is failed outright — at
+    # harsher budgets f32 requests can never fit even alone, the
+    # scheduler fails them, and the preemption comparison loses meaning.
+    budget = 40 * _probe_pc(4, "f32").page_bytes
+    prompt = "kappa iota theta eta zeta epsilon delta gamma beta alpha " * 4
+
+    def serve(kv_dtype):
+        eng = make_engine(params, tok, kv_pool_bytes=budget,
+                          kv_dtype=kv_dtype, max_slots=6)
+        sched = ContinuousScheduler(eng, policy="fcfs", clock="step")
+        reqs = [ServeRequest(prompt=prompt, plan=DIAMOND, arrival=0.0)
+                for _ in range(6)]
+        return sched.run(reqs)
+
+    rep_f = serve("f32")
+    rep_q = serve("int8")
+    assert rep_f.n_preemptions >= 1, "budget not tight enough to test"
+    assert rep_q.n_preemptions < rep_f.n_preemptions
+    assert rep_q.n_completed == 6

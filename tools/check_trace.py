@@ -28,7 +28,18 @@ traces ``MedVerseEngine.dump_trace`` / ``serve.py --trace`` /
   events reference a stream track the request actually ran and carry a
   stage/status from the closed vocabularies, and every audited request
   that finished (completed or aborted — not one that ended the trace
-  preempted) carries its final disposition exactly once.
+  preempted) carries its final disposition exactly once;
+* the header stamps the KV pool storage dtype (``meta.kv_dtype``, one
+  of ``f32``/``int8``) so a trace is attributable to its matrix leg;
+* chunked-prefill spans (``prefill_chunk`` X events, emitted when
+  ``EngineConfig.prefill_chunk`` > 0) are consistent per request:
+  within one ingestion episode the ``seq`` numbers are dense from 0,
+  the ``offset`` of each chunk continues exactly where the previous
+  one ended (starting at the radix-cached prefix length), the emission
+  steps strictly increase (chunks genuinely interleave with decode
+  steps), and for a request that closed normally the chunk rows sum to
+  the uncached prompt length. A preemption restarts ingestion (``seq``
+  resets to 0 on re-admission), which splits episodes.
 
 Standalone audit files (``medverse-audit/1`` JSONL, written by
 ``MedVerseEngine.dump_audit`` / ``serve.py --audit-log``) are detected
@@ -81,6 +92,11 @@ def check_events(header: dict, events: List[dict]) -> List[str]:
     meta = header.get("meta", {})
     n_pages: Optional[int] = meta.get("n_pages")
     warmup_step: Optional[int] = meta.get("warmup_step")
+    if meta.get("kv_dtype") not in ("f32", "int8"):
+        problems.append(
+            f"header meta.kv_dtype {meta.get('kv_dtype')!r} "
+            f"(want 'f32' or 'int8' — engine traces stamp the KV pool "
+            f"storage dtype)")
     open_spans: Dict[tuple, List[str]] = {}
     requests_seen = set()
     # audit cross-ref state: request spans currently open, the stream
@@ -95,6 +111,8 @@ def check_events(header: dict, events: List[dict]) -> List[str]:
     # per counter-series state: last step and (cost_* only) last values
     counter_step: Dict[str, int] = {}
     counter_vals: Dict[str, dict] = {}
+    # chunked-prefill ingestion spans per rid, in emission order
+    chunk_spans: Dict[int, List[Tuple[int, int, dict]]] = {}
     for i, ev in enumerate(events):
         where = f"event {i}"
         ph = ev.get("ph")
@@ -207,6 +225,10 @@ def check_events(header: dict, events: List[dict]) -> List[str]:
             else:
                 problems.append(
                     f"{where}: unknown audit event name {name!r}")
+        if (ph == "X" and name == "prefill_chunk"
+                and isinstance(rid, int) and isinstance(step, int)):
+            chunk_spans.setdefault(rid, []).append(
+                (i, step, ev.get("args", {})))
         page = ev.get("args", {}).get("page")
         if page is not None and n_pages is not None:
             if not (isinstance(page, int) and 0 <= page < n_pages):
@@ -247,6 +269,59 @@ def check_events(header: dict, events: List[dict]) -> List[str]:
             problems.append(
                 f"rid={rid} has audit decisions but no final "
                 f"disposition")
+    # chunked-prefill span consistency per request. A preemption
+    # restarts ingestion on re-admission (seq resets to 0), so the
+    # span list splits into episodes validated independently.
+    for rid, spans in sorted(chunk_spans.items()):
+        episodes: List[List[Tuple[int, int, dict]]] = []
+        for item in spans:
+            if item[2].get("seq") == 0 or not episodes:
+                episodes.append([])
+            episodes[-1].append(item)
+        for ep in episodes:
+            prev_step = None
+            expect_off = ep[0][2].get("n_cached")
+            for want_seq, (idx, step, args) in enumerate(ep):
+                where = f"event {idx}"
+                if args.get("seq") != want_seq:
+                    problems.append(
+                        f"{where}: prefill_chunk rid={rid} seq "
+                        f"{args.get('seq')!r} (want {want_seq} — chunk "
+                        f"sequence must be dense per ingestion episode)")
+                if args.get("offset") != expect_off:
+                    problems.append(
+                        f"{where}: prefill_chunk rid={rid} offset "
+                        f"{args.get('offset')!r} (want {expect_off} — "
+                        f"chunks must continue where the previous one "
+                        f"ended)")
+                n_rows = args.get("n_rows")
+                if not isinstance(n_rows, int) or n_rows < 1:
+                    problems.append(
+                        f"{where}: prefill_chunk rid={rid} bad n_rows "
+                        f"{n_rows!r}")
+                    n_rows = 0
+                if isinstance(args.get("offset"), int):
+                    expect_off = args["offset"] + n_rows
+                if prev_step is not None and step <= prev_step:
+                    problems.append(
+                        f"{where}: prefill_chunk rid={rid} at step "
+                        f"{step} not after the previous chunk's step "
+                        f"{prev_step} (chunks must interleave with "
+                        f"decode steps)")
+                prev_step = step
+        # a request that closed normally (its last request span ended
+        # without an abort/preempt reason) must have ingested exactly
+        # the uncached prompt suffix in its final episode
+        if rid not in requests_open and last_end_reason.get(rid) is None:
+            last = episodes[-1]
+            total = sum(a.get("n_rows") or 0 for _, _, a in last)
+            a0 = last[0][2]
+            want = (a0.get("n_prompt") or 0) - (a0.get("n_cached") or 0)
+            if total != want:
+                problems.append(
+                    f"rid={rid}: prefill_chunk rows sum to {total}, "
+                    f"want n_prompt - n_cached = {want} — a half-"
+                    f"ingested prompt leaked into a completed request")
     return problems
 
 
